@@ -1,0 +1,124 @@
+"""Fig. 8 analogue: failure-free replication overheads.
+
+Runs the NAS mini-apps + an LM train step under the paper's replication
+degrees {0, 6.25, 12.5, 25, 50, 100}% and reports per-iteration time vs
+the rdegree=0 baseline. Executed in a subprocess with fake CPU devices so
+the collectives are real (the overhead measured is the *structural* cost
+of the replica-aware protocol: extra group collectives + intercomm hops).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+PAPER_RDEGREES = [0.0, 0.0625, 0.125, 0.25, 0.5, 1.0]
+
+_CHILD = """
+import os, sys, time, json
+import jax, numpy as np, jax.numpy as jnp
+from repro.configs.base import ReplicationConfig, TrainConfig
+from repro.configs.registry import smoke_config
+from repro.core.replication import WorldState
+from repro.core import data_plane as DP
+from repro.launch.mesh import make_mesh
+from repro.models import model as M
+from repro.optim.adamw import adamw
+from repro.optim.schedules import constant
+from repro.dist.sharding import param_shardings
+from repro.data.pipeline import TokenPipeline
+from repro.apps.miniapps import MINIAPPS
+
+N_SLICES = 8
+REPS = int(os.environ.get("BENCH_REPS", "5"))
+mode = os.environ.get("BENCH_MODE", "paper")
+mesh = make_mesh(N_SLICES, 1)
+results = []
+
+def timeit(fn, *args, reps=REPS):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+for rdeg in %(degrees)s:
+    world = WorldState.create(N_SLICES, rdeg)
+    repl = ReplicationConfig(rdegree=rdeg, collective_mode=mode)
+    with jax.set_mesh(mesh):
+        # --- LM train step ---
+        cfg = smoke_config("qwen2.5-3b")
+        pipe = TokenPipeline(cfg, seq_len=64, per_slice_batch=2, seed=0)
+        params = M.init(jax.random.PRNGKey(0), cfg)
+        opt = adamw(constant(1e-3))
+        pshard = param_shardings(params, mesh, cfg)
+        params = jax.device_put(params, pshard)
+        opt_state = opt.init(params)
+        step = DP.build_train_step(cfg, TrainConfig(), repl, mesh, world, opt,
+                                   donate=False)
+        batch = jax.tree.map(jnp.asarray, pipe.global_batch(0, world))
+        t = timeit(lambda b: step(params, opt_state, b)[2]["loss"], batch)
+        results.append({"app": "lm_train", "rdegree": rdeg, "mode": mode,
+                        "n_comp": world.topo.n_comp, "sec": t})
+        # --- mini-apps ---
+        for name, make in MINIAPPS.items():
+            if name == "is" and world.topo.n_rep not in (0, world.topo.n_comp):
+                continue
+            fn, init, verify = make(mesh, world, repl)
+            x = jnp.asarray(init)
+            t = timeit(fn, x)
+            out = fn(x)
+            assert verify(out), name
+            results.append({"app": name, "rdegree": rdeg, "mode": mode,
+                            "n_comp": world.topo.n_comp, "sec": t})
+print("RESULTS_JSON:" + json.dumps(results))
+"""
+
+
+def run(degrees=None, mode: str = "paper", reps: int = 5):
+    degrees = degrees or PAPER_RDEGREES
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    env["BENCH_MODE"] = mode
+    env["BENCH_REPS"] = str(reps)
+    code = textwrap.dedent(_CHILD % {"degrees": degrees})
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env,
+        timeout=3000,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-3000:])
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULTS_JSON:")][0]
+    return json.loads(line[len("RESULTS_JSON:"):])
+
+
+def rows(results):
+    """CSV rows: app,rdegree,us_per_call,overhead_vs_r0_pct."""
+    base = {
+        r["app"]: r["sec"] for r in results if r["rdegree"] == 0.0
+    }
+    out = []
+    for r in results:
+        ov = (r["sec"] / base[r["app"]] - 1.0) * 100.0 if r["app"] in base else 0.0
+        out.append(
+            (f"failure_free/{r['app']}/r{r['rdegree']:g}/{r['mode']}",
+             r["sec"] * 1e6, f"overhead={ov:+.1f}%")
+        )
+    return out
+
+
+if __name__ == "__main__":
+    import sys as _s
+
+    res = run(mode=_s.argv[1] if len(_s.argv) > 1 else "paper")
+    for name, us, d in rows(res):
+        print(f"{name},{us:.0f},{d}")

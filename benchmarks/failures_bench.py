@@ -1,0 +1,80 @@
+"""Fig. 9(a) analogue: overheads under failures.
+
+SimCluster runs REAL train steps with Weibull-scheduled failure injections
+at several replication degrees, splitting total time into app time vs
+error-handler time (repair + mesh rebuild + re-lower + replay) - the
+paper's "most of the overheads ... are due to the error handler".
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+_CHILD = """
+import json, numpy as np
+from repro.configs.registry import smoke_config
+from repro.core.fault_injector import FaultInjector
+from repro.core.simulator import SimCluster
+
+STEPS = 14
+results = []
+for rdeg in [0.5, 1.0]:
+    for trial in range(2):
+        cfg = smoke_config("qwen2.5-3b")
+        sim = SimCluster(cfg, n_slices=8, model_shards=1, rdegree=rdeg,
+                         seq_len=32, checkpoint_dir=f"/tmp/ckpt_f{rdeg}_{trial}",
+                         checkpoint_every=4)
+        inj = FaultInjector(8, scale=6.0, shape=0.7, seed=trial)
+        events = inj.schedule(STEPS - 2, list(range(8)))
+        failures = {}
+        for t, victim in events[:3]:
+            failures.setdefault(int(t) + 1, []).append(victim)
+        rep = sim.run(STEPS, failures=failures)
+        results.append({
+            "rdegree": rdeg, "trial": trial,
+            "app_s": rep.app_seconds, "handler_s": rep.handler_seconds,
+            "failures": rep.failures, "promotes": rep.promotes,
+            "restarts": rep.restarts, "steps": rep.steps_completed,
+            "final_loss": rep.losses[-1] if rep.losses else float("nan"),
+        })
+print("RESULTS_JSON:" + json.dumps(results))
+"""
+
+
+def run():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_CHILD)],
+        capture_output=True, text=True, env=env, timeout=3000,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-3000:])
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULTS_JSON:")][0]
+    return json.loads(line[len("RESULTS_JSON:"):])
+
+
+def rows(results):
+    out = []
+    for r in results:
+        total = r["app_s"] + r["handler_s"]
+        out.append(
+            (
+                f"failures/r{r['rdegree']:g}/t{r['trial']}",
+                total / max(r["steps"], 1) * 1e6,
+                f"handler_frac={r['handler_s']/max(total,1e-9):.2f} "
+                f"promotes={r['promotes']} restarts={r['restarts']}",
+            )
+        )
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, d in rows(run()):
+        print(f"{name},{us:.0f},{d}")

@@ -1,0 +1,82 @@
+"""Recovery-cost benchmark: promote vs checkpoint/restart (the paper's
+core motivation - "replication allows for fast recovery ... by simply
+dropping the failed processes").
+
+Measures, with real state sizes on the simulated cluster:
+- promote path  : repair + communicator regen + re-lower (NO state motion)
+- restart path  : repair + restore from partner/durable checkpoint + replay
+- 3-phase clone : dynamic replica rebirth cost (state_transfer)
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+_CHILD = """
+import json, time, tempfile
+import jax, numpy as np
+from repro.configs.registry import smoke_config
+from repro.core.simulator import SimCluster
+from repro.core.state_transfer import HostState, clone_state
+
+results = []
+cfg = smoke_config("qwen2.5-3b")
+
+# promote path
+sim = SimCluster(cfg, n_slices=8, model_shards=1, rdegree=1.0, seq_len=32)
+sim.run(4, failures={2: [0]})
+results.append({"path": "promote", "handler_s": sim.report.handler_seconds,
+                "replayed": sim.report.replayed_steps})
+
+# restart path (no replicas -> partner-memory restore + replay)
+sim2 = SimCluster(cfg, n_slices=8, model_shards=1, rdegree=0.0, seq_len=32,
+                  checkpoint_dir=tempfile.mkdtemp(), checkpoint_every=2)
+sim2.run(6, failures={5: [3]})
+results.append({"path": "restart", "handler_s": sim2.report.handler_seconds,
+                "replayed": sim2.report.replayed_steps})
+
+# 3-phase clone (dynamic replica rebirth)
+p = sim.params_replica()
+o = jax.tree.map(np.asarray, sim.opt_state)
+host = HostState(step=4, rng_seed=0, data_cursor=4, collective_seq=4, generation=0)
+t0 = time.perf_counter()
+_, _, _, rep = clone_state(p, o, host)
+results.append({"path": "clone3phase", "handler_s": rep.total_seconds,
+                "bytes": rep.total_bytes, "verified": rep.verified,
+                "phases": rep.seconds_by_phase})
+print("RESULTS_JSON:" + json.dumps(results))
+"""
+
+
+def run():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_CHILD)],
+        capture_output=True, text=True, env=env, timeout=2000,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-3000:])
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULTS_JSON:")][0]
+    return json.loads(line[len("RESULTS_JSON:"):])
+
+
+def rows(results):
+    out = []
+    for r in results:
+        extra = f"replayed={r.get('replayed', 0)}"
+        if r["path"] == "clone3phase":
+            extra = f"bytes={r.get('bytes', 0)} verified={r.get('verified')}"
+        out.append((f"recovery/{r['path']}", r["handler_s"] * 1e6, extra))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, d in rows(run()):
+        print(f"{name},{us:.0f},{d}")

@@ -1,0 +1,109 @@
+"""Roofline report: reads the dry-run artifacts (runs/dryrun/*.json) and
+emits the per-(arch x shape x mesh) three-term table for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+def _default_dir() -> str:
+    root = os.path.join(os.path.dirname(__file__), "..", "runs")
+    final = os.path.join(root, "dryrun_final")
+    return final if os.path.isdir(final) else os.path.join(root, "dryrun")
+
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", _default_dir())
+
+
+def load(dryrun_dir: str = DRYRUN_DIR) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs: List[Dict], mesh: str = "pod_16x16") -> List[Dict]:
+    rows = []
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("skipped"):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "skipped": r["skip_reason"]})
+            continue
+        if not r.get("ok"):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "error": r.get("error", "?")})
+            continue
+        rf = r["roofline"]
+        rows.append(
+            {
+                "arch": r["arch"],
+                "shape": r["shape"],
+                "compute_s": rf["compute_s"],
+                "memory_s": rf["memory_s"],
+                "collective_s": rf["collective_s"],
+                "dominant": rf["dominant"],
+                "useful_flop_ratio": rf["useful_flop_ratio"],
+                "roofline_fraction": rf["roofline_fraction"],
+                "peak_gb": r["scanned"]["memory"].get("peak_memory_in_bytes", 0)
+                / 2**30,
+            }
+        )
+    return rows
+
+
+def rows(recs=None):
+    recs = recs or load()
+    out = []
+    for row in table(recs):
+        if "skipped" in row or "error" in row:
+            out.append(
+                (f"roofline/{row['arch']}/{row['shape']}", 0.0,
+                 row.get("skipped") or ("ERROR " + str(row.get("error"))[:60]))
+            )
+            continue
+        out.append(
+            (
+                f"roofline/{row['arch']}/{row['shape']}",
+                row["compute_s"] * 1e6,
+                f"dom={row['dominant'][:-2]} mem_s={row['memory_s']:.3f} "
+                f"coll_s={row['collective_s']:.3f} "
+                f"frac={row['roofline_fraction']:.3f}",
+            )
+        )
+    return out
+
+
+def markdown(recs=None, mesh: str = "pod_16x16") -> str:
+    recs = recs or load()
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | "
+        "dominant | useful FLOP ratio | roofline frac | peak GB/chip |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for row in table(recs, mesh):
+        if "skipped" in row:
+            lines.append(
+                f"| {row['arch']} | {row['shape']} | - | - | - | skipped | - | - | - |"
+            )
+            continue
+        if "error" in row:
+            lines.append(
+                f"| {row['arch']} | {row['shape']} | - | - | - | ERROR | - | - | - |"
+            )
+            continue
+        lines.append(
+            f"| {row['arch']} | {row['shape']} | {row['compute_s']:.4f} | "
+            f"{row['memory_s']:.4f} | {row['collective_s']:.4f} | "
+            f"{row['dominant'][:-2]} | {row['useful_flop_ratio']:.2f} | "
+            f"{row['roofline_fraction']:.3f} | {row['peak_gb']:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    for name, us, d in rows():
+        print(f"{name},{us:.0f},{d}")

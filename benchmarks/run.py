@@ -1,0 +1,57 @@
+"""Benchmark harness - one suite per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV:
+- failure_free : Fig. 8  (replication overheads, NAS mini-apps + LM)
+- mtti         : Fig. 9b (MTTI vs replication degree)
+- failures     : Fig. 9a (overheads under Weibull failures)
+- recovery     : Sec. I/VI claims (promote vs restart vs 3-phase clone)
+- roofline     : dry-run derived three-term roofline per (arch x shape)
+
+``python -m benchmarks.run [suite ...]`` - default: all.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or ["mtti", "recovery", "failure_free", "failures", "roofline"]
+    failures = 0
+    for suite in wanted:
+        try:
+            if suite == "failure_free":
+                from benchmarks import failure_free as m
+
+                rows = m.rows(m.run(reps=3))
+            elif suite == "mtti":
+                from benchmarks import mtti_bench as m
+
+                rows = m.rows(m.run(trials=400))
+            elif suite == "failures":
+                from benchmarks import failures_bench as m
+
+                rows = m.rows(m.run())
+            elif suite == "recovery":
+                from benchmarks import recovery_bench as m
+
+                rows = m.rows(m.run())
+            elif suite == "roofline":
+                from benchmarks import roofline as m
+
+                rows = m.rows()
+            else:
+                print(f"unknown suite {suite}", file=sys.stderr)
+                failures += 1
+                continue
+            for name, us, derived in rows:
+                print(f"{name},{us:.0f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{suite},0,SUITE-ERROR {type(e).__name__}: {e}", file=sys.stderr)
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: fault-tolerant replicated training in ~40 lines.
+
+Trains a tiny qwen2.5-family model on 4 mesh slices with 100% replication,
+kills a computational slice mid-run, and shows the replica being promoted
+with zero trajectory impact.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+if os.environ.get("_REPRO_REEXEC") != "1":
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["_REPRO_REEXEC"] = "1"
+    os.execv(sys.executable, [sys.executable] + sys.argv)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.registry import smoke_config
+from repro.core.simulator import SimCluster
+
+model = smoke_config("qwen2.5-3b")  # reduced same-family config for CPU
+
+cluster = SimCluster(
+    model,
+    n_slices=4,       # 4 model-parallel slices on the data axis
+    model_shards=2,   # 2-way tensor parallelism (GSPMD-managed)
+    rdegree=1.0,      # 100% replication: 2 computational + 2 replica slices
+    seq_len=64,
+)
+print(
+    f"world: {cluster.world.topo.n_comp} computational + "
+    f"{cluster.world.topo.n_rep} replica slices"
+)
+
+# kill physical slice 0 (a computational slice) before step 5
+report = cluster.run(10, failures={5: [0]})
+
+for i, loss in enumerate(report.losses):
+    print(f"step {i:2d}  loss {loss:.4f}")
+for ev in report.events:
+    print("EVENT:", ev)
+print(
+    f"\npromotes={report.promotes} restarts={report.restarts} "
+    f"error-handler={report.handler_seconds:.2f}s "
+    f"(vs app {report.app_seconds:.2f}s)"
+)
+assert report.promotes == 1 and report.restarts == 0
+print("recovered via replica promotion - no checkpoint restore needed")

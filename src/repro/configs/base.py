@@ -1,0 +1,329 @@
+"""Configuration system for PartRePer-JAX.
+
+Every architecture in the assigned pool is expressed as a ``ModelConfig``;
+every dry-run / benchmark cell is a ``ModelConfig`` x ``ShapeConfig`` pair;
+the paper's technique is configured by ``ReplicationConfig``.
+
+Configs are frozen dataclasses so they can be closed over by jitted
+functions and hashed as static arguments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec", "vlm")
+ATTN_PATTERNS = ("full", "sliding", "local_global")
+MLP_KINDS = ("swiglu", "squared_relu", "gelu")
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 (SSD) block configuration."""
+
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    d_conv: int = 4
+    chunk: int = 256  # SSD chunk length
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts FFN configuration (GShard-style capacity dispatch)."""
+
+    n_experts: int = 8
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    # 'expert': experts sharded over the model axis (EP, all_to_all dispatch)
+    # 'tensor': every device holds all experts, d_ff sharded (TP, no a2a)
+    sharding: str = "expert"
+    router_aux_coef: float = 0.01
+    # GShard-style dispatch groups: tokens are split into groups of this
+    # size with per-group capacity. Without grouping the dispatch one-hot
+    # einsum is O(T^2 k E / E) in tokens (C grows with T) - the dominant
+    # compute term at 4k+ sequence lengths (see EXPERIMENTS.md Perf-1).
+    group_size: int = 1024
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # one of FAMILIES
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+
+    # attention
+    attn_pattern: str = "full"
+    window: int = 4096  # sliding-window size when pattern uses windows
+    local_global_ratio: int = 0  # gemma3: N local layers per 1 global layer
+    qkv_bias: bool = False
+    attn_logit_softcap: float = 0.0
+
+    # mlp
+    mlp: str = "swiglu"
+
+    # moe / ssm
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+
+    # hybrid (hymba): fraction of head dim given to SSM path per layer,
+    # plus a handful of full-attention ("global") layers.
+    hybrid_global_layers: Tuple[int, ...] = ()
+
+    # enc-dec
+    enc_layers: int = 0  # >0 => encoder-decoder; n_layers counts decoder layers
+
+    # vlm / audio frontends are STUBS per assignment: input_specs() provides
+    # precomputed patch/frame embeddings of this many positions.
+    n_prefix_embeds: int = 0
+
+    # embeddings / misc
+    rope_theta: float = 10_000.0
+    mrope: bool = False  # qwen2-vl multimodal rope
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-5
+    # parallel residual (command-r style: attn and mlp from the same norm)
+    parallel_block: bool = False
+
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+
+    # activation checkpointing policy: 'none' | 'block' (remat each layer)
+    remat: str = "block"
+    # scan-over-layers (compact HLO; XLA cost_analysis counts the body once).
+    # False unrolls the stacks - used by the roofline depth-variant pass.
+    scan_layers: bool = True
+
+    def __post_init__(self):
+        assert self.family in FAMILIES, self.family
+        assert self.attn_pattern in ATTN_PATTERNS, self.attn_pattern
+        assert self.mlp in MLP_KINDS, self.mlp
+        if self.head_dim == 0 and self.n_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    # ---- derived quantities -------------------------------------------------
+    def padded_vocab(self, multiple: int = 256) -> int:
+        """Vocab padded for clean sharding over the model axis (every
+        production framework does this; labels never reference the pad)."""
+        return -(-self.vocab_size // multiple) * multiple
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Whether the arch supports long (500k) contexts without a full
+        quadratic / full-length global KV dominating: SSM, hybrid-SWA and
+        sliding-window archs qualify; local_global (gemma3) qualifies because
+        5/6 of the layers hold only window-sized caches."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.attn_pattern in ("sliding", "local_global")
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # no encoder-only archs in the assigned pool
+
+    def is_global_layer(self, layer_idx: int) -> bool:
+        """local_global pattern: 1 global layer per (ratio+1) layers."""
+        if self.attn_pattern != "local_global":
+            return self.attn_pattern == "full"
+        return (layer_idx + 1) % (self.local_global_ratio + 1) == 0
+
+    def param_count(self) -> int:
+        """Total parameter count (embedding + blocks), exact per family."""
+        d, f, v, L = self.d_model, self.d_ff, self.vocab_size, self.n_layers
+        hd = self.head_dim
+        q = self.n_heads * hd
+        kv = self.n_kv_heads * hd
+        emb = v * d if self.tie_embeddings else 2 * v * d
+
+        def attn_params() -> int:
+            p = d * q + 2 * d * kv + q * d  # wq, wk, wv, wo
+            if self.qkv_bias:
+                p += q + 2 * kv
+            return p
+
+        def mlp_params(dff: int) -> int:
+            if self.mlp == "swiglu":
+                return 3 * d * dff
+            return 2 * d * dff  # up + down
+
+        def ssm_params() -> int:
+            assert self.ssm is not None
+            di = self.ssm.d_inner(d)
+            nh = self.ssm.n_heads(d)
+            # in_proj: z, x, B, C, dt ; out_proj ; conv ; A, D, dt_bias
+            in_p = d * (2 * di + 2 * self.ssm.d_state + nh)
+            out_p = di * d
+            conv = (di + 2 * self.ssm.d_state) * self.ssm.d_conv
+            return in_p + out_p + conv + 3 * nh
+
+        per_layer = 2 * d  # two RMSNorm scales
+        if self.family == "ssm":
+            per_layer += ssm_params()
+        elif self.family == "hybrid":
+            per_layer += attn_params() + mlp_params(f) + ssm_params()
+        elif self.family == "moe":
+            assert self.moe is not None
+            per_layer += attn_params()
+            per_layer += d * self.moe.n_experts  # router
+            per_layer += self.moe.n_experts * mlp_params(f)
+        else:
+            per_layer += attn_params() + mlp_params(f)
+
+        total = emb + L * per_layer + d  # final norm
+        if self.enc_layers:
+            enc_layer = 2 * d + attn_params() + mlp_params(f)
+            # decoder layers also carry cross-attention + its norm
+            total += self.enc_layers * enc_layer + L * (attn_params() + d)
+        return total
+
+    def active_param_count(self) -> int:
+        """Active (per-token) parameters - differs for MoE."""
+        if self.family != "moe" or self.moe is None:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        inactive_experts = self.moe.n_experts - self.moe.top_k
+        per_expert = 3 * d * f if self.mlp == "swiglu" else 2 * d * f
+        return self.param_count() - self.n_layers * inactive_experts * per_expert
+
+
+# ---------------------------------------------------------------------------
+# Input-shape configuration (the assigned shape set)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+    @property
+    def lowers_serve_step(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(model: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether a (arch x shape) cell is runnable, with a reason when not."""
+    if shape.name == "long_500k" and not model.sub_quadratic:
+        return False, "long_500k skipped: pure full-attention architecture"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Replication (the paper's knob) + run configuration
+# ---------------------------------------------------------------------------
+
+# Paper's replication degrees (Fig. 8): percent of computational slices
+# that have replicas.
+PAPER_RDEGREES = (0.0, 0.0625, 0.125, 0.25, 0.5, 1.0)
+
+
+@dataclass(frozen=True)
+class ReplicationConfig:
+    """Partial replication of mesh data-slices (PartRePer-MPI Sec. V)."""
+
+    rdegree: float = 0.0  # fraction of computational slices with replicas
+    # paper-faithful: group-psum on COMM_CMP + ppermute intercomm to REP.
+    # fused: single masked all-reduce over the whole data axis (beyond-paper).
+    # branch: replicas contribute grad/k inside the all-reduce (beyond-paper).
+    collective_mode: str = "paper"  # 'paper' | 'fused' | 'branch'
+    # SDC detection: replicas cross-check a gradient checksum (RedMPI-style)
+    sdc_check: bool = False
+    # compress the cmp->rep intercomm payload (beyond-paper)
+    intercomm_compression: str = "none"  # 'none' | 'bf16' | 'int8'
+    # dtype of the gradient all-reduce on the data plane (beyond-paper:
+    # halves collective + memory traffic of the reduction; optimizer still
+    # accumulates in fp32)
+    grad_reduce_dtype: str = "float32"  # 'float32' | 'bfloat16'
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    seed: int = 0
+    steps: int = 100
+    learning_rate: float = 3e-4
+    warmup_steps: int = 10
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    microbatches: int = 1  # gradient accumulation
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    checkpoint_every: int = 0  # 0 = off
+    checkpoint_dir: str = ""
+    log_every: int = 10
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    data: int = 16
+    model: int = 16
+    pods: int = 1  # >1 adds the leading "pod" axis
+
+    @property
+    def n_slices(self) -> int:
+        """Model-parallel slices = product of (pod, data)."""
+        return self.pods * self.data
+
+    @property
+    def n_devices(self) -> int:
+        return self.pods * self.data * self.model
+
+
+def reduced(model: ModelConfig, **overrides) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    changes = dict(
+        n_layers=4 if model.attn_pattern == "local_global" else 2,
+        local_global_ratio=1 if model.attn_pattern == "local_global" else 0,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=max(1, min(model.n_kv_heads, 2)),
+        head_dim=16,
+        d_ff=128 if model.d_ff else 0,
+        vocab_size=256,
+        window=32,
+        remat="none",
+        n_prefix_embeds=8 if model.n_prefix_embeds else 0,
+        enc_layers=2 if model.enc_layers else 0,
+    )
+    if model.moe is not None:
+        changes["moe"] = dataclasses.replace(model.moe, n_experts=4, top_k=2)
+    if model.ssm is not None:
+        changes["ssm"] = dataclasses.replace(
+            model.ssm, d_state=16, head_dim=16, chunk=16
+        )
+    if model.hybrid_global_layers:
+        changes["hybrid_global_layers"] = (1,)
+    changes.update(overrides)
+    return dataclasses.replace(model, name=model.name + "-smoke", **changes)

@@ -1,0 +1,29 @@
+"""gemma3-12b [dense] — 5:1 local:global attention, 128k context.
+
+48L d_model=3840 16H (GQA kv=8) d_ff=15360 vocab=262144
+[hf:google/gemma-3-1b-pt; unverified]
+
+Gemma-3 uses head_dim=256 (decoupled from d_model/n_heads) and interleaves
+five sliding-window (1024) layers per global layer, which is what makes the
+long_500k cell sub-quadratic in cache footprint.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-12b",
+    family="dense",
+    n_layers=48,
+    d_model=3840,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=256,
+    d_ff=15360,
+    vocab_size=262144,
+    attn_pattern="local_global",
+    local_global_ratio=5,  # 5 local : 1 global
+    window=1024,
+    mlp="swiglu",
+    attn_logit_softcap=0.0,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+)

@@ -1,0 +1,30 @@
+"""hymba-1.5b [hybrid] — parallel attention + mamba heads in each block.
+
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001, ssm_state=16
+[arXiv:2411.13676; hf]
+
+Each block runs an attention path and an SSM path in parallel on the same
+input and mean-fuses their (normalised) outputs. Most attention layers use
+a sliding window; a few are global (first/middle/last) - which keeps the
+long-context cache footprint small -> long_500k runs.
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    attn_pattern="sliding",
+    window=1024,
+    hybrid_global_layers=(0, 15, 31),  # full-attention layers
+    mlp="swiglu",
+    ssm=SSMConfig(d_state=16, head_dim=64, expand=2, chunk=256),
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+)

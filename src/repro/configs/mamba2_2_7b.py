@@ -1,0 +1,23 @@
+"""mamba2-2.7b [ssm] — SSD (state-space duality), attention-free.
+
+64L d_model=2560 (attn-free) d_ff=0 vocab=50280, ssm_state=128
+[arXiv:2405.21060; unverified]
+
+d_inner = 2*d_model = 5120, head_dim 64 -> 80 SSD heads per layer.
+Decode state is O(heads * head_dim * d_state) per layer - long_500k runs.
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    n_layers=64,
+    d_model=2560,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    head_dim=1,  # unused for ssm
+    ssm=SSMConfig(d_state=128, head_dim=64, expand=2, chunk=64),
+    tie_embeddings=True,
+)

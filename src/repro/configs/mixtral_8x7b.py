@@ -1,0 +1,29 @@
+"""mixtral-8x7b [moe] — 8 experts top-2, sliding-window attention.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000, MoE 8e top-2
+[arXiv:2401.04088; hf]
+
+The assignment specifies SWA (window 4096), which makes long_500k
+sub-quadratic in cache footprint. 8 experts < 16-way model axis, so the
+experts use tensor sharding (d_ff over the model axis, no all_to_all);
+see DESIGN.md for the trade-off vs expert-parallel.
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32000,
+    attn_pattern="sliding",
+    window=4096,
+    mlp="swiglu",
+    moe=MoEConfig(n_experts=8, top_k=2, sharding="tensor"),
+    rope_theta=1_000_000.0,
+    tie_embeddings=False,
+)

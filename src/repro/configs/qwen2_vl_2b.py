@@ -1,0 +1,30 @@
+"""qwen2-vl-2b [vlm] — M-RoPE, dynamic resolution (frontend stubbed).
+
+28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936
+[arXiv:2409.12191; hf]
+
+Per assignment the vision frontend is a STUB: ``input_specs()`` provides
+precomputed patch embeddings (n_prefix_embeds positions) which the backbone
+consumes ahead of the text tokens. M-RoPE splits the rotary dim into
+temporal/height/width sections with separate position ids.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab_size=151936,
+    attn_pattern="full",
+    qkv_bias=True,
+    mlp="swiglu",
+    mrope=True,
+    n_prefix_embeds=256,  # precomputed vision patch embeddings per sample
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+)

@@ -1,0 +1,72 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, shape_applicable, reduced
+
+from repro.configs.command_r_35b import CONFIG as _command_r
+from repro.configs.gemma3_12b import CONFIG as _gemma3
+from repro.configs.qwen2_5_3b import CONFIG as _qwen25
+from repro.configs.nemotron_4_15b import CONFIG as _nemotron
+from repro.configs.qwen2_vl_2b import CONFIG as _qwen2vl
+from repro.configs.phi3_5_moe_42b import CONFIG as _phi35
+from repro.configs.mixtral_8x7b import CONFIG as _mixtral
+from repro.configs.mamba2_2_7b import CONFIG as _mamba2
+from repro.configs.hymba_1_5b import CONFIG as _hymba
+from repro.configs.seamless_m4t_medium import CONFIG as _seamless
+
+ARCHS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in (
+        _command_r,
+        _gemma3,
+        _qwen25,
+        _nemotron,
+        _qwen2vl,
+        _phi35,
+        _mixtral,
+        _mamba2,
+        _hymba,
+        _seamless,
+    )
+}
+
+# short aliases accepted by --arch
+ALIASES = {
+    "command-r": "command-r-35b",
+    "gemma3": "gemma3-12b",
+    "qwen2.5": "qwen2.5-3b",
+    "nemotron": "nemotron-4-15b",
+    "qwen2-vl": "qwen2-vl-2b",
+    "phi3.5-moe": "phi3.5-moe-42b-a6.6b",
+    "mixtral": "mixtral-8x7b",
+    "mamba2": "mamba2-2.7b",
+    "hymba": "hymba-1.5b",
+    "seamless": "seamless-m4t-medium",
+}
+
+
+def get_arch(name: str) -> ModelConfig:
+    name = ALIASES.get(name, name)
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def all_cells():
+    """Every (arch, shape) cell with its applicability verdict."""
+    for arch in ARCHS.values():
+        for shape in SHAPES.values():
+            ok, reason = shape_applicable(arch, shape)
+            yield arch, shape, ok, reason
+
+
+def smoke_config(name: str) -> ModelConfig:
+    return reduced(get_arch(name))

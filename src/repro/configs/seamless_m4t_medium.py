@@ -1,0 +1,30 @@
+"""seamless-m4t-medium [audio] — encoder-decoder, multimodal (frontend stubbed).
+
+12L d_model=1024 16H (GQA kv=16, i.e. MHA) d_ff=4096 vocab=256206
+[arXiv:2308.11596; hf]
+
+Per assignment the speech frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings for the encoder. 12 encoder + 12 decoder
+layers; decoder layers add cross-attention over encoder output. For decode
+shapes, the decoder self-attention cache is seq_len long and the encoder
+context is capped at 4096 frames (see DESIGN.md).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="encdec",
+    n_layers=12,  # decoder layers
+    enc_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=256206,
+    attn_pattern="full",
+    mlp="gelu",
+    n_prefix_embeds=0,  # encoder input is entirely precomputed frames
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+)

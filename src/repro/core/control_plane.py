@@ -1,0 +1,133 @@
+"""Control plane - the ULFM analogue (paper Secs. III-B, IV, VI-A).
+
+PartRePer-MPI keeps failure detection/propagation/recovery in Open MPI +
+ULFM while the data plane runs on the native library. Here the control
+plane is a host-side service that NEVER touches the compiled XLA program:
+
+- ``heartbeat(slice)``      <- PRTE daemon liveness tracking
+- ``report_failure(slice)`` <- SIGCHLD/ptrace detection path
+- ``detect()``              <- MPI_Comm_failure_get_ack
+- ``revoke()``              <- MPI_Comm_revoke: bumps the world generation;
+  every host dispatch loop compares its generation before dispatching the
+  next step and enters the error handler on mismatch (error propagation)
+- ``agree()``               <- the shrink-time agreement on the failed set
+
+In a multi-controller deployment this runs over an out-of-band transport
+(etcd/TCP heartbeats); the in-process implementation below is used by the
+simulator and tests, with identical semantics and thread-safety.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set
+
+
+class CommunicatorRevoked(Exception):
+    """Raised by dispatch guards when the world generation moved (the
+    MPI_ERR_REVOKED analogue)."""
+
+    def __init__(self, generation: int):
+        super().__init__(f"world revoked at generation {generation}")
+        self.generation = generation
+
+
+class ProcessFailed(Exception):
+    """MPI_ERR_PROC_FAILED analogue: a peer died mid-operation."""
+
+    def __init__(self, failed: Set[int]):
+        super().__init__(f"slices failed: {sorted(failed)}")
+        self.failed = set(failed)
+
+
+@dataclass
+class ControlPlane:
+    heartbeat_timeout: float = 5.0
+    clock: Callable[[], float] = time.monotonic
+
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+    _last_beat: Dict[int, float] = field(default_factory=dict, repr=False)
+    _reported: Set[int] = field(default_factory=set, repr=False)
+    _acked: Set[int] = field(default_factory=set, repr=False)
+    _generation: int = 0
+    _revoked: bool = False
+
+    # ---- liveness ----------------------------------------------------------
+    def register(self, slice_id: int) -> None:
+        with self._lock:
+            self._last_beat[slice_id] = self.clock()
+
+    def heartbeat(self, slice_id: int) -> None:
+        with self._lock:
+            self._last_beat[slice_id] = self.clock()
+
+    def report_failure(self, slice_id: int) -> None:
+        """Direct failure report (the SIGCHLD/ptrace path - e.g. a device
+        error surfaced by the runtime, or the fault injector)."""
+        with self._lock:
+            self._reported.add(slice_id)
+
+    def detect(self) -> Set[int]:
+        """Failed = explicitly reported + heartbeat-expired."""
+        now = self.clock()
+        with self._lock:
+            expired = {
+                s
+                for s, t in self._last_beat.items()
+                if now - t > self.heartbeat_timeout
+            }
+            return set(self._reported) | expired
+
+    # ---- ULFM protocol -----------------------------------------------------
+    @property
+    def generation(self) -> int:
+        with self._lock:
+            return self._generation
+
+    def is_revoked(self) -> bool:
+        with self._lock:
+            return self._revoked
+
+    def revoke(self) -> int:
+        """MPI_Comm_revoke: propagate the failure to every dispatch loop."""
+        with self._lock:
+            if not self._revoked:
+                self._revoked = True
+                self._generation += 1
+            return self._generation
+
+    def failure_ack(self) -> Set[int]:
+        """MPI_Comm_failure_ack + get_ack: snapshot the failed set."""
+        with self._lock:
+            self._acked = set(self._reported)
+            return set(self._acked)
+
+    def agree(self) -> Set[int]:
+        """Agreement on the failed set at shrink time. Single-controller:
+        the snapshot is the consensus; multi-controller implementations
+        intersect per-host views here."""
+        failed = self.detect()
+        with self._lock:
+            self._reported |= failed
+            return set(self._reported)
+
+    def shrink_complete(self, recovered: Set[int]) -> None:
+        """Called by the error handler once the world is repaired: clears the
+        revocation so dispatch resumes at the new generation."""
+        with self._lock:
+            self._reported -= recovered
+            for s in recovered:
+                self._last_beat.pop(s, None)
+            self._revoked = False
+
+    # ---- dispatch guard ------------------------------------------------------
+    def check(self, my_generation: int) -> None:
+        """Fast-path guard the host loop calls before dispatching a step
+        (the analogue of interleaving EMPI_Test with failure checks in the
+        paper's Fig. 7 loop - but host-side, off the XLA hot path)."""
+        with self._lock:
+            if self._revoked or self._generation != my_generation:
+                raise CommunicatorRevoked(self._generation)
+            if self._reported:
+                raise ProcessFailed(set(self._reported))

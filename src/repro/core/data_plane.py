@@ -1,0 +1,334 @@
+"""Data plane: replica-aware train / serve steps (paper Secs. V-B, V-C).
+
+The division of labour mirrors PartRePer-MPI exactly:
+
+- the *data plane* (this module) is the native-MPI analogue - every hot-path
+  byte moves through XLA collectives over ICI, compiled once, with NO
+  failure-awareness inside the compiled program;
+- the *control plane* (core/control_plane.py) is the ULFM analogue - it
+  detects failures host-side and bumps the world generation, upon which the
+  host dispatch loop stops calling this step and enters the error handler.
+
+The step is a ``shard_map`` whose manual axes are the flattened
+(pod, data) slice space; the 'model' axis remains a GSPMD auto axis so
+tensor/expert parallelism inside the model uses XLA's tuned collectives.
+
+Collective modes for the gradient reduction (ReplicationConfig):
+
+- ``paper``  : faithful reproduction - ``psum`` over COMM_CMP groups
+  (replicas form an inert concurrent group), then ``ppermute`` over
+  CMP_REP_INTERCOMM forwards the reduced gradient to replicas
+  ("collectives on computational processes, results sent to replicas").
+- ``fused``  : beyond-paper - one all-reduce over the whole axis with
+  replica contributions zeroed; replicas receive the result inside the
+  same collective (no intercomm hop).
+- ``branch`` : beyond-paper - mirrored pairs contribute grad/2 each, so
+  replicas act as an extra branch of the reduction tree (valid because
+  mirrored gradients are bit-identical).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ReplicationConfig, TrainConfig
+from repro.core.replication import WorldState
+from repro.models import model as M
+from repro.optim import compression
+from repro.optim.adamw import Optimizer
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# mesh helpers
+# ---------------------------------------------------------------------------
+
+
+def manual_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def n_slices(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in manual_axes(mesh)]))
+
+
+def _flat_slice_index(axes: Tuple[str, ...], mesh: Mesh):
+    idx = jnp.zeros((), jnp.int32)
+    for a in axes:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def _tree_where(pred, a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def _tree_scale(tree: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * s), tree)
+
+
+def _tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+# ---------------------------------------------------------------------------
+# gradient reduction - the paper's communicator protocol
+# ---------------------------------------------------------------------------
+
+
+def reduce_gradients(grads: PyTree, *, axes: Tuple[str, ...], mesh: Mesh,
+                     world: WorldState, repl: ReplicationConfig) -> PyTree:
+    """Replica-aware gradient reduction. Returns the summed gradient over
+    computational slices, available on EVERY slice (cmp and rep)."""
+    topo = world.topo
+    idx = _flat_slice_index(axes, mesh)
+    roles = world.roles_in_mesh_order()
+    is_rep_by_pos = np.asarray(
+        [topo.is_rep_mask()[r] for r in roles], dtype=np.float32
+    )
+    is_rep = jnp.asarray(is_rep_by_pos)[idx]
+
+    if repl.grad_reduce_dtype == "bfloat16":
+        # beyond-paper: reduce in bf16 (identical on every slice, so the
+        # replica-mirror invariant is preserved bit-for-bit)
+        grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+    if topo.n_rep == 0 or repl.collective_mode == "fused":
+        # single masked all-reduce over the whole (pod, data) space
+        g = jax.tree.map(
+            lambda x: jax.lax.psum(x * (1.0 - is_rep).astype(x.dtype), axes),
+            grads,
+        )
+        return g
+
+    if repl.collective_mode == "branch":
+        has_partner = np.zeros(len(roles), dtype=np.float32)
+        for c in topo.replica_map:
+            has_partner[roles.index(c)] = 1.0
+        hp = jnp.asarray(has_partner)[idx]
+        w = jnp.where(is_rep > 0, 0.5, jnp.where(hp > 0, 0.5, 1.0))
+        return jax.tree.map(
+            lambda x: jax.lax.psum(x * w.astype(x.dtype), axes), grads
+        )
+
+    # --- paper-faithful: COMM_CMP group psum + CMP_REP_INTERCOMM ppermute ---
+    cmp_groups = world.physical_groups(topo.comm_cmp_groups())
+    intercomm = world.physical_perm(topo.intercomm_perm())
+    g = jax.tree.map(
+        lambda x: jax.lax.psum(x, axes, axis_index_groups=cmp_groups),
+        grads,
+    )
+    # forward to replicas, optionally compressed (beyond-paper): both sides
+    # consume decode(encode(g)) so mirrored state stays bit-identical.
+    enc = compression.encode_tree(g, repl.intercomm_compression)
+    g_local = compression.decode_tree(enc, repl.intercomm_compression, g)
+    enc_rep = jax.tree.map(lambda x: jax.lax.ppermute(x, axes, intercomm), enc)
+    g_rep = compression.decode_tree(enc_rep, repl.intercomm_compression, g)
+    return _tree_where(is_rep > 0, g_rep, g_local)
+
+
+def sdc_check(grads: PyTree, *, axes, mesh, world: WorldState):
+    """RedMPI-style silent-data-corruption cross-check: mirrored pairs
+    compare a gradient checksum; returns the summed |pair difference|."""
+    topo = world.topo
+    idx = _flat_slice_index(axes, mesh)
+    roles = world.roles_in_mesh_order()
+    sign_by_pos = np.asarray(
+        [-1.0 if topo.is_rep_mask()[r] else 1.0 for r in roles], dtype=np.float32
+    )
+    paired = np.zeros(len(roles), dtype=np.float32)
+    for j, c in enumerate(topo.replica_map):
+        paired[roles.index(c)] = 1.0
+        paired[roles.index(topo.n_comp + j)] = 1.0
+    sign = jnp.asarray(sign_by_pos)[idx] * jnp.asarray(paired)[idx]
+    checksum = sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)
+    )
+    pair_groups = world.physical_groups(topo.pair_groups())
+    diff = jax.lax.psum(checksum * sign, axes, axis_index_groups=pair_groups)
+    return jax.lax.psum(jnp.abs(diff), axes) / 2.0
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(
+    model_cfg: ModelConfig,
+    train_cfg: TrainConfig,
+    repl: ReplicationConfig,
+    mesh: Mesh,
+    world: WorldState,
+    optimizer: Optimizer,
+    *,
+    impl: str = "chunked",
+    donate: bool = True,
+) -> Callable:
+    """Returns jitted ``step(params, opt_state, batch) -> (params, opt_state,
+    metrics)``.
+
+    ``batch`` arrays carry a leading global dim of n_live * per_slice; the
+    host data pipeline lays shards out in mesh order with replica slices
+    receiving a copy of their partner's shard (paper: replicas run the same
+    ops on the same inputs).
+    """
+    axes = manual_axes(mesh)
+    topo = world.topo
+    inv_ncomp = 1.0 / topo.n_comp
+
+    def per_slice(params, opt_state, batch):
+        def loss_of(p, b):
+            return M.loss_fn(p, b, model_cfg, impl=impl)
+
+        if train_cfg.microbatches > 1:
+            mb = train_cfg.microbatches
+
+            def mb_body(acc, b):
+                (l, m), g = jax.value_and_grad(loss_of, has_aux=True)(params, b)
+                return _tree_add(acc, g), (l, m["ce"])
+
+            split = jax.tree.map(
+                lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]), batch
+            )
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, ces) = jax.lax.scan(mb_body, zeros, split)
+            grads = _tree_scale(grads, 1.0 / mb)
+            loss, ce = jnp.mean(losses), jnp.mean(ces)
+        else:
+            (loss, m), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params, batch
+            )
+            ce = m["ce"]
+
+        metrics: Dict[str, jnp.ndarray] = {}
+        if repl.sdc_check and topo.n_rep:
+            metrics["sdc"] = sdc_check(grads, axes=axes, mesh=mesh, world=world)
+
+        g = reduce_gradients(grads, axes=axes, mesh=mesh, world=world, repl=repl)
+        g = _tree_scale(g, inv_ncomp)
+
+        params_new, opt_state_new, stats = optimizer.update(g, opt_state, params)
+
+        # loss averaged over computational slices (scalar all-reduce)
+        idx = _flat_slice_index(axes, mesh)
+        roles = world.roles_in_mesh_order()
+        is_cmp = 1.0 - jnp.asarray(
+            np.asarray([topo.is_rep_mask()[r] for r in roles], dtype=np.float32)
+        )[idx]
+        metrics["loss"] = jax.lax.psum(loss * is_cmp, axes) * inv_ncomp
+        metrics["ce"] = jax.lax.psum(ce * is_cmp, axes) * inv_ncomp
+        metrics.update(stats)
+        return params_new, opt_state_new, metrics
+
+    batch_spec = P(axes if len(axes) > 1 else axes[0])
+    smapped = jax.shard_map(
+        per_slice,
+        mesh=mesh,
+        in_specs=(P(), P(), batch_spec),
+        out_specs=(P(), P(), P()),
+        axis_names=set(axes),
+        check_vma=False,
+    )
+    donate_argnums = (0, 1) if donate else ()
+    return jax.jit(smapped, donate_argnums=donate_argnums)
+
+
+# ---------------------------------------------------------------------------
+# serve step (batched decode with replica failover)
+# ---------------------------------------------------------------------------
+
+
+def build_serve_step(
+    model_cfg: ModelConfig,
+    repl: ReplicationConfig,
+    mesh: Mesh,
+    world: WorldState,
+    *,
+    shard_batch: bool = True,
+    donate: bool = True,
+    cache_example: Optional[PyTree] = None,
+) -> Callable:
+    """Returns jitted ``serve(params, cache, tokens, pos) -> (next_tokens,
+    cache)`` - one greedy decode step.
+
+    Replica slices mirror their partner's requests (the request router feeds
+    them the same tokens), so a promoted replica continues decoding from its
+    own live KV cache with zero recovery cost - the serving analogue of the
+    paper's process replication. Decode itself needs no cross-slice
+    collectives; the model axis is GSPMD-managed.
+
+    ``shard_batch=False`` replicates the request batch on every slice (used
+    when global_batch < n_slices, e.g. the long_500k single-request cell).
+    """
+    axes = manual_axes(mesh)
+
+    def per_slice(params, cache, tokens, pos):
+        logits, cache = M.decode_step(params, cache, tokens, pos, model_cfg)
+        # vocab is padded for sharding; never sample a pad id
+        next_tok = jnp.argmax(
+            logits[:, -1, : model_cfg.vocab_size], axis=-1
+        ).astype(jnp.int32)
+        return next_tok[:, None], cache
+
+    lead = axes if len(axes) > 1 else axes[0]
+    tok_spec = P(lead) if shard_batch else P()
+    if cache_example is not None:
+        from repro.dist.sharding import cache_manual_specs
+
+        cache_spec = cache_manual_specs(
+            cache_example, lead if shard_batch else None
+        )
+    else:
+        # plain stacked caches (L, B, ...): batch dim is axis 1; grouped
+        # stacks (gemma3) need cache_example for per-leaf placement
+        cache_spec = P(None, lead) if shard_batch else P()
+
+    smapped = jax.shard_map(
+        per_slice,
+        mesh=mesh,
+        in_specs=(P(), cache_spec, tok_spec, P()),
+        out_specs=(tok_spec, cache_spec),
+        axis_names=set(axes),
+        check_vma=False,
+    )
+    return jax.jit(smapped, donate_argnums=(1,) if donate else ())
+
+
+# ---------------------------------------------------------------------------
+# prefill step (inference-prefill shape cells)
+# ---------------------------------------------------------------------------
+
+
+def build_prefill_step(
+    model_cfg: ModelConfig,
+    repl: ReplicationConfig,
+    mesh: Mesh,
+    world: WorldState,
+    *,
+    impl: str = "chunked",
+) -> Callable:
+    """Returns jitted ``prefill(params, batch) -> logits`` (forward only,
+    replica slices mirror their partner's requests)."""
+    axes = manual_axes(mesh)
+
+    def per_slice(params, batch):
+        logits, _ = M.forward(params, batch, model_cfg, impl=impl)
+        return logits
+
+    batch_spec = P(axes if len(axes) > 1 else axes[0])
+    smapped = jax.shard_map(
+        per_slice,
+        mesh=mesh,
+        in_specs=(P(), batch_spec),
+        out_specs=batch_spec,
+        axis_names=set(axes),
+        check_vma=False,
+    )
+    return jax.jit(smapped)

@@ -1,0 +1,52 @@
+"""Elastic mesh shrink + state resharding.
+
+When an UNREPLICATED computational slice fails, replication cannot mask it;
+the world shrinks (paper: checkpoint/restart continues the job). At 1000+
+node scale, restarting on the *surviving* nodes requires: rebuilding the
+mesh without the dead slice, re-sharding the restored state onto it, and
+re-balancing the batch over the remaining computational slices. All three
+live here.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import AxisType, Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.replication import WorldState
+
+PyTree = Any
+
+
+def shrink_mesh(mesh: Mesh, live_slices: Sequence[int]) -> Mesh:
+    """Rebuild the mesh keeping only ``live_slices`` along the flattened
+    (pod, data) axes. The pod axis is folded into data in the shrunk mesh
+    (a dead slice breaks the rectangular pod structure - survivors form a
+    single flat data axis, which changes collective routing but not
+    semantics)."""
+    axis_names = mesh.axis_names
+    model_dim = mesh.shape["model"] if "model" in axis_names else 1
+    devs = mesh.devices.reshape(-1, model_dim)
+    live = sorted(live_slices)
+    new_devs = devs[np.asarray(live)]
+    return Mesh(
+        new_devs.reshape(len(live), model_dim),
+        ("data", "model"),
+        axis_types=(AxisType.Auto, AxisType.Auto),
+    )
+
+
+def reshard_state(state: PyTree, shardings: PyTree) -> PyTree:
+    """Re-place state onto a (new) mesh; blocks until resident."""
+    out = jax.device_put(state, shardings)
+    jax.block_until_ready(out)
+    return out
+
+
+def rebalance_batch(global_batch: int, n_comp: int) -> Tuple[int, int]:
+    """per-slice batch (padded) + padding when n_comp doesn't divide."""
+    per = -(-global_batch // n_comp)  # ceil
+    return per, per * n_comp - global_batch

@@ -1,0 +1,100 @@
+"""Message/step logging and recovery (paper Secs. V-B, VI-B).
+
+The paper logs every P2P send (message id piggybacked) and every collective
+(``last_collective_id``); after the world is repaired, lost in-flight
+messages are resent from the logs and incomplete collectives are replayed
+in order.
+
+In SPMD training the unit of in-flight work is the *step* (one step = one
+fixed sequence of collectives), so the log records, per slice role:
+
+    (step, sample range consumed, collective sequence number, state digest)
+
+After repair:
+- promoted replicas are already state-consistent (they mirrored every
+  step), so only the in-flight step is replayed;
+- checkpoint-restored worlds replay every step after the checkpoint;
+- ``min_completed_step`` across live slices is the paper's "identify the
+  collectives that every live process has completed";
+- duplicate suppression: steps a slice already applied are skipped by id
+  (the paper's "marked using their sendids to be skipped in the future").
+
+The NAS mini-apps log at collective granularity with the same machinery
+(each app step may contain several logged collectives).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class StepRecord:
+    step: int
+    sample_start: int
+    sample_end: int
+    collective_seq: int  # last completed collective id within the step
+    digest: int = 0  # optional state checksum for cross-validation
+
+
+@dataclass
+class StepLog:
+    """Per-slice-role append-only log with duplicate suppression."""
+
+    role: int
+    records: List[StepRecord] = field(default_factory=list)
+    applied: set = field(default_factory=set)
+
+    def record(self, rec: StepRecord) -> None:
+        self.records.append(rec)
+        self.applied.add(rec.step)
+
+    def last_step(self) -> int:
+        return self.records[-1].step if self.records else -1
+
+    def has_applied(self, step: int) -> bool:
+        return step in self.applied
+
+    def trim(self, upto_step: int) -> None:
+        """Garbage-collect records at or below a globally-complete step."""
+        self.records = [r for r in self.records if r.step > upto_step]
+
+
+def min_completed_step(logs: Sequence[StepLog]) -> int:
+    """Latest step completed by EVERY live slice (paper Sec. VI-B)."""
+    if not logs:
+        return -1
+    return min(log.last_step() for log in logs)
+
+
+@dataclass(frozen=True)
+class ReplayPlan:
+    start_step: int  # first step to (re)execute
+    skip: Dict[int, List[int]]  # role -> steps it must suppress (already applied)
+    reason: str
+
+
+def replay_plan(logs: Sequence[StepLog], target_step: int, *,
+                restored_step: Optional[int] = None) -> ReplayPlan:
+    """Plan the replay after repair.
+
+    - promote path (restored_step None): replay from min_completed + 1;
+      slices that already applied later steps suppress the duplicates
+      (can happen when failure struck between a slice's optimizer update
+      and its peers' - the paper's "already received" case);
+    - restart path: replay everything after the checkpoint.
+    """
+    if restored_step is not None:
+        start = restored_step + 1
+        reason = f"checkpoint restart from step {restored_step}"
+        skip: Dict[int, List[int]] = {}
+    else:
+        start = min_completed_step(logs) + 1
+        reason = "promote: replay in-flight step(s)"
+        skip = {
+            log.role: sorted(s for s in log.applied if s >= start)
+            for log in logs
+            if any(s >= start for s in log.applied)
+        }
+    start = min(start, target_step)
+    return ReplayPlan(start_step=start, skip=skip, reason=reason)

@@ -1,0 +1,260 @@
+"""Replica topology - PartRePer-MPI's six communicators on a TPU mesh.
+
+An MPI *process* maps to a model-parallel *slice*: one index along the
+flattened (pod, data) mesh axes, owning a full copy of the (model-sharded)
+training state. Slices are partitioned into ``nComp`` computational and
+``nRep`` replica slices; replica role ``nComp + j`` mirrors computational
+role ``replica_map[j]`` (same microbatch, same ops -> bit-identical state).
+
+The paper's communicators become ``axis_index_groups`` partitions of the
+flattened slice space (paper Sec. V):
+
+- ``COMM_CMP``              -> ``comm_cmp_groups()``
+- ``COMM_REP``              -> ``comm_rep_groups()``
+- ``CMP_REP_INTERCOMM``     -> ``intercomm_perm()`` (ppermute pairs)
+- ``CMP_NO_REP``            -> ``cmp_no_rep()``
+- ``CMP_NO_REP_INTERCOMM``  -> pairs from ``cmp_no_rep()`` (P2P mini-apps)
+- world (eworldComm)        -> the full axis
+
+``WorldState`` is the failure-management view (paper Sec. VI): physical
+slices die, roles are re-assigned ("the newly shrunk communicator has its
+processes shuffled such that the replica now becomes the computational
+process"), and the groups are regenerated over the surviving slices.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+
+def split_comp_rep(n_slices: int, rdegree: float) -> Tuple[int, int]:
+    """Partition a fixed pool of slices into computational + replicas.
+
+    ``nRep ~= rdegree * nComp`` with ``nComp + nRep == n_slices``. The paper
+    adds replicas on top of a fixed computational count; on a fixed mesh the
+    replicas are carved out of the pool (the classic <=50%-efficiency
+    trade-off of dual redundancy, Stearley et al.).
+    """
+    if rdegree <= 0:
+        return n_slices, 0
+    n_comp = max(1, round(n_slices / (1.0 + rdegree)))
+    n_rep = min(n_slices - n_comp, n_comp)  # at most one replica per cmp
+    return n_slices - n_rep, n_rep
+
+
+@dataclass(frozen=True)
+class ReplicaTopology:
+    """Replica layout over ``n_comp + len(replica_map)`` slice roles.
+
+    Roles ``0..n_comp-1`` are computational; replica role ``n_comp + j``
+    mirrors computational role ``replica_map[j]``.
+    """
+
+    n_comp: int
+    replica_map: Tuple[int, ...] = ()
+
+    @classmethod
+    def create(cls, n_slices: int, rdegree: float) -> "ReplicaTopology":
+        n_comp, n_rep = split_comp_rep(n_slices, rdegree)
+        return cls(n_comp=n_comp, replica_map=tuple(range(n_rep)))
+
+    @property
+    def n_rep(self) -> int:
+        return len(self.replica_map)
+
+    @property
+    def n_slices(self) -> int:
+        return self.n_comp + self.n_rep
+
+    @property
+    def rdegree(self) -> float:
+        return self.n_rep / self.n_comp if self.n_comp else 0.0
+
+    def replica_of(self, rep_role: int) -> int:
+        return self.replica_map[rep_role - self.n_comp]
+
+    def partner_of(self, cmp_role: int) -> Optional[int]:
+        try:
+            return self.n_comp + self.replica_map.index(cmp_role)
+        except ValueError:
+            return None
+
+    # ---- the six communicators -------------------------------------------
+    def cmp_roles(self) -> List[int]:
+        return list(range(self.n_comp))
+
+    def rep_roles(self) -> List[int]:
+        return list(range(self.n_comp, self.n_slices))
+
+    def cmp_no_rep(self) -> List[int]:
+        with_rep = set(self.replica_map)
+        return [c for c in self.cmp_roles() if c not in with_rep]
+
+    def comm_cmp_groups(self) -> List[List[int]]:
+        """axis_index_groups for a COMM_CMP collective. XLA replica groups
+        must partition the axis, so replicas form an inert group whose
+        (concurrent, off-critical-path) reduction result is discarded."""
+        groups = [self.cmp_roles()]
+        if self.n_rep:
+            groups.append(self.rep_roles())
+        return groups
+
+    def comm_rep_groups(self) -> List[List[int]]:
+        if not self.n_rep:
+            return [self.cmp_roles()]
+        return [self.rep_roles(), self.cmp_roles()]
+
+    def pair_groups(self) -> List[List[int]]:
+        """Mirror-pair partition ([cmp, rep] pairs + singletons): used by the
+        RedMPI-style SDC gradient cross-check."""
+        groups = []
+        for c in self.cmp_roles():
+            r = self.partner_of(c)
+            groups.append([c, r] if r is not None else [c])
+        return groups
+
+    def intercomm_perm(self) -> List[Tuple[int, int]]:
+        """CMP_REP_INTERCOMM as ppermute (src, dst) pairs: cmp -> its rep."""
+        return [(self.replica_map[j], self.n_comp + j) for j in range(self.n_rep)]
+
+    def mirror_source(self) -> List[int]:
+        """role -> role whose data shard it consumes (identity for cmp roles,
+        the mirrored cmp role for replicas). Drives microbatch mirroring in
+        the data pipeline."""
+        return self.cmp_roles() + list(self.replica_map)
+
+    def is_rep_mask(self) -> List[bool]:
+        return [False] * self.n_comp + [True] * self.n_rep
+
+    def validate(self) -> None:
+        assert self.n_comp > 0
+        assert len(set(self.replica_map)) == len(self.replica_map)
+        assert all(0 <= c < self.n_comp for c in self.replica_map)
+        flat = sorted(i for g in self.comm_cmp_groups() for i in g)
+        assert flat == list(range(self.n_slices)), "groups must partition"
+
+
+# ---------------------------------------------------------------------------
+# failure-management view (paper Sec. VI-A "Repairing the World")
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class WorldState:
+    """``assignment[role] = physical slice id`` over the original mesh.
+
+    ``generation`` is the ULFM-revocation analogue: every repair bumps it,
+    and hosts abort dispatch loops whose generation is stale.
+    """
+
+    n_physical: int
+    topo: ReplicaTopology
+    assignment: Tuple[int, ...]
+    dead: FrozenSet[int] = frozenset()
+    generation: int = 0
+
+    @classmethod
+    def create(cls, n_slices: int, rdegree: float) -> "WorldState":
+        topo = ReplicaTopology.create(n_slices, rdegree)
+        return cls(
+            n_physical=n_slices,
+            topo=topo,
+            assignment=tuple(range(topo.n_slices)),
+        )
+
+    @property
+    def n_live(self) -> int:
+        return len(self.assignment)
+
+    def physical_of(self, role: int) -> int:
+        return self.assignment[role]
+
+    def role_of_physical(self, phys: int) -> Optional[int]:
+        try:
+            return self.assignment.index(phys)
+        except ValueError:
+            return None
+
+    def repair(self, failed_physical: Sequence[int]) -> Tuple["WorldState", Dict]:
+        """Shrink + promote. Returns (new_world, report).
+
+        - failed replica                  -> dropped
+        - failed cmp with live replica    -> replica promoted into the role
+        - failed cmp without replica      -> ``lost_cmp`` (checkpoint/restart
+          + elastic shrink are the caller's job; the role is removed here)
+        """
+        topo = self.topo
+        dead = set(self.dead) | set(failed_physical)
+        report: Dict = {"promoted": [], "dropped_reps": [], "lost_cmp": [],
+                        "generation": self.generation + 1}
+
+        # cmp role -> physical ; cmp role -> its replica's physical
+        cmp_phys: Dict[int, int] = {
+            c: self.assignment[c] for c in topo.cmp_roles()
+        }
+        rep_phys: Dict[int, int] = {
+            topo.replica_map[j]: self.assignment[topo.n_comp + j]
+            for j in range(topo.n_rep)
+        }
+
+        # drop dead replicas first (paper: "simply dropped")
+        for c in list(rep_phys):
+            if rep_phys[c] in dead:
+                report["dropped_reps"].append(c)
+                del rep_phys[c]
+
+        # handle dead computational roles
+        for c in list(cmp_phys):
+            if cmp_phys[c] in dead:
+                if c in rep_phys:
+                    cmp_phys[c] = rep_phys.pop(c)  # promote
+                    report["promoted"].append((c, cmp_phys[c]))
+                else:
+                    report["lost_cmp"].append(c)
+                    del cmp_phys[c]
+
+        # renumber surviving cmp roles densely, preserving order
+        survivors = sorted(cmp_phys)
+        renumber = {old: new for new, old in enumerate(survivors)}
+        new_cmp_assign = [cmp_phys[c] for c in survivors]
+        new_pairs = sorted(
+            (renumber[c], p) for c, p in rep_phys.items() if c in renumber
+        )
+        new_topo = ReplicaTopology(
+            n_comp=len(new_cmp_assign),
+            replica_map=tuple(c for c, _ in new_pairs),
+        )
+        new_world = WorldState(
+            n_physical=self.n_physical,
+            topo=new_topo,
+            assignment=tuple(new_cmp_assign + [p for _, p in new_pairs]),
+            dead=frozenset(dead),
+            generation=self.generation + 1,
+        )
+        return new_world, report
+
+    # ---- mesh-space group translation -------------------------------------
+    def live_physicals(self) -> List[int]:
+        return sorted(self.assignment)
+
+    def mesh_position(self) -> Dict[int, int]:
+        """physical id -> dense position in the rebuilt (shrunk) mesh."""
+        return {p: i for i, p in enumerate(self.live_physicals())}
+
+    def roles_in_mesh_order(self) -> List[int]:
+        """mesh position -> role (inverse of assignment under renumbering)."""
+        pos = self.mesh_position()
+        out = [-1] * self.n_live
+        for role, phys in enumerate(self.assignment):
+            out[pos[phys]] = role
+        return out
+
+    def physical_groups(self, role_groups: List[List[int]]) -> List[List[int]]:
+        pos = self.mesh_position()
+        return [[pos[self.assignment[r]] for r in g] for g in role_groups]
+
+    def physical_perm(self, role_pairs: Sequence[Tuple[int, int]]) -> List[Tuple[int, int]]:
+        pos = self.mesh_position()
+        return [
+            (pos[self.assignment[a]], pos[self.assignment[b]]) for a, b in role_pairs
+        ]

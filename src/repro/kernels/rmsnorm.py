@@ -1,0 +1,49 @@
+"""Fused RMSNorm Pallas TPU kernel.
+
+Row-blocked: each grid step normalises a (block_rows, D) tile held in VMEM,
+computing the fp32 row variance and the scaled output in one pass (the
+unfused jnp version round-trips x through HBM twice). D is the lane dim, so
+it should be a 128-multiple for full VPU lanes; block_rows is the sublane
+tile (8-multiple).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * (1.0 + s_ref[...].astype(jnp.float32))).astype(o_ref.dtype)
+
+
+def rmsnorm_kernel(x, scale, *, eps: float = 1e-5, block_rows: int = 256,
+                   interpret: bool = True):
+    orig_shape = x.shape
+    D = orig_shape[-1]
+    xr = x.reshape(-1, D)
+    n = xr.shape[0]
+    block_rows = min(block_rows, n)
+    pad = (-n) % block_rows
+    if pad:
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+    grid = (xr.shape[0] // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+            pl.BlockSpec((1, D), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xr.shape, x.dtype),
+        interpret=interpret,
+    )(xr, scale.reshape(1, D))
+    if pad:
+        out = out[:n]
+    return out.reshape(orig_shape)

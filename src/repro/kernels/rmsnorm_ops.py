@@ -1,0 +1,17 @@
+"""jit'd public wrapper for the fused RMSNorm kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rmsnorm import rmsnorm_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def rmsnorm(x, scale, *, eps: float = 1e-5):
+    return rmsnorm_kernel(x, scale, eps=eps, interpret=not _on_tpu())

@@ -1,0 +1,70 @@
+"""jit'd public wrapper for the SSD scan kernel (pads, dispatches, slices)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan import ssd_scan_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "h_blk"))
+def ssd_scan(x, dt, A, Bm, Cm, D, *, chunk: int = 128, h_blk: int = 8):
+    """Public SSD scan. Returns (y, final_state) to match the chunked path.
+
+    The Pallas kernel emits y; the final state (needed only when chaining
+    prefill->decode) is recomputed cheaply from the last chunk here.
+    """
+    B, S, nh, hd = x.shape
+    pad_s = (-S) % chunk
+    pad_h = (-nh) % h_blk
+    if pad_s:
+        x = jnp.pad(x, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad_s), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad_s), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad_s), (0, 0)))
+    if pad_h:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad_h), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, pad_h)))
+        A = jnp.pad(A, (0, pad_h))
+        D = jnp.pad(D, (0, pad_h))
+    y = ssd_scan_kernel(
+        x, dt, A, Bm, Cm, D, chunk=chunk, h_blk=h_blk, interpret=not _on_tpu()
+    )
+    y = y[:, :S, :nh, :]
+    state = _final_state(x, dt, A, Bm, chunk=chunk)[:, :nh]
+    return y, state
+
+
+def _final_state(x, dt, A, Bm, *, chunk: int):
+    """State after the (padded) sequence - one decayed outer-product pass.
+
+    Padded steps contribute dt=0 -> exp(0)=1 decay and zero update, so
+    padding is state-neutral.
+    """
+    B, S, nh, hd = x.shape
+    ds = Bm.shape[-1]
+    nc = S // chunk
+    xf = x.astype(jnp.float32).reshape(B, nc, chunk, nh, hd)
+    dtf = dt.astype(jnp.float32).reshape(B, nc, chunk, nh)
+    Bf = Bm.astype(jnp.float32).reshape(B, nc, chunk, ds)
+    dA = dtf * A
+    cs = jnp.cumsum(dA, axis=2)
+    total = cs[:, :, -1]  # (B,nc,nh)
+    sdecay = jnp.exp(total[:, :, None, :] - cs) * dtf
+    S_c = jnp.einsum("bnjh,bnjhd,bnjs->bnhds", sdecay, xf, Bf)
+
+    def step(s, inp):
+        sc, tot = inp
+        return s * jnp.exp(tot)[:, :, None, None] + sc, None
+
+    s0 = jnp.zeros((B, nh, hd, ds), jnp.float32)
+    s_last, _ = jax.lax.scan(
+        step, s0, (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(total, 1, 0))
+    )
+    return s_last

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the SSD scan: the sequential recurrence.
+
+S_t = exp(dt_t * A) S_{t-1} + dt_t * x_t B_t^T ;  y_t = S_t C_t + D x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, Bm, Cm, D):
+    """x (B,S,nh,hd); dt (B,S,nh); A (nh,); Bm/Cm (B,S,ds); D (nh,).
+
+    Returns (y (B,S,nh,hd), final_state (B,nh,hd,ds)). fp32 math.
+    """
+    Bb, S, nh, hd = x.shape
+    ds = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (B,nh,hd) (B,nh) (B,ds) (B,ds)
+        decay = jnp.exp(dtt * A)  # (B,nh)
+        state = state * decay[:, :, None, None] + jnp.einsum(
+            "bh,bhd,bs->bhds", dtt, xt, bt
+        )
+        y = jnp.einsum("bhds,bs->bhd", state, ct) + D[None, :, None] * xt
+        return state, y
+
+    state0 = jnp.zeros((Bb, nh, hd, ds), jnp.float32)
+    xs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(Bf, 1, 0),
+        jnp.moveaxis(Cf, 1, 0),
+    )
+    state, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state

@@ -1,0 +1,376 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: sharding
+mismatches, compile-time OOM or unsupported collectives fail HERE.
+
+Roofline accounting: XLA cost_analysis counts a lax.scan body ONCE, so the
+full scanned compile (the dry-run pass itself + memory analysis +
+collective schedule) is complemented by small UNROLLED depth variants whose
+compiled cost/collective stats give exact per-layer slopes; cell totals are
+the affine extrapolation  M(depth) = intercept + depth . slope  solved per
+segment kind. See EXPERIMENTS.md section "Dry-run".
+
+Usage:
+  python -m repro.launch.dryrun --arch all --shape all --mesh both \
+      --out runs/dryrun [--rdegree 0.0] [--mode paper] [--no-variants]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede any jax import: jax locks the device count at first init.
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import (
+    ModelConfig,
+    ReplicationConfig,
+    ShapeConfig,
+    TrainConfig,
+    shape_applicable,
+)
+from repro.configs.registry import ARCHS, SHAPES, get_arch, get_shape
+from repro.core import data_plane as DP
+from repro.core.replication import WorldState
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hlo_analysis import parse_collectives
+from repro.launch.specs import input_specs
+from repro.optim.adamw import adamw
+from repro.optim.schedules import constant
+
+# TPU v5e hardware constants (roofline denominators)
+HW = {
+    "peak_flops_bf16": 197e12,  # per chip
+    "hbm_bw": 819e9,  # bytes/s per chip
+    "ici_bw": 50e9,  # bytes/s per link
+}
+
+# ---------------------------------------------------------------------------
+# cell compilation
+# ---------------------------------------------------------------------------
+
+
+def build_and_lower(model: ModelConfig, shape: ShapeConfig, mesh, world,
+                    repl: ReplicationConfig, *, impl: str = "chunked"):
+    specs = input_specs(model, shape, world, mesh)
+    opt = adamw(constant(1e-3))
+    with jax.set_mesh(mesh):
+        if specs["kind"] == "train":
+            step = DP.build_train_step(
+                model, TrainConfig(), repl, mesh, world, opt, impl=impl
+            )
+            lowered = step.lower(specs["params"], specs["opt"], specs["batch"])
+        elif specs["kind"] == "decode":
+            step = DP.build_serve_step(
+                model, repl, mesh, world, shard_batch=specs["shard_batch"],
+                cache_example=specs["cache"],
+            )
+            lowered = step.lower(
+                specs["params"], specs["cache"], specs["tokens"], specs["pos"]
+            )
+        else:
+            step = DP.build_prefill_step(model, repl, mesh, world, impl=impl)
+            lowered = step.lower(specs["params"], specs["batch"])
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def _metrics_of(compiled) -> Dict:
+    ca = compiled.cost_analysis() or {}
+    colls = parse_collectives(compiled.as_text())
+    ma = compiled.memory_analysis()
+    mem = {
+        k: float(getattr(ma, k))
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "generated_code_size_in_bytes",
+        )
+        if hasattr(ma, k)
+    }
+    if hasattr(ma, "peak_memory_in_bytes"):
+        mem["peak_memory_in_bytes"] = float(ma.peak_memory_in_bytes)
+    if hasattr(ma, "alias_size_in_bytes"):
+        mem["alias_size_in_bytes"] = float(ma.alias_size_in_bytes)
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "collectives": colls,
+        "memory": mem,
+    }
+
+
+# ---------------------------------------------------------------------------
+# depth variants for exact roofline terms
+# ---------------------------------------------------------------------------
+
+
+def depth_variants(model: ModelConfig) -> Tuple[List[Tuple[ModelConfig, Tuple[int, ...]]], Tuple[int, ...]]:
+    """Small UNROLLED configs + their depth vectors, and the full config's
+    depth vector. Metrics are affine in the depth vector."""
+
+    def v(cfg, **kw):
+        return dataclasses.replace(cfg, scan_layers=False, **kw)
+
+    if model.attn_pattern == "local_global":
+        r = model.local_global_ratio
+        full_d = (model.n_layers // (r + 1),)
+        return (
+            [(v(model, n_layers=(r + 1)), (1,)), (v(model, n_layers=2 * (r + 1)), (2,))],
+            full_d,
+        )
+    if model.family == "hybrid":
+        n_glob = len(model.hybrid_global_layers)
+        n_swa = model.n_layers - n_glob
+        variants = [
+            (v(model, n_layers=2, hybrid_global_layers=(0,)), (1, 1)),
+            (v(model, n_layers=3, hybrid_global_layers=(0,)), (2, 1)),
+            (v(model, n_layers=3, hybrid_global_layers=(0, 1)), (1, 2)),
+        ]
+        return variants, (n_swa, n_glob)
+    if model.enc_layers:
+        variants = [
+            (v(model, n_layers=1, enc_layers=1), (1, 1)),
+            (v(model, n_layers=2, enc_layers=1), (2, 1)),
+            (v(model, n_layers=1, enc_layers=2), (1, 2)),
+        ]
+        return variants, (model.n_layers, model.enc_layers)
+    variants = [(v(model, n_layers=1), (1,)), (v(model, n_layers=2), (2,))]
+    return variants, (model.n_layers,)
+
+
+def _affine_solve(depths: List[Tuple[int, ...]], values: List[float],
+                  full: Tuple[int, ...]) -> float:
+    """Solve values[i] = c + depths[i] . s exactly; eval at `full`."""
+    A = np.array([[1.0] + list(d) for d in depths])
+    y = np.array(values)
+    coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+    return float(coef[0] + np.dot(coef[1:], np.array(full, dtype=float)))
+
+
+def extrapolated_metrics(model: ModelConfig, shape: ShapeConfig, mesh, world,
+                         repl: ReplicationConfig) -> Dict:
+    """Compile the unrolled depth variants and extrapolate flops / bytes /
+    per-kind collective bytes to the full depth."""
+    variants, full_d = depth_variants(model)
+    ms, ds = [], []
+    for cfg_v, d in variants:
+        _, compiled = build_and_lower(cfg_v, shape, mesh, world, repl)
+        ms.append(_metrics_of(compiled))
+        ds.append(d)
+    out = {
+        "flops": _affine_solve(ds, [m["flops"] for m in ms], full_d),
+        "bytes_accessed": _affine_solve(
+            ds, [m["bytes_accessed"] for m in ms], full_d
+        ),
+    }
+    kinds = set()
+    for m in ms:
+        kinds |= set(m["collectives"])
+    colls = {}
+    for k in kinds:
+        colls[k] = {
+            "bytes": max(
+                0.0,
+                _affine_solve(
+                    ds, [m["collectives"].get(k, {}).get("bytes", 0.0) for m in ms], full_d
+                ),
+            ),
+            "count": max(
+                0.0,
+                _affine_solve(
+                    ds,
+                    [m["collectives"].get(k, {}).get("count", 0) for m in ms],
+                    full_d,
+                ),
+            ),
+        }
+    out["collectives"] = colls
+    return out
+
+
+# ---------------------------------------------------------------------------
+# roofline terms
+# ---------------------------------------------------------------------------
+
+
+def roofline_terms(metrics: Dict, model: ModelConfig, shape: ShapeConfig,
+                   n_chips: int) -> Dict:
+    """Three-term roofline. cost_analysis stats describe the PER-DEVICE SPMD
+    program, so terms divide by per-chip peaks directly."""
+    flops = metrics["flops"]
+    bytes_hbm = metrics["bytes_accessed"]
+    coll_bytes = sum(c["bytes"] for c in metrics.get("collectives", {}).values())
+    t_compute = flops / HW["peak_flops_bf16"]
+    t_memory = bytes_hbm / HW["hbm_bw"]
+    t_coll = coll_bytes / HW["ici_bw"]
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    tokens = shape.seq_len * shape.global_batch
+    n_active = model.active_param_count()
+    mult = 6 if shape.kind == "train" else 2
+    model_flops_total = mult * n_active * (
+        tokens if shape.kind != "decode" else shape.global_batch
+    )
+    model_flops_per_chip = model_flops_total / n_chips
+    return {
+        **terms,
+        "dominant": dominant,
+        "model_flops_per_chip": model_flops_per_chip,
+        "useful_flop_ratio": (model_flops_per_chip / flops) if flops else 0.0,
+        "bound_time_s": max(terms.values()),
+        "roofline_fraction": (
+            model_flops_per_chip / HW["peak_flops_bf16"] / max(terms.values())
+            if max(terms.values()) > 0
+            else 0.0
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, rdegree: float,
+             mode: str, with_variants: bool, out_dir: str,
+             remat: Optional[str] = None,
+             grad_dtype: str = "float32") -> Dict:
+    model = get_arch(arch)
+    if remat:
+        model = dataclasses.replace(model, remat=remat)
+    shape = get_shape(shape_name)
+    ok, reason = shape_applicable(model, shape)
+    mesh_tag = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    cell_id = f"{model.name}__{shape.name}__{mesh_tag}__r{rdegree}__{mode}"
+    rec: Dict = {
+        "arch": model.name,
+        "shape": shape.name,
+        "mesh": mesh_tag,
+        "rdegree": rdegree,
+        "mode": mode,
+        "skipped": not ok,
+        "skip_reason": reason,
+    }
+    if not ok:
+        _save(out_dir, cell_id, rec)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_slices = int(np.prod([mesh.shape[a] for a in mesh.axis_names if a != "model"]))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    world = WorldState.create(n_slices, rdegree)
+    repl = ReplicationConfig(
+        rdegree=rdegree, collective_mode=mode, grad_reduce_dtype=grad_dtype
+    )
+
+    t0 = time.time()
+    try:
+        lowered, compiled = build_and_lower(model, shape, mesh, world, repl)
+        rec["compile_s"] = time.time() - t0
+        scanned = _metrics_of(compiled)
+        rec["scanned"] = scanned
+        rec["topology"] = {
+            "n_chips": n_chips,
+            "n_slices": n_slices,
+            "n_comp": world.topo.n_comp,
+            "n_rep": world.topo.n_rep,
+        }
+        if with_variants:
+            t1 = time.time()
+            extr = extrapolated_metrics(model, shape, mesh, world, repl)
+            rec["variants_s"] = time.time() - t1
+            merged = dict(extr)
+            merged["memory"] = scanned["memory"]
+            rec["extrapolated"] = extr
+            rec["roofline"] = roofline_terms(merged, model, shape, n_chips)
+        else:
+            rec["roofline"] = roofline_terms(scanned, model, shape, n_chips)
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 - a dry-run failure IS the signal
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    _save(out_dir, cell_id, rec)
+    return rec
+
+
+def _save(out_dir: str, cell_id: str, rec: Dict) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, cell_id + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--rdegree", type=float, default=0.0)
+    ap.add_argument("--mode", default="paper",
+                    choices=["paper", "fused", "branch"])
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--no-variants", action="store_true",
+                    help="skip the roofline depth variants (compile-only)")
+    ap.add_argument("--remat", default=None, choices=[None, "none", "block"],
+                    help="override the activation-checkpoint policy")
+    ap.add_argument("--grad-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="gradient all-reduce dtype (beyond-paper lever)")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_fail = 0
+    for multi in meshes:
+        for a in archs:
+            for s in shapes:
+                mesh_tag = "multipod_2x16x16" if multi else "pod_16x16"
+                cell_id = (
+                    f"{get_arch(a).name}__{s}__{mesh_tag}__r{args.rdegree}"
+                    f"__{args.mode}"
+                )
+                done = os.path.join(args.out, cell_id + ".json")
+                if os.path.exists(done):
+                    with open(done) as f:
+                        old = json.load(f)
+                    if old.get("ok") or old.get("skipped"):
+                        print(f"[CACHED] {a} x {s} x {mesh_tag}", flush=True)
+                        continue
+                t0 = time.time()
+                rec = run_cell(
+                    a, s, multi_pod=multi, rdegree=args.rdegree, mode=args.mode,
+                    with_variants=not args.no_variants and not multi,
+                    out_dir=args.out, remat=args.remat,
+                    grad_dtype=args.grad_dtype,
+                )
+                tag = "SKIP" if rec.get("skipped") else (
+                    "OK" if rec.get("ok") else "FAIL"
+                )
+                n_fail += tag == "FAIL"
+                dom = rec.get("roofline", {}).get("dominant", "-")
+                frac = rec.get("roofline", {}).get("roofline_fraction", 0.0)
+                print(
+                    f"[{tag}] {a} x {s} x {'2x16x16' if multi else '16x16'} "
+                    f"({time.time()-t0:.0f}s) dominant={dom} roofline={frac:.2f}"
+                    + (f" :: {rec.get('error','')}" if tag == "FAIL" else ""),
+                    flush=True,
+                )
+    print(f"dry-run complete, failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""HLO-text collective accounting (no jax import, no env side effects).
+
+Used by launch/dryrun.py; kept separate so tests and tools can import the
+parser without triggering the dry-run's XLA_FLAGS device-count override.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4,
+    "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2, "u16": 2,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\b"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_OPND_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo: str) -> Dict[str, Dict[str, float]]:
+    """Sum moved bytes per collective kind from optimized HLO text.
+
+    Convention: all-reduce / all-to-all / collective-permute count operand
+    bytes; all-gather counts result bytes (each device materialises the
+    gather); reduce-scatter counts operand bytes.
+    """
+    out: Dict[str, Dict[str, float]] = {}
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        res_dtype, res_dims, kind = m.group(1), m.group(2), m.group(3)
+        res_bytes = _nbytes(res_dtype, res_dims)
+        paren = line[m.end() - 1 :]
+        opnds = _OPND_RE.findall(paren)
+        op_bytes = sum(_nbytes(d, s) for d, s in opnds) or res_bytes
+        moved = res_bytes if kind == "all-gather" else op_bytes
+        rec = out.setdefault(kind, {"count": 0, "bytes": 0.0})
+        rec["count"] += 1
+        rec["bytes"] += float(moved)
+    return out

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (smoke tests and benches see 1 CPU device; only
+launch/dryrun.py forces 512 host devices before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips. Multi-pod: a leading
+    pod axis, 2 x 16 x 16 = 512 chips. The paper's replication slices live
+    on the flattened (pod, data) axes; 'model' is the GSPMD auto axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+
+
+def make_mesh(data: int, model: int, pods: int = 1):
+    """Arbitrary mesh for tests / benches on fake or real devices."""
+    if pods > 1:
+        return jax.make_mesh(
+            (pods, data, model), ("pod", "data", "model"),
+            axis_types=(AxisType.Auto,) * 3,
+        )
+    return jax.make_mesh(
+        (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
+    )

@@ -1,0 +1,150 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+Weak-type-correct, shardable, zero device allocation. The same builders are
+used by the real train/serve drivers (with np arrays instead of SDS).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.replication import WorldState
+from repro.dist.sharding import (
+    cache_shardings,
+    opt_shardings,
+    param_shardings,
+)
+from repro.models import model as M
+from repro.optim.adamw import adamw
+from repro.optim.schedules import constant
+
+PyTree = Any
+
+# encoder context for enc-dec architectures in decode shapes (DESIGN.md)
+ENCDEC_DECODE_ENC_LEN = 4096
+
+
+def slice_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def lead_axes(mesh: Mesh):
+    axes = slice_axes(mesh)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def per_slice_batch(shape: ShapeConfig, world: WorldState) -> Tuple[int, bool]:
+    """(per-slice batch, shard_batch). global_batch < n_comp -> replicate."""
+    n_comp = world.topo.n_comp
+    if shape.global_batch < n_comp:
+        return shape.global_batch, False
+    return -(-shape.global_batch // n_comp), True
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+# ---------------------------------------------------------------------------
+# batch specs
+# ---------------------------------------------------------------------------
+
+
+def seq_layout(model: ModelConfig, shape: ShapeConfig) -> Dict[str, int]:
+    """How seq_len splits across modality streams (see DESIGN.md):
+    vlm: n_prefix patches + text; encdec: seq/2 frames + seq/2 tokens."""
+    S = shape.seq_len
+    if model.family == "vlm" and model.n_prefix_embeds:
+        return {"text": S - model.n_prefix_embeds, "patches": model.n_prefix_embeds}
+    if model.enc_layers:
+        return {"text": S // 2, "frames": S // 2}
+    return {"text": S}
+
+
+def train_batch_specs(model: ModelConfig, shape: ShapeConfig, world: WorldState,
+                      mesh: Mesh) -> Dict[str, jax.ShapeDtypeStruct]:
+    per, shard = per_slice_batch(shape, world)
+    rows = world.topo.n_slices * per if shard else shape.global_batch
+    lead = lead_axes(mesh) if shard else None
+    layout = seq_layout(model, shape)
+    sh = lambda *rest: NamedSharding(mesh, P(lead, *rest))
+    specs = {"tokens": _sds((rows, layout["text"]), jnp.int32, sh(None))}
+    if "patches" in layout:
+        specs["patches"] = _sds(
+            (rows, layout["patches"], model.d_model), jnp.float32, sh(None, None)
+        )
+    if "frames" in layout:
+        specs["frames"] = _sds(
+            (rows, layout["frames"], model.d_model), jnp.float32, sh(None, None)
+        )
+    return specs
+
+
+def decode_input_specs(model: ModelConfig, shape: ShapeConfig, world: WorldState,
+                       mesh: Mesh, cache_dtype=jnp.bfloat16):
+    """(cache_specs, token_specs, pos_spec, shard_batch) for serve_step."""
+    per, shard = per_slice_batch(shape, world)
+    rows = world.topo.n_slices * per if shard else shape.global_batch
+    lead = lead_axes(mesh) if shard else None
+
+    enc_len = ENCDEC_DECODE_ENC_LEN if model.enc_layers else 0
+    cache_shape = jax.eval_shape(
+        lambda: M.init_cache(model, rows, max_len=shape.seq_len,
+                             enc_len=enc_len, dtype=cache_dtype)
+    )
+    cshard = cache_shardings(cache_shape, mesh, shard_batch=shard)
+    cache_specs = jax.tree.map(
+        lambda s, sh: _sds(s.shape, s.dtype, sh), cache_shape, cshard
+    )
+    tok = _sds((rows, 1), jnp.int32, NamedSharding(mesh, P(lead, None)))
+    pos = _sds((), jnp.int32, NamedSharding(mesh, P()))
+    return cache_specs, tok, pos, shard
+
+
+# ---------------------------------------------------------------------------
+# state specs
+# ---------------------------------------------------------------------------
+
+
+def state_specs(model: ModelConfig, mesh: Mesh, *, with_opt: bool = True):
+    """(params_specs, opt_specs) as sharded ShapeDtypeStructs."""
+    pshape = jax.eval_shape(lambda: M.init(jax.random.PRNGKey(0), model))
+    pshard = param_shardings(pshape, mesh, model)
+    params_specs = jax.tree.map(
+        lambda s, sh: _sds(s.shape, s.dtype, sh), pshape, pshard
+    )
+    if not with_opt:
+        return params_specs, None
+    opt = adamw(constant(1e-3))
+    oshape = jax.eval_shape(opt.init, pshape)
+    oshard = opt_shardings(oshape, pshard, mesh)
+    opt_specs = jax.tree.map(
+        lambda s, sh: _sds(s.shape, s.dtype, sh), oshape, oshard
+    )
+    return params_specs, opt_specs
+
+
+def input_specs(model: ModelConfig, shape: ShapeConfig, world: WorldState,
+                mesh: Mesh) -> Dict[str, Any]:
+    """Every input of the lowered step for this cell, keyed by role."""
+    if shape.kind == "decode":
+        cache, tok, pos, shard = decode_input_specs(model, shape, world, mesh)
+        params, _ = state_specs(model, mesh, with_opt=False)
+        return {
+            "kind": "decode",
+            "params": params,
+            "cache": cache,
+            "tokens": tok,
+            "pos": pos,
+            "shard_batch": shard,
+        }
+    params, opt = state_specs(model, mesh, with_opt=(shape.kind == "train"))
+    batch = train_batch_specs(model, shape, world, mesh)
+    if shape.kind == "train":
+        return {"kind": "train", "params": params, "opt": opt, "batch": batch}
+    return {"kind": "prefill", "params": params, "batch": batch}

@@ -1,0 +1,660 @@
+"""Core neural layers, written as pure functions over param pytrees.
+
+Attention comes in four implementations selected by ``impl``:
+
+- ``naive``   : full (S,S) score matrix - small-shape oracle only.
+- ``chunked`` : flash-style online-softmax lax.scan over KV blocks - the
+                production jnp path used by the multi-pod dry-run (keeps
+                activation memory O(S * block) instead of O(S^2)).
+- ``banded``  : exact sliding-window attention computing only the diagonal
+                band (used for SWA layers at long sequence lengths).
+- ``pallas``  : the TPU kernel in ``repro.kernels`` (interpret=True on CPU).
+
+All attention entry points are causal decoder-style unless ``causal=False``
+(encoder / cross attention).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+# ---------------------------------------------------------------------------
+# dtype helpers / initialisation
+# ---------------------------------------------------------------------------
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def pdtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# normalisation
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps: float = 1e-5, impl: str = "jnp"):
+    if impl == "pallas":
+        from repro.kernels import rmsnorm_ops
+
+        return rmsnorm_ops.rmsnorm(x, scale, eps=eps)
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE + qwen2-vl M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def _rope_angles(positions, head_dim: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float):
+    """x (B,S,H,hd), positions (B,S) or (S,) -> rotated x (half-split layout)."""
+    B, S, H, hd = x.shape
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    cos, sin = _rope_angles(positions, hd, theta)  # (B,S,hd/2)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_positions(batch: int, seq: int, n_prefix: int):
+    """Qwen2-VL multimodal positions (3, B, S): temporal/height/width.
+
+    The vision prefix (n_prefix patches, stubbed frontend) is laid out on an
+    (g x g) grid at t=0; text tokens advance t sequentially afterwards.
+    """
+    g = max(1, int(np.sqrt(max(n_prefix, 1))))
+    idx = np.arange(seq)
+    is_txt = idx >= n_prefix
+    t = np.where(is_txt, idx - n_prefix + 1, 0)
+    h = np.where(is_txt, idx - n_prefix + 1, np.minimum(idx // g, g - 1))
+    w = np.where(is_txt, idx - n_prefix + 1, idx % g)
+    pos = jnp.asarray(np.stack([t, h, w]), dtype=jnp.int32)  # (3, S)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, seq))
+
+
+def apply_mrope(x, positions3, theta: float, sections=(0.25, 0.375, 0.375)):
+    """M-RoPE: split the rotary dim into t/h/w sections with separate ids.
+
+    x (B,S,H,hd); positions3 (3,B,S).
+    """
+    B, S, H, hd = x.shape
+    half = hd // 2
+    secs = [int(round(s * half)) for s in sections]
+    secs[-1] = half - sum(secs[:-1])
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    # pick the position id per frequency slot by section
+    sec_id = jnp.concatenate(
+        [jnp.full((n,), i, dtype=jnp.int32) for i, n in enumerate(secs)]
+    )  # (half,)
+    pos = positions3.astype(jnp.float32)  # (3,B,S)
+    pos_per_slot = jnp.take(pos, sec_id, axis=0)  # (half?,B,S) -> gathers along axis0
+    ang = jnp.moveaxis(pos_per_slot, 0, -1) * freqs  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention cores
+# ---------------------------------------------------------------------------
+
+
+def repeat_kv(k, n_rep: int):
+    """(B,S,KV,hd) -> (B,S,KV*n_rep,hd) by head repetition (GQA)."""
+    if n_rep == 1:
+        return k
+    B, S, KV, hd = k.shape
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def _softcap(scores, cap: float):
+    if cap and cap > 0.0:
+        return jnp.tanh(scores / cap) * cap
+    return scores
+
+
+def attn_naive(q, k, v, *, causal: bool = True, window: int = 0,
+               softcap: float = 0.0, q_offset: int = 0):
+    """Reference attention. q (B,Sq,H,hd) k/v (B,Sk,KV,hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    k = repeat_kv(k, H // KV)
+    v = repeat_kv(v, H // KV)
+    scale = 1.0 / np.sqrt(hd)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    scores = _softcap(scores, softcap)
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window and window > 0:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attn_chunked(q, k, v, *, causal: bool = True, window: int = 0,
+                 softcap: float = 0.0, block_q: int = 512, block_k: int = 1024):
+    """Flash-style online-softmax attention in pure jnp.
+
+    Memory is O(S * block_k) per head. Both S dims must be multiples of the
+    block sizes (callers pad). Used by the dry-run so compile-time memory
+    analysis reflects a production attention, not an (S,S) allocation.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    n_rep = H // KV
+    block_q = min(block_q, S)
+    block_k = min(block_k, k.shape[1])
+    nq = S // block_q
+    nk = k.shape[1] // block_k
+    scale = 1.0 / np.sqrt(hd)
+
+    qb = q.reshape(B, nq, block_q, H, hd).astype(jnp.float32) * scale
+    kb = k.reshape(B, nk, block_k, KV, hd)
+    vb = v.reshape(B, nk, block_k, KV, hd)
+
+    def kv_step(carry, j):
+        m, l, o = carry  # (B,nq,H,bq), (B,nq,H,bq), (B,nq,H,bq,hd)
+        kj = jnp.repeat(kb[:, j].astype(jnp.float32), n_rep, axis=2)  # (B,bk,H,hd)
+        vj = jnp.repeat(vb[:, j].astype(jnp.float32), n_rep, axis=2)
+        s = jnp.einsum("bnqhd,bkhd->bnhqk", qb, kj)
+        s = _softcap(s, softcap)
+        qpos = (jnp.arange(nq * block_q)).reshape(nq, block_q)  # (nq,bq)
+        kpos = j * block_k + jnp.arange(block_k)
+        mask = jnp.ones((nq, block_q, block_k), dtype=bool)
+        if causal:
+            mask &= qpos[:, :, None] >= kpos[None, None, :]
+        if window and window > 0:
+            mask &= qpos[:, :, None] - kpos[None, None, :] < window
+        s = jnp.where(mask[None, :, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum("bnhqk,bkhd->bnhqd", p, vj)
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((B, nq, H, block_q), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((B, nq, H, block_q), dtype=jnp.float32)
+    o0 = jnp.zeros((B, nq, H, block_q, hd), dtype=jnp.float32)
+    (m, l, o), _ = jax.lax.scan(kv_step, (m0, l0, o0), jnp.arange(nk))
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(o, 2, 3).reshape(B, S, H, hd)  # (B,nq,H,bq,hd)->(B,S,H,hd)
+    return out.astype(q.dtype)
+
+
+def attn_banded(q, k, v, *, window: int, softcap: float = 0.0, block_q: int = 512):
+    """Exact sliding-window attention computing only the diagonal band.
+
+    Work is O(S * (window + block_q)) - the long_500k-friendly SWA path.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    n_rep = H // KV
+    block_q = min(block_q, S)
+    nq = S // block_q
+    band = window + block_q  # keys that can be visible to a q block
+    scale = 1.0 / np.sqrt(hd)
+    # pad keys on the left so every block can slice a fixed-size band
+    pad = band
+    kp = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+
+    def q_block(i):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * block_q, block_q, axis=1)
+        qi = qi.astype(jnp.float32) * scale
+        # band start in padded coords: (i*block_q + block_q - band) + pad
+        start = i * block_q + block_q - band + pad
+        ki = jax.lax.dynamic_slice_in_dim(kp, start, band, axis=1)
+        vi = jax.lax.dynamic_slice_in_dim(vp, start, band, axis=1)
+        ki = jnp.repeat(ki.astype(jnp.float32), n_rep, axis=2)
+        vi = jnp.repeat(vi.astype(jnp.float32), n_rep, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qi, ki)
+        s = _softcap(s, softcap)
+        qpos = i * block_q + jnp.arange(block_q)
+        kpos = start - pad + jnp.arange(band)
+        mask = (qpos[:, None] >= kpos[None, :]) & (qpos[:, None] - kpos[None, :] < window)
+        mask &= kpos[None, :] >= 0
+        s = jnp.where(mask[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, vi).astype(q.dtype)
+
+    blocks = jax.lax.map(q_block, jnp.arange(nq))  # (nq,B,bq,H,hd)
+    return jnp.moveaxis(blocks, 0, 1).reshape(B, S, H, hd)
+
+
+def _maybe_constrain(x, *axes):
+    """with_sharding_constraint when a mesh with the named axes is active
+    (no-op in single-device smoke tests)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+        names = set(mesh.axis_names)
+        if any(a is not None and a not in names for a in axes):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(*axes)
+        )
+    except Exception:  # noqa: BLE001 - constraint is an optimisation only
+        return x
+
+
+def attn_decode_oneshot(q, k_cache, v_cache, pos, *, window: int = 0,
+                        softcap: float = 0.0):
+    """Single-einsum decode attention (no KV chunking).
+
+    Preferred whenever the fp32 score tensor (B,H,Smax) is small (decode
+    batches are): ONE hd-contraction means GSPMD inserts a single partial
+    -sum all-reduce per layer for hd-sharded caches, where the chunked scan
+    forced per-chunk resharding of the whole cache (the 'involuntary full
+    rematerialization' path, ~200x more collective bytes - see
+    EXPERIMENTS.md Perf-2).
+    """
+    B, Sq, H, hd = q.shape
+    KV = k_cache.shape[2]
+    Smax = k_cache.shape[1]
+    n_rep = H // KV
+    # grouped-query einsum: never materialise the GQA-expanded cache
+    qf = q[:, 0].astype(jnp.float32).reshape(B, KV, n_rep, hd) * (
+        1.0 / np.sqrt(hd)
+    )
+    # align q with the hd-sharded cache: the QK contraction then runs
+    # shard-local with ONE psum of the (small) score tensor, instead of
+    # GSPMD all-gathering the whole cache to match head-sharded q
+    # (EXPERIMENTS.md Perf-2: 45 GB -> sub-GB of collectives per step).
+    qf = _maybe_constrain(qf, None, None, None, "model")
+    s = jnp.einsum("bknd,bskd->bkns", qf, k_cache.astype(jnp.float32))
+    s = _softcap(s, softcap)
+    kpos = jnp.arange(Smax)
+    mask = kpos[None, None, None, :] <= pos
+    if window and window > 0:
+        mask &= pos - kpos[None, None, None, :] < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkns,bskd->bknd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# one-shot decode is used when the fp32 score tensor stays under this bound
+ONESHOT_SCORE_BYTES = 256 * 2**20
+
+
+def attn_decode(q, k_cache, v_cache, pos, *, window: int = 0,
+                softcap: float = 0.0, block_k: int = 2048):
+    """Single-token decode attention against a (B,Smax,KV,hd) cache.
+
+    ``pos`` (scalar int32) is the index of the current token; cache entries
+    at indices > pos are masked out. Dispatches to the one-shot path for
+    moderate caches; falls back to online softmax over KV chunks so the
+    working set stays bounded for 500k caches.
+    """
+    B, Sq, H, hd = q.shape
+    assert Sq == 1
+    KV = k_cache.shape[2]
+    n_rep = H // KV
+    Smax = k_cache.shape[1]
+    if B * H * Smax * 4 <= ONESHOT_SCORE_BYTES:
+        return attn_decode_oneshot(
+            q, k_cache, v_cache, pos, window=window, softcap=softcap
+        )
+    block_k = min(block_k, Smax)
+    nk = Smax // block_k
+    scale = 1.0 / np.sqrt(hd)
+    qf = q[:, 0].astype(jnp.float32) * scale  # (B,H,hd)
+
+    kb = k_cache.reshape(B, nk, block_k, KV, hd)
+    vb = v_cache.reshape(B, nk, block_k, KV, hd)
+
+    def kv_step(carry, j):
+        m, l, o = carry  # (B,H), (B,H), (B,H,hd)
+        kj = jnp.repeat(kb[:, j].astype(jnp.float32), n_rep, axis=2)  # (B,bk,H,hd)
+        vj = jnp.repeat(vb[:, j].astype(jnp.float32), n_rep, axis=2)
+        s = jnp.einsum("bhd,bkhd->bhk", qf, kj)
+        s = _softcap(s, softcap)
+        kpos = j * block_k + jnp.arange(block_k)
+        mask = kpos[None, None, :] <= pos
+        if window and window > 0:
+            mask &= pos - kpos[None, None, :] < window
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum("bhk,bkhd->bhd", p, vj)
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((B, H), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((B, H), dtype=jnp.float32)
+    o0 = jnp.zeros((B, H, hd), dtype=jnp.float32)
+    (m, l, o), _ = jax.lax.scan(kv_step, (m0, l0, o0), jnp.arange(nk))
+    out = (o / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+    return out[:, None]  # (B,1,H,hd)
+
+
+def attention(q, k, v, *, impl: str = "chunked", causal: bool = True,
+              window: int = 0, softcap: float = 0.0):
+    """Dispatch over attention implementations (self-attention, train/prefill)."""
+    if impl == "naive":
+        return attn_naive(q, k, v, causal=causal, window=window, softcap=softcap)
+    if impl == "banded" or (impl == "chunked" and window and q.shape[1] > 4 * window):
+        if window and causal:
+            return attn_banded(q, k, v, window=window, softcap=softcap)
+    if impl == "pallas":
+        from repro.kernels import flash_attention_ops
+
+        return flash_attention_ops.flash_attention(
+            q, k, v, causal=causal, window=window, softcap=softcap
+        )
+    return attn_chunked(q, k, v, causal=causal, window=window, softcap=softcap)
+
+
+# ---------------------------------------------------------------------------
+# attention layer (params + forward, with KV cache support)
+# ---------------------------------------------------------------------------
+
+
+def attn_params_init(key, cfg: ModelConfig, dtype):
+    d, hd = cfg.d_model, cfg.head_dim
+    q_dim = cfg.n_heads * hd
+    kv_dim = cfg.n_kv_heads * hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, q_dim, dtype),
+        "wk": dense_init(ks[1], d, kv_dim, dtype),
+        "wv": dense_init(ks[2], d, kv_dim, dtype),
+        "wo": dense_init(ks[3], q_dim, d, dtype, scale=1.0 / np.sqrt(q_dim)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((q_dim,), dtype)
+        p["bk"] = jnp.zeros((kv_dim,), dtype)
+        p["bv"] = jnp.zeros((kv_dim,), dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    # NOTE: no explicit sharding constraint here. Forcing head-sharding on
+    # q/k/v was measured to REGRESS the prefill cells by 17-57% on the
+    # collective term (EXPERIMENTS.md Perf-5): GSPMD's propagated layout
+    # for the train/prefill attention already beats padded-head sharding
+    # when KV*hd crosses shard boundaries. The decode path constrains at
+    # the point of use instead (attn_decode_forward).
+    return q, k, v
+
+
+def attn_forward(p, x, cfg: ModelConfig, *, is_global: bool, impl: str,
+                 positions=None, mrope_pos=None):
+    """Self-attention over a full sequence (train / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg)
+    if positions is None:
+        positions = jnp.arange(S)
+    if cfg.mrope and mrope_pos is not None:
+        q = apply_mrope(q, mrope_pos, cfg.rope_theta)
+        k = apply_mrope(k, mrope_pos, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    window = 0 if is_global else cfg.window
+    o = attention(q, k, v, impl=impl, causal=True, window=window,
+                  softcap=cfg.attn_logit_softcap)
+    o = o.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return o @ p["wo"], (k, v)
+
+
+def attn_decode_forward(p, x, cache, pos, cfg: ModelConfig, *, is_global: bool,
+                        impl: str = "chunked"):
+    """One-token decode. cache = {'k','v'} of shape (B, Smax, KV, hd).
+
+    Returns output (B,1,D) and the updated cache. For windowed layers the
+    cache length is the window size and indexing is modular (ring buffer).
+    """
+    del impl
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, x, cfg)
+    if cfg.mrope:
+        pos3 = jnp.broadcast_to(pos, (3, B, 1)).astype(jnp.int32)
+        q = apply_mrope(q, pos3, cfg.rope_theta)
+        k = apply_mrope(k, pos3, cfg.rope_theta)
+    else:
+        posv = jnp.full((B, 1), pos, dtype=jnp.int32)
+        q = apply_rope(q, posv, cfg.rope_theta)
+        k = apply_rope(k, posv, cfg.rope_theta)
+    Smax = cache["k"].shape[1]
+    slot = jnp.where(Smax < jnp.asarray(10**9), pos % Smax, pos)
+    # write path: match the cache's hd-sharding so the update is local
+    k = _maybe_constrain(k, None, None, None, "model")
+    v = _maybe_constrain(v, None, None, None, "model")
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    window = 0 if is_global else cfg.window
+    if window and Smax <= window:
+        # ring buffer: every live entry is in-window; mask only unwritten slots
+        o = attn_decode(q, k_cache, v_cache, jnp.minimum(pos, Smax - 1), window=0,
+                        softcap=cfg.attn_logit_softcap)
+    else:
+        o = attn_decode(q, k_cache, v_cache, pos, window=window,
+                        softcap=cfg.attn_logit_softcap)
+    o = o.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+    return o @ p["wo"], {"k": k_cache, "v": v_cache}
+
+
+def cross_attn_forward(p, x, enc_kv, cfg: ModelConfig):
+    """Cross-attention (decoder over encoder output). enc_kv = (k, v)."""
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k, v = enc_kv
+    o = attention(q, k, v, impl="chunked", causal=False, window=0)
+    o = o.reshape(B, S, cfg.n_heads * hd)
+    return o @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_params_init(key, cfg: ModelConfig, dtype, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], d, f, dtype),
+            "w_up": dense_init(ks[1], d, f, dtype),
+            "w_down": dense_init(ks[2], f, d, dtype, scale=1.0 / np.sqrt(f)),
+        }
+    return {
+        "w_up": dense_init(ks[0], d, f, dtype),
+        "w_down": dense_init(ks[1], f, d, dtype, scale=1.0 / np.sqrt(f)),
+    }
+
+
+def mlp_forward(p, x, cfg: ModelConfig):
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif cfg.mlp == "squared_relu":
+        h = jnp.square(jax.nn.relu(x @ p["w_up"]))
+    else:  # gelu
+        h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (GShard-style capacity dispatch)
+# ---------------------------------------------------------------------------
+
+
+def moe_params_init(key, cfg: ModelConfig, dtype):
+    assert cfg.moe is not None
+    moe = cfg.moe
+    d, f, E = cfg.d_model, cfg.d_ff, moe.n_experts
+    ks = jax.random.split(key, 4)
+
+    def expert_stack(k, in_dim, out_dim, scale=None):
+        return jax.vmap(lambda kk: dense_init(kk, in_dim, out_dim, dtype, scale))(
+            jax.random.split(k, E)
+        )
+
+    p = {"router": dense_init(ks[0], d, E, jnp.float32, scale=0.02)}
+    if cfg.mlp == "swiglu":
+        p["w_gate"] = expert_stack(ks[1], d, f)
+        p["w_up"] = expert_stack(ks[2], d, f)
+        p["w_down"] = expert_stack(ks[3], f, d, scale=1.0 / np.sqrt(f))
+    else:
+        p["w_up"] = expert_stack(ks[1], d, f)
+        p["w_down"] = expert_stack(ks[2], f, d, scale=1.0 / np.sqrt(f))
+    return p
+
+
+def moe_forward(p, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k capacity-based MoE with GShard-style GROUPED dispatch.
+
+    Tokens are split into groups of ``moe.group_size`` with per-group
+    capacity, so the dispatch/combine one-hot einsums cost
+    O(T * g * E * k) instead of O(T^2 * k) - ungrouped dispatch was the
+    dominant compute term of the mixtral train_4k cell (useful-FLOP ratio
+    0.02; see EXPERIMENTS.md Perf-1).
+
+    Dispatch/combine use one-hot einsums (TPU-friendly: no scatter). Expert
+    tensors are sharded per MoEConfig.sharding by the jit-level param specs;
+    with 'expert' sharding GSPMD turns the grouped dispatch einsum into
+    all_to_all on the model axis.
+    """
+    moe = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, K = moe.n_experts, moe.top_k
+    g = min(moe.group_size, T)
+    while T % g:  # group size must tile the token stream
+        g //= 2
+    G = T // g
+    C = max(4, int(moe.capacity_factor * K * g / E))
+    C = min(C, g)
+    xt = x.reshape(G, g, D)
+
+    logits = jnp.einsum(
+        "gtd,de->gte", xt.astype(jnp.float32), p["router"]
+    )  # (G,g,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # (G,g,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balancing loss (Switch-style, over all tokens)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    aux = jnp.sum(me * ce) * E * moe.router_aux_coef
+
+    # per-group capacity assignment
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (G,g,K,E)
+    flat = onehot.reshape(G, g * K, E)
+    pos_in_e = (jnp.cumsum(flat, axis=1) - flat).reshape(G, g, K, E)
+    pos = jnp.einsum("gtke,gtke->gtk", pos_in_e, onehot)  # (G,g,K)
+    keep = pos < C
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)  # (G,g,K,C)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", onehot * keep[..., None], pos_oh)
+    combine = jnp.einsum("gtk,gtke,gtkc->gtec", gate_vals, onehot, pos_oh)
+
+    xin = jnp.einsum(
+        "gtec,gtd->egcd", dispatch, xt.astype(jnp.float32)
+    ).astype(x.dtype)  # (E,G,C,D)
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xin, p["w_gate"])) * jnp.einsum(
+            "egcd,edf->egcf", xin, p["w_up"]
+        )
+    else:
+        h = jnp.square(jax.nn.relu(jnp.einsum("egcd,edf->egcf", xin, p["w_up"])))
+    eout = jnp.einsum("egcf,efd->egcd", h, p["w_down"])  # (E,G,C,D)
+    out = jnp.einsum("gtec,egcd->gtd", combine, eout.astype(jnp.float32))
+    return out.reshape(B, S, D).astype(x.dtype), aux.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# embedding / logits / loss
+# ---------------------------------------------------------------------------
+
+
+def embed_forward(embed, tokens, cfg: ModelConfig):
+    x = jnp.take(embed, tokens, axis=0)
+    return x.astype(dtype_of(cfg)) * np.sqrt(cfg.d_model)
+
+
+def logits_forward(params, x, cfg: ModelConfig):
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    if cfg.tie_embeddings:
+        return x @ head.T.astype(x.dtype)
+    return x @ head.astype(x.dtype)
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Stable cross-entropy; logits may be vocab-sharded (GSPMD reduces)."""
+    lf = logits.astype(jnp.float32)
+    m = jnp.max(lf, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1))
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    w = mask.astype(jnp.float32)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)

@@ -1,0 +1,504 @@
+"""Model composition: init / forward / decode for all assigned families.
+
+Layers are stacked (leading layer dim) and executed with ``lax.scan`` so the
+compiled HLO contains a single layer body per segment - essential for
+compiling 40+ layer configs quickly in the multi-pod dry-run.
+
+Heterogeneous layer patterns (gemma3's 5 local : 1 global, hymba's three
+global layers) are expressed as a *segment plan*: a list of homogeneous
+param stacks executed in order, each with its own scan.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssd as S
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# segment plan
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Segment:
+    name: str
+    count: int  # number of layers in this segment's stack
+    kind: str  # 'attn' | 'ssm' | 'hybrid'
+    is_global: bool  # full attention (vs sliding window)
+    grouped: int = 0  # >0: gemma3-style [grouped local + 1 global] x count
+
+
+def model_plan(cfg: ModelConfig) -> List[Segment]:
+    if cfg.family == "ssm":
+        return [Segment("blocks", cfg.n_layers, "ssm", False)]
+    if cfg.family == "hybrid":
+        segs: List[Segment] = []
+        gl = set(cfg.hybrid_global_layers)
+        i, run = 0, 0
+        for li in range(cfg.n_layers):
+            if li in gl:
+                if run:
+                    segs.append(Segment(f"swa{i}", run, "hybrid", False))
+                    i += 1
+                    run = 0
+                segs.append(Segment(f"glb{li}", 1, "hybrid", True))
+            else:
+                run += 1
+        if run:
+            segs.append(Segment(f"swa{i}", run, "hybrid", False))
+        return segs
+    if cfg.attn_pattern == "local_global":
+        ratio = cfg.local_global_ratio
+        n_groups = cfg.n_layers // (ratio + 1)
+        return [Segment("groups", n_groups, "attn", True, grouped=ratio)]
+    is_global = cfg.attn_pattern == "full"
+    return [Segment("blocks", cfg.n_layers, "attn", is_global)]
+
+
+# ---------------------------------------------------------------------------
+# per-layer params
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: ModelConfig, kind: str, dtype, cross: bool = False):
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"ln1": jnp.zeros((cfg.d_model,), dtype)}
+    if kind == "ssm":
+        p["mamba"] = S.mamba_params_init(ks[0], cfg, dtype)
+        return p
+    if kind == "hybrid":
+        p["attn"] = L.attn_params_init(ks[0], cfg, dtype)
+        p["mamba"] = S.mamba_params_init(ks[1], cfg, dtype)
+        p["norm_attn"] = jnp.zeros((cfg.d_model,), dtype)
+        p["norm_ssm"] = jnp.zeros((cfg.d_model,), dtype)
+        p["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+        p["mlp"] = L.mlp_params_init(ks[2], cfg, dtype)
+        return p
+    # attn kinds
+    p["attn"] = L.attn_params_init(ks[0], cfg, dtype)
+    if not cfg.parallel_block:
+        p["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+    if cross:
+        p["lnx"] = jnp.zeros((cfg.d_model,), dtype)
+        p["xattn"] = L.attn_params_init(ks[3], cfg, dtype)
+    if cfg.family == "moe":
+        p["moe"] = L.moe_params_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = L.mlp_params_init(ks[2], cfg, dtype)
+    return p
+
+
+def _stack_init(key, cfg: ModelConfig, n: int, kind: str, dtype, cross=False):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _layer_init(k, cfg, kind, dtype, cross))(keys)
+
+
+def init(key, cfg: ModelConfig) -> PyTree:
+    dtype = L.pdtype_of(cfg)
+    ks = jax.random.split(key, 16)
+    V = cfg.padded_vocab()
+    params: Dict[str, Any] = {
+        "embed": L.embed_init(ks[0], V, cfg.d_model, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[1], cfg.d_model, V, dtype)
+
+    plan = model_plan(cfg)
+    segs: Dict[str, Any] = {}
+    for i, seg in enumerate(plan):
+        k = ks[2 + (i % 12)]
+        if seg.grouped:
+            kl, kg = jax.random.split(k)
+            local = jax.vmap(
+                lambda kk: _stack_init(kk, cfg, seg.grouped, "attn", dtype)
+            )(jax.random.split(kl, seg.count))
+            glob = _stack_init(kg, cfg, seg.count, "attn", dtype)
+            segs[seg.name] = {"local": local, "global": glob}
+        else:
+            segs[seg.name] = _stack_init(k, cfg, seg.count, seg.kind, dtype)
+    params["segments"] = segs
+
+    if cfg.enc_layers:
+        params["enc"] = _stack_init(ks[14], cfg, cfg.enc_layers, "attn", dtype)
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), dtype)
+        params["dec_cross"] = None  # cross-attn params live inside decoder stack
+        # re-init the decoder stack with cross-attention
+        params["segments"]["blocks"] = _stack_init(
+            ks[15], cfg, cfg.n_layers, "attn", dtype, cross=True
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer forward bodies (full-sequence)
+# ---------------------------------------------------------------------------
+
+
+def _attn_layer(p, x, cfg: ModelConfig, *, is_global: bool, impl: str,
+                mrope_pos=None, enc_out=None):
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    attn_out, kv = L.attn_forward(
+        p["attn"], h, cfg, is_global=is_global, impl=impl, mrope_pos=mrope_pos
+    )
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.parallel_block:
+        mlp_out = L.mlp_forward(p["mlp"], h, cfg)
+        return x + attn_out + mlp_out, aux
+    x = x + attn_out
+    if enc_out is not None:
+        hx = L.rmsnorm(x, p["lnx"], cfg.norm_eps)
+        B, Se, _ = enc_out.shape
+        k = (enc_out @ p["xattn"]["wk"]).reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+        v = (enc_out @ p["xattn"]["wv"]).reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+        x = x + L.cross_attn_forward(p["xattn"], hx, (k, v), cfg)
+    h2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        out, aux = L.moe_forward(p["moe"], h2, cfg)
+        return x + out, aux
+    return x + L.mlp_forward(p["mlp"], h2, cfg), aux
+
+
+def _ssm_layer(p, x, cfg: ModelConfig, *, impl: str):
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    out, _ = S.mamba_forward(p["mamba"], h, cfg, impl=impl)
+    return x + out, jnp.zeros((), jnp.float32)
+
+
+def _hybrid_layer(p, x, cfg: ModelConfig, *, is_global: bool, impl: str):
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    attn_out, _ = L.attn_forward(p["attn"], h, cfg, is_global=is_global, impl=impl)
+    ssm_out, _ = S.mamba_forward(p["mamba"], h, cfg, impl="chunked")
+    fused = 0.5 * (
+        L.rmsnorm(attn_out, p["norm_attn"], cfg.norm_eps)
+        + L.rmsnorm(ssm_out, p["norm_ssm"], cfg.norm_eps)
+    )
+    x = x + fused
+    h2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    return x + L.mlp_forward(p["mlp"], h2, cfg), jnp.zeros((), jnp.float32)
+
+
+def _seg_body(cfg: ModelConfig, seg: Segment, impl: str, mrope_pos=None, enc_out=None):
+    def body(carry, lp):
+        x, aux = carry
+        if seg.kind == "ssm":
+            x, a = _ssm_layer(lp, x, cfg, impl=impl)
+        elif seg.kind == "hybrid":
+            x, a = _hybrid_layer(lp, x, cfg, is_global=seg.is_global, impl=impl)
+        else:
+            x, a = _attn_layer(
+                lp, x, cfg, is_global=seg.is_global, impl=impl,
+                mrope_pos=mrope_pos, enc_out=enc_out,
+            )
+        return (x, aux + a), None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    return body
+
+
+def _index_tree(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def _run_segment(params_seg, seg: Segment, x, aux, cfg: ModelConfig, impl: str,
+                 mrope_pos=None, enc_out=None):
+    if seg.grouped:
+        # gemma3 pattern: scan over groups of [`grouped` local layers + 1 global]
+        local_seg = Segment(seg.name, seg.grouped, "attn", False)
+        glob_seg = Segment(seg.name, 1, "attn", True)
+        local_body = _seg_body(cfg, local_seg, impl, mrope_pos)
+        glob_body = _seg_body(cfg, glob_seg, impl, mrope_pos)
+
+        def group_body(carry, gp):
+            if cfg.scan_layers:
+                carry, _ = jax.lax.scan(local_body, carry, gp["local"])
+            else:
+                for j in range(seg.grouped):
+                    carry, _ = local_body(carry, _index_tree(gp["local"], j))
+            carry, _ = glob_body(carry, gp["global"])
+            return carry, None
+
+        if cfg.scan_layers:
+            (x, aux), _ = jax.lax.scan(group_body, (x, aux), params_seg)
+        else:
+            for g in range(seg.count):
+                (x, aux), _ = group_body((x, aux), _index_tree(params_seg, g))
+        return x, aux
+    body = _seg_body(cfg, seg, impl, mrope_pos, enc_out)
+    if seg.count == 1:
+        (x, aux), _ = body((x, aux), jax.tree.map(lambda a: a[0], params_seg))
+    elif not cfg.scan_layers:
+        for i in range(seg.count):
+            (x, aux), _ = body((x, aux), _index_tree(params_seg, i))
+    else:
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params_seg)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# full forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            *, impl: str = "chunked") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits (B,S,V), aux_loss). ``batch`` keys:
+
+    - tokens (B, S_text) int32 - always present
+    - patches / frames (B, n_prefix, d_model) - vlm/audio stub embeddings
+    """
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    x = L.embed_forward(params["embed"], tokens, cfg)
+    mrope_pos = None
+
+    if cfg.family == "vlm" and cfg.n_prefix_embeds:
+        patches = batch["patches"].astype(x.dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+        S_total = x.shape[1]
+        mrope_pos = L.mrope_positions(B, S_total, cfg.n_prefix_embeds)
+
+    enc_out = None
+    if cfg.enc_layers:
+        enc_x = batch["frames"].astype(x.dtype)
+        enc_seg = Segment("enc", cfg.enc_layers, "attn", True)
+        enc_body_cfg = cfg
+        # encoder is bidirectional: reuse attn layer with causal disabled via
+        # a dedicated body (window=0, causal=False)
+        def enc_layer(carry, lp):
+            h_in, aux = carry
+            h = L.rmsnorm(h_in, lp["ln1"], cfg.norm_eps)
+            q, k, v = L._project_qkv(lp["attn"], h, cfg)
+            pos = jnp.arange(h.shape[1])
+            q = L.apply_rope(q, pos, cfg.rope_theta)
+            k = L.apply_rope(k, pos, cfg.rope_theta)
+            o = L.attention(q, k, v, impl="chunked", causal=False, window=0)
+            o = o.reshape(h.shape[0], h.shape[1], cfg.n_heads * cfg.head_dim)
+            h_in = h_in + o @ lp["attn"]["wo"]
+            h2 = L.rmsnorm(h_in, lp["ln2"], cfg.norm_eps)
+            return (h_in + L.mlp_forward(lp["mlp"], h2, cfg), aux), None
+
+        if cfg.remat == "block":
+            enc_layer = jax.checkpoint(enc_layer)
+        if cfg.scan_layers:
+            (enc_out, _), _ = jax.lax.scan(
+                enc_layer, (enc_x, jnp.zeros((), jnp.float32)), params["enc"]
+            )
+        else:
+            carry = (enc_x, jnp.zeros((), jnp.float32))
+            for i in range(cfg.enc_layers):
+                carry, _ = enc_layer(carry, _index_tree(params["enc"], i))
+            enc_out = carry[0]
+        enc_out = L.rmsnorm(enc_out, params["enc_norm"], cfg.norm_eps)
+
+    aux = jnp.zeros((), jnp.float32)
+    for seg in model_plan(cfg):
+        x, aux = _run_segment(
+            params["segments"][seg.name], seg, x, aux, cfg, impl, mrope_pos, enc_out
+        )
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_forward(params, x, cfg)
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, impl: str = "chunked"):
+    """Next-token CE. Loss positions: text tokens (prefix positions skipped)."""
+    logits, aux = forward(params, batch, cfg, impl=impl)
+    tokens = batch["tokens"]
+    if cfg.family == "vlm" and cfg.n_prefix_embeds:
+        logits = logits[:, cfg.n_prefix_embeds :, :]
+    labels = batch.get("labels")
+    if labels is None:
+        labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32).at[:, -1].set(0.0)
+    ce = L.softmax_xent(logits, labels, mask)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode: cache init + single-token step
+# ---------------------------------------------------------------------------
+
+
+def _attn_cache_len(cfg: ModelConfig, is_global: bool, max_len: int) -> int:
+    if is_global or not cfg.window:
+        return max_len
+    return min(cfg.window, max_len)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 0,
+               dtype=jnp.bfloat16) -> PyTree:
+    """Decode cache pytree, mirroring the segment plan."""
+    cache: Dict[str, Any] = {}
+
+    def attn_entry(n, is_global):
+        Smax = _attn_cache_len(cfg, is_global, max_len)
+        shp = (n, batch, Smax, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+    def ssm_entry(n):
+        st = S.mamba_init_state(cfg, batch, dtype)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), st)
+
+    for seg in model_plan(cfg):
+        if seg.grouped:
+            loc = attn_entry(seg.count * seg.grouped, False)
+            loc = jax.tree.map(
+                lambda a: a.reshape((seg.count, seg.grouped) + a.shape[1:]), loc
+            )
+            cache[seg.name] = {"local": loc, "global": attn_entry(seg.count, True)}
+        elif seg.kind == "ssm":
+            cache[seg.name] = ssm_entry(seg.count)
+        elif seg.kind == "hybrid":
+            cache[seg.name] = {
+                "attn": attn_entry(seg.count, seg.is_global),
+                "ssm": ssm_entry(seg.count),
+            }
+        else:
+            cache[seg.name] = attn_entry(seg.count, seg.is_global)
+
+    if cfg.enc_layers:
+        shp = (cfg.n_layers, batch, enc_len, cfg.n_kv_heads, cfg.head_dim)
+        cache["cross"] = {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+    return cache
+
+
+def _attn_decode_layer(lp, x, lcache, pos, cfg, is_global, cross_kv=None):
+    h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    out, new_cache = L.attn_decode_forward(
+        lp["attn"], h, lcache, pos, cfg, is_global=is_global
+    )
+    if cfg.parallel_block:
+        return x + out + L.mlp_forward(lp["mlp"], h, cfg), new_cache
+    x = x + out
+    if cross_kv is not None:
+        hx = L.rmsnorm(x, lp["lnx"], cfg.norm_eps)
+        x = x + L.cross_attn_forward(lp["xattn"], hx, cross_kv, cfg)
+    h2 = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        out, _ = L.moe_forward(lp["moe"], h2, cfg)
+        return x + out, None if new_cache is None else new_cache
+    return x + L.mlp_forward(lp["mlp"], h2, cfg), new_cache
+
+
+def decode_step(params, cache: PyTree, tokens, pos, cfg: ModelConfig):
+    """One decode step. tokens (B,1) int32; pos scalar int32 (current index).
+
+    Returns (logits (B,1,V), new_cache). The cache layout mirrors
+    ``init_cache``; each segment scans over its layer stack, threading the
+    layer's cache slice through as scan ys (functional update).
+    """
+    B = tokens.shape[0]
+    x = L.embed_forward(params["embed"], tokens, cfg)
+    new_cache: Dict[str, Any] = {}
+
+    has_cross = bool(cfg.enc_layers)
+
+    def _scan_or_loop(body, x0, xs, n):
+        """lax.scan when scanning layers; unrolled loop (stacking the per-
+        layer cache outputs) for the roofline depth-variant pass."""
+        if cfg.scan_layers:
+            return jax.lax.scan(body, x0, xs)
+        outs = []
+        x_c = x0
+        for i in range(n):
+            x_c, y = body(x_c, _index_tree(xs, i))
+            outs.append(y)
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *outs)
+        return x_c, stacked
+
+    for seg in model_plan(cfg):
+        seg_params = params["segments"][seg.name]
+        seg_cache = cache[seg.name]
+
+        if seg.grouped:
+            def group_body(carry, inp):
+                xx = carry
+                gp, gc, li = inp
+                def local_body(c2, inp2):
+                    lp, lc = inp2
+                    y, nc = _attn_decode_layer(lp, c2, lc, pos, cfg, False)
+                    return y, nc
+                xx, loc_new = jax.lax.scan(local_body, xx, (gp["local"], gc["local"]))
+                xx, glob_new = _attn_decode_layer(
+                    jax.tree.map(lambda a: a, gp["global"]), xx, gc["global"], pos, cfg, True
+                )
+                return xx, {"local": loc_new, "global": glob_new}
+
+            x, seg_new = _scan_or_loop(
+                group_body, x, (seg_params, seg_cache, jnp.arange(seg.count)),
+                seg.count,
+            )
+            new_cache[seg.name] = seg_new
+        elif seg.kind == "ssm":
+            def ssm_body(xx, inp):
+                lp, lst = inp
+                h = L.rmsnorm(xx, lp["ln1"], cfg.norm_eps)
+                out, nst = S.mamba_decode_forward(lp["mamba"], h, lst, cfg)
+                return xx + out, nst
+
+            x, seg_new = _scan_or_loop(ssm_body, x, (seg_params, seg_cache), seg.count)
+            new_cache[seg.name] = seg_new
+        elif seg.kind == "hybrid":
+            def hyb_body(xx, inp):
+                lp, lc = inp
+                h = L.rmsnorm(xx, lp["ln1"], cfg.norm_eps)
+                a_out, nac = L.attn_decode_forward(
+                    lp["attn"], h, lc["attn"], pos, cfg, is_global=seg.is_global
+                )
+                s_out, nsc = S.mamba_decode_forward(lp["mamba"], h, lc["ssm"], cfg)
+                fused = 0.5 * (
+                    L.rmsnorm(a_out, lp["norm_attn"], cfg.norm_eps)
+                    + L.rmsnorm(s_out, lp["norm_ssm"], cfg.norm_eps)
+                )
+                xx = xx + fused
+                h2 = L.rmsnorm(xx, lp["ln2"], cfg.norm_eps)
+                return xx + L.mlp_forward(lp["mlp"], h2, cfg), {"attn": nac, "ssm": nsc}
+
+            if seg.count == 1:
+                lp1 = jax.tree.map(lambda a: a[0], seg_params)
+                lc1 = jax.tree.map(lambda a: a[0], seg_cache)
+                x, nc1 = hyb_body(x, (lp1, lc1))
+                new_cache[seg.name] = jax.tree.map(lambda a: a[None], nc1)
+            else:
+                x, seg_new = _scan_or_loop(hyb_body, x, (seg_params, seg_cache), seg.count)
+                new_cache[seg.name] = seg_new
+        else:
+            def attn_body(xx, inp):
+                if has_cross:
+                    lp, lc, xkv_k, xkv_v = inp
+                    y, nc = _attn_decode_layer(
+                        lp, xx, lc, pos, cfg, seg.is_global, cross_kv=(xkv_k, xkv_v)
+                    )
+                else:
+                    lp, lc = inp
+                    y, nc = _attn_decode_layer(lp, xx, lc, pos, cfg, seg.is_global)
+                return y, nc
+
+            if has_cross:
+                xs = (seg_params, seg_cache, cache["cross"]["k"], cache["cross"]["v"])
+            else:
+                xs = (seg_params, seg_cache)
+            x, seg_new = _scan_or_loop(attn_body, x, xs, seg.count)
+            new_cache[seg.name] = seg_new
+
+    if has_cross:
+        new_cache["cross"] = cache["cross"]
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_forward(params, x, cfg)
+    return logits, new_cache

@@ -1,0 +1,236 @@
+"""Mamba-2 SSD (state-space duality) blocks.
+
+Three implementations of the SSD scan:
+
+- ``ref``     : sequential recurrence (kernels/ssd_scan_ref.py) - the oracle.
+- ``chunked`` : block-parallel SSD (intra-chunk quadratic + inter-chunk
+                state scan) in pure jnp - the production/dry-run path.
+- ``pallas``  : TPU kernel (kernels/ssd_scan.py), interpret=True on CPU.
+
+Shapes: x (B,S,nh,hd); dt (B,S,nh); A (nh,) negative reals; B,C (B,S,ds)
+shared across heads (n_groups=1 as in Mamba-2); D (nh,).
+Recurrence per head: S_t = exp(dt_t A) S_{t-1} + dt_t x_t B_t^T,
+y_t = S_t C_t + D x_t.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# SSD scan implementations
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, *, chunk: int):
+    """Chunked SSD. Returns y (B,S,nh,hd) and the final state (B,nh,hd,ds)."""
+    Bb, S, nh, hd = x.shape
+    ds = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    # (B,nc,Q,...) views
+    xc = xf.reshape(Bb, nc, Q, nh, hd)
+    dtc = dtf.reshape(Bb, nc, Q, nh)
+    Bc = Bf.reshape(Bb, nc, Q, ds)
+    Cc = Cf.reshape(Bb, nc, Q, ds)
+
+    dA = dtc * A  # (B,nc,Q,nh) log-decay per step
+    cs = jnp.cumsum(dA, axis=2)  # inclusive cumulative log decay
+    total = cs[:, :, -1]  # (B,nc,nh)
+
+    # intra-chunk: y[i] += sum_{j<=i} exp(cs_i - cs_j) (C_i . B_j) dt_j x_j
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # (B,nc,i,j,nh)
+    tri = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+    # mask in log space BEFORE exp: exp of unmasked upper triangle overflows
+    # and poisons gradients through the 0-multiplied branch.
+    decay = jnp.exp(jnp.where(tri[None, None, :, :, None], diff, -jnp.inf))
+    cb = jnp.einsum("bnis,bnjs->bnij", Cc, Bc)  # (B,nc,i,j)
+    w = cb[..., None] * decay * dtc[:, :, None, :, :]  # (B,nc,i,j,nh)
+    y_intra = jnp.einsum("bnijh,bnjhd->bnihd", w, xc)
+
+    # chunk states: S_c = sum_j exp(total - cs_j) dt_j x_j B_j^T
+    sdecay = jnp.exp(total[:, :, None, :] - cs) * dtc  # (B,nc,Q,nh)
+    S_c = jnp.einsum("bnjh,bnjhd,bnjs->bnhds", sdecay, xc, Bc)
+
+    # inter-chunk recurrence over nc
+    def step(S_run, inputs):
+        S_chunk, tot = inputs  # (B,nh,hd,ds), (B,nh)
+        S_next = S_run * jnp.exp(tot)[:, :, None, None] + S_chunk
+        return S_next, S_run  # emit the state *entering* this chunk
+
+    S0 = jnp.zeros((Bb, nh, hd, ds), dtype=jnp.float32)
+    S_last, S_in = jax.lax.scan(
+        step,
+        S0,
+        (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(total, 1, 0)),
+    )
+    S_in = jnp.moveaxis(S_in, 0, 1)  # (B,nc,nh,hd,ds) state entering chunk
+
+    # inter-chunk contribution: y[i] += exp(cs_i) C_i . S_in
+    y_inter = jnp.einsum("bnis,bnhds,bnih->bnihd", Cc, S_in, jnp.exp(cs))
+    y = (y_intra + y_inter).reshape(Bb, S, nh, hd) + D[None, None, :, None] * xf
+    return y.astype(x.dtype), S_last
+
+
+def ssd_scan(x, dt, A, Bm, Cm, D, *, chunk: int, impl: str = "chunked"):
+    if impl == "ref":
+        from repro.kernels import ssd_scan_ref
+
+        return ssd_scan_ref.ssd_ref(x, dt, A, Bm, Cm, D)
+    if impl == "pallas":
+        from repro.kernels import ssd_scan_ops
+
+        return ssd_scan_ops.ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk)
+    return ssd_chunked(x, dt, A, Bm, Cm, D, chunk=chunk)
+
+
+def ssd_decode_step(state, x, dt, A, Bm, Cm, D):
+    """One-token SSD update. state (B,nh,hd,ds); x (B,nh,hd); dt (B,nh);
+    Bm/Cm (B,ds). Returns (y (B,nh,hd), new_state)."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A)  # (B,nh)
+    upd = jnp.einsum("bh,bhd,bs->bhds", dtf, xf, Bm.astype(jnp.float32))
+    state = state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhds,bs->bhd", state, Cm.astype(jnp.float32)) + D[None, :, None] * xf
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (the mamba short conv)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x, w, b):
+    """x (B,S,Ch), w (Ch,k), b (Ch,) -> causal depthwise conv."""
+    B, S, Ch = x.shape
+    k = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):  # k is tiny (4): unrolled taps beat conv_general on TPU
+        out = out + xp[:, i : i + S, :].astype(jnp.float32) * w[:, i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def conv_decode_step(conv_state, xt, w, b):
+    """conv_state (B,k-1,Ch) holds the previous inputs; xt (B,Ch)."""
+    k = w.shape[1]
+    full = jnp.concatenate([conv_state, xt[:, None, :]], axis=1)  # (B,k,Ch)
+    out = jnp.einsum("bkc,ck->bc", full.astype(jnp.float32), w.astype(jnp.float32))
+    out = (out + b.astype(jnp.float32)).astype(xt.dtype)
+    return out, full[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block
+# ---------------------------------------------------------------------------
+
+
+def mamba_params_init(key, cfg: ModelConfig, dtype):
+    """The input projection is stored as FOUR separate column blocks
+    (z | x | BC | dt) rather than one fused matrix: a fused (d, 10576)
+    output slices the z/x/B/C/dt segments across model-axis shard
+    boundaries, and GSPMD re-lays each slice with per-layer all-gathers
+    (~3.4 GB/layer on mamba2-2.7b train_4k - see EXPERIMENTS.md Perf-4).
+    Separate blocks keep every segment exactly shard-aligned. Same math,
+    same total parameter count; the short conv splits likewise (x and BC
+    channel groups)."""
+    ssm = cfg.ssm
+    d = cfg.d_model
+    di = ssm.d_inner(d)
+    nh = ssm.n_heads(d)
+    ds = ssm.d_state
+    ks = jax.random.split(key, 8)
+    return {
+        "in_z": dense_init(ks[0], d, di, dtype),
+        "in_x": dense_init(ks[1], d, di, dtype),
+        "in_bc": dense_init(ks[2], d, 2 * ds, dtype),
+        "in_dt": dense_init(ks[3], d, nh, dtype),
+        "conv_x_w": (jax.random.normal(ks[4], (di, ssm.d_conv)) * 0.1).astype(dtype),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_bc_w": (jax.random.normal(ks[5], (2 * ds, ssm.d_conv)) * 0.1).astype(dtype),
+        "conv_bc_b": jnp.zeros((2 * ds,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[6], di, d, dtype, scale=1.0 / np.sqrt(di)),
+    }
+
+
+def _mamba_split(p, x, cfg: ModelConfig):
+    ssm = cfg.ssm
+    d = cfg.d_model
+    di = ssm.d_inner(d)
+    ds = ssm.d_state
+    nh = ssm.n_heads(d)
+    z = x @ p["in_z"]
+    xc = x @ p["in_x"]
+    bc = x @ p["in_bc"]
+    dt = x @ p["in_dt"]
+    return z, xc, bc, dt, di, ds, nh
+
+
+def mamba_forward(p, x, cfg: ModelConfig, *, impl: str = "chunked"):
+    """Full-sequence Mamba-2 block. Returns (out, final_states)."""
+    ssm = cfg.ssm
+    B, S, _ = x.shape
+    z, xc, bc, dt, di, ds, nh = _mamba_split(p, x, cfg)
+    xc = jax.nn.silu(causal_conv1d(xc, p["conv_x_w"], p["conv_x_b"]))
+    bc = jax.nn.silu(causal_conv1d(bc, p["conv_bc_w"], p["conv_bc_b"]))
+    xin = xc.reshape(B, S, nh, ssm.head_dim)
+    Bm = bc[..., :ds]
+    Cm = bc[..., ds:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, S_last = ssd_scan(xin, dt, A, Bm, Cm, p["D"], chunk=ssm.chunk, impl=impl)
+    y = y.reshape(B, S, di)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["out_proj"], S_last
+
+
+def mamba_decode_forward(p, x, state, cfg: ModelConfig):
+    """One-token decode. state = {'conv_x', 'conv_bc', 'ssm'}."""
+    ssm = cfg.ssm
+    B = x.shape[0]
+    z, xc, bc, dt, di, ds, nh = _mamba_split(p, x[:, 0, :], cfg)
+    xc, conv_x = conv_decode_step(state["conv_x"], xc, p["conv_x_w"], p["conv_x_b"])
+    bc, conv_bc = conv_decode_step(state["conv_bc"], bc, p["conv_bc_w"], p["conv_bc_b"])
+    xc = jax.nn.silu(xc)
+    bc = jax.nn.silu(bc)
+    xin = xc.reshape(B, nh, ssm.head_dim)
+    Bm = bc[..., :ds]
+    Cm = bc[..., ds:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, ssm_state = ssd_decode_step(state["ssm"], xin, dt, A, Bm, Cm, p["D"])
+    y = y.reshape(B, di)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"conv_x": conv_x, "conv_bc": conv_bc, "ssm": ssm_state}
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype):
+    ssm = cfg.ssm
+    d = cfg.d_model
+    di = ssm.d_inner(d)
+    nh = ssm.n_heads(d)
+    return {
+        "conv_x": jnp.zeros((batch, ssm.d_conv - 1, di), dtype),
+        "conv_bc": jnp.zeros((batch, ssm.d_conv - 1, 2 * ssm.d_state), dtype),
+        "ssm": jnp.zeros((batch, nh, ssm.head_dim, ssm.d_state), jnp.float32),
+    }

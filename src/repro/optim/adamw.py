@@ -1,0 +1,78 @@
+"""AdamW with decoupled weight decay + global-norm clipping (from scratch;
+no optax in this environment). Moments are fp32 regardless of param dtype.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray  # int32 scalar
+    mu: PyTree
+    nu: PyTree
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], AdamWState]
+    update: Callable[[PyTree, AdamWState, PyTree], Tuple[PyTree, AdamWState, Dict]]
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw(
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def init(params: PyTree) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update(grads: PyTree, state: AdamWState, params: PyTree):
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9)) if grad_clip else 1.0
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m = b1 * m + (1.0 - b1) * g
+            v = b2 * v + (1.0 - b2) * g * g
+            mhat = m / c1
+            vhat = v / c2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        stats = {"grad_norm": gnorm, "lr": lr_t}
+        return new_p, AdamWState(step=step, mu=new_m, nu=new_v), stats
+
+    return Optimizer(init=init, update=update)

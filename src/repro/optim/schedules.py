@@ -1,0 +1,25 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    warmup_steps = max(1, warmup_steps)
+
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / warmup_steps
+        t = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return lr
+
+
+def constant(peak_lr: float):
+    def lr(step):
+        return jnp.full((), peak_lr, jnp.float32)
+
+    return lr

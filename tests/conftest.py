@@ -1,0 +1,35 @@
+"""Shared test helpers.
+
+NOTE: no XLA_FLAGS here - tests in the main process see 1 CPU device.
+Multi-device integration tests launch subprocesses with
+``--xla_force_host_platform_device_count`` via ``run_subprocess``.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 560) -> str:
+    """Run ``code`` in a fresh python with N fake CPU devices; returns stdout.
+    Raises on nonzero exit (assertion failures inside the child propagate)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env=env,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode}):\n--- stdout ---\n"
+            f"{proc.stdout[-4000:]}\n--- stderr ---\n{proc.stderr[-4000:]}"
+        )
+    return proc.stdout

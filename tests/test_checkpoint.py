@@ -1,0 +1,68 @@
+"""Checkpointing: durable roundtrip, async publish, GC, partner store."""
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer, PartnerStore
+
+
+def _state(v: float):
+    return {
+        "params": {"w": jnp.full((16, 16), v), "b": jnp.arange(4.0)},
+        "opt": {"mu": jnp.full((16, 16), v / 2)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, _state(1.5), meta={"n_comp": 4})
+    got = ck.restore(_state(0.0))
+    assert got is not None
+    step, state, meta = got
+    assert step == 5 and meta["n_comp"] == 4
+    assert float(state["params"]["w"][0, 0]) == 1.5
+
+
+def test_async_save_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save_async(1, _state(1.0))
+    ck.save_async(2, _state(2.0))
+    ck.wait()
+    step, state, _ = ck.restore(_state(0.0))
+    assert step == 2 and float(state["params"]["w"][0, 0]) == 2.0
+
+
+def test_gc_keeps_newest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _state(float(s)))
+    assert ck.list_steps() == [3, 4]
+
+
+def test_restore_specific_step(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=5)
+    for s in (1, 2, 3):
+        ck.save(s, _state(float(s)))
+    step, state, _ = ck.restore(_state(0.0), step=2)
+    assert step == 2 and float(state["params"]["w"][0, 0]) == 2.0
+
+
+def test_atomic_publish_no_partial(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(1.0))
+    names = os.listdir(str(tmp_path))
+    assert all(not n.startswith(".tmp") for n in names)
+
+
+def test_partner_store():
+    ps = PartnerStore()
+    ps.save(0, 7, _state(3.0), {"k": 1})
+    got = ps.restore(0, _state(0.0))
+    assert got is not None and got[0] == 7
+    assert float(got[1]["params"]["w"][0, 0]) == 3.0
+    assert ps.latest_step() == 7
+    ps.drop(0)
+    assert ps.restore(0, _state(0.0)) is None

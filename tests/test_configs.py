@@ -1,0 +1,86 @@
+"""Config registry + assigned-architecture invariants."""
+import pytest
+
+from repro.configs.base import SHAPES, shape_applicable, reduced
+from repro.configs.registry import ARCHS, get_arch, get_shape, all_cells
+
+EXPECTED = {
+    "command-r-35b": dict(L=40, d=8192, H=64, kv=8, ff=22528, V=256000),
+    "gemma3-12b": dict(L=48, d=3840, H=16, kv=8, ff=15360, V=262144),
+    "qwen2.5-3b": dict(L=36, d=2048, H=16, kv=2, ff=11008, V=151936),
+    "nemotron-4-15b": dict(L=32, d=6144, H=48, kv=8, ff=24576, V=256000),
+    "qwen2-vl-2b": dict(L=28, d=1536, H=12, kv=2, ff=8960, V=151936),
+    "phi3.5-moe-42b-a6.6b": dict(L=32, d=4096, H=32, kv=8, ff=6400, V=32064),
+    "mixtral-8x7b": dict(L=32, d=4096, H=32, kv=8, ff=14336, V=32000),
+    "mamba2-2.7b": dict(L=64, d=2560, H=0, kv=0, ff=0, V=50280),
+    "hymba-1.5b": dict(L=32, d=1600, H=25, kv=5, ff=5504, V=32001),
+    "seamless-m4t-medium": dict(L=12, d=1024, H=16, kv=16, ff=4096, V=256206),
+}
+
+# published sizes the param-count formula must land near (absolute, in B)
+PARAM_BOUNDS = {
+    "mixtral-8x7b": (45.0, 48.5),
+    "phi3.5-moe-42b-a6.6b": (40.0, 43.5),
+    "mamba2-2.7b": (2.5, 2.9),
+    "qwen2.5-3b": (2.8, 3.4),
+    "gemma3-12b": (11.0, 12.8),
+}
+
+
+def test_all_archs_present():
+    assert len(ARCHS) == 10
+
+
+@pytest.mark.parametrize("name", list(EXPECTED))
+def test_exact_assigned_config(name):
+    cfg = get_arch(name)
+    e = EXPECTED[name]
+    assert cfg.n_layers == e["L"]
+    assert cfg.d_model == e["d"]
+    assert cfg.n_heads == e["H"]
+    assert cfg.n_kv_heads == e["kv"]
+    assert cfg.d_ff == e["ff"]
+    assert cfg.vocab_size == e["V"]
+
+
+@pytest.mark.parametrize("name,bounds", list(PARAM_BOUNDS.items()))
+def test_param_counts_near_published(name, bounds):
+    count = get_arch(name).param_count() / 1e9
+    assert bounds[0] <= count <= bounds[1], count
+
+
+def test_moe_active_params():
+    phi = get_arch("phi3.5-moe-42b-a6.6b")
+    assert 6.0e9 < phi.active_param_count() < 7.3e9  # "a6.6b"
+
+
+def test_cell_count_is_40():
+    cells = list(all_cells())
+    assert len(cells) == 40
+    skipped = [c for c in cells if not c[2]]
+    # 6 pure-full-attention archs skip long_500k
+    assert len(skipped) == 6
+    assert all(s[1].name == "long_500k" for s in skipped)
+
+
+def test_long_context_archs_run_long_500k():
+    for name in ("gemma3-12b", "mixtral-8x7b", "mamba2-2.7b", "hymba-1.5b"):
+        ok, _ = shape_applicable(get_arch(name), get_shape("long_500k"))
+        assert ok, name
+
+
+def test_reduced_configs_are_small_same_family():
+    for name, cfg in ARCHS.items():
+        r = reduced(cfg)
+        assert r.family == cfg.family
+        assert r.d_model <= 64 and r.vocab_size <= 256
+        if cfg.moe:
+            assert r.moe and r.moe.n_experts <= 4
+        if cfg.ssm:
+            assert r.ssm and r.ssm.d_state <= 16
+
+
+def test_padded_vocab_divides_model_axis():
+    for cfg in ARCHS.values():
+        assert cfg.padded_vocab() % 16 == 0
+        assert cfg.padded_vocab() >= cfg.vocab_size

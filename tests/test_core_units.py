@@ -1,0 +1,225 @@
+"""Unit tests: control plane, recovery logs, MTTI model, fault injector,
+state transfer, elastic helpers, optimizer, schedules, compression,
+data pipeline determinism."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import smoke_config
+from repro.core.control_plane import (
+    CommunicatorRevoked,
+    ControlPlane,
+    ProcessFailed,
+)
+from repro.core.elastic import rebalance_batch
+from repro.core.fault_injector import FaultInjector
+from repro.core.mtti import (
+    daly_interval,
+    efficiency,
+    expected_failures_to_interruption,
+    mtti_montecarlo,
+)
+from repro.core.recovery import ReplayPlan, StepLog, StepRecord, min_completed_step, replay_plan
+from repro.core.replication import ReplicaTopology, WorldState
+from repro.core.state_transfer import HostState, clone_state
+from repro.data.pipeline import TokenPipeline
+from repro.optim.adamw import adamw
+from repro.optim.compression import roundtrip
+from repro.optim.schedules import warmup_cosine
+
+
+# ---------------------------------------------------------------------------
+# control plane (ULFM semantics)
+# ---------------------------------------------------------------------------
+
+
+def test_control_plane_revoke_propagates():
+    cp = ControlPlane(heartbeat_timeout=1e9)
+    cp.check(0)  # fine
+    cp.report_failure(3)
+    with pytest.raises(ProcessFailed):
+        cp.check(0)
+    gen = cp.revoke()
+    with pytest.raises(CommunicatorRevoked):
+        cp.check(0)
+    failed = cp.agree()
+    assert failed == {3}
+    cp.shrink_complete(failed)
+    cp.check(gen)  # new generation dispatches again
+
+
+def test_heartbeat_timeout_detection():
+    t = [0.0]
+    cp = ControlPlane(heartbeat_timeout=5.0, clock=lambda: t[0])
+    cp.register(0)
+    cp.register(1)
+    t[0] = 3.0
+    cp.heartbeat(0)
+    t[0] = 7.0  # slice 1 last beat at 0 -> expired
+    assert cp.detect() == {1}
+
+
+# ---------------------------------------------------------------------------
+# recovery logs
+# ---------------------------------------------------------------------------
+
+
+def _log(role, upto):
+    log = StepLog(role)
+    for s in range(upto + 1):
+        log.record(StepRecord(s, s * 10, s * 10 + 10, s))
+    return log
+
+
+def test_min_completed_and_replay():
+    logs = [_log(0, 5), _log(1, 5), _log(2, 4)]  # role 2 lagging
+    assert min_completed_step(logs) == 4
+    plan = replay_plan(logs, target_step=6)
+    assert plan.start_step == 5
+    # roles that already applied step 5 must suppress the duplicate
+    assert plan.skip == {0: [5], 1: [5]}
+
+
+def test_replay_plan_restart_path():
+    logs = [_log(0, 9)]
+    plan = replay_plan(logs, target_step=10, restored_step=6)
+    assert plan.start_step == 7 and not plan.skip
+
+
+def test_log_trim():
+    log = _log(0, 9)
+    log.trim(5)
+    assert min(r.step for r in log.records) == 6
+
+
+# ---------------------------------------------------------------------------
+# MTTI model
+# ---------------------------------------------------------------------------
+
+
+def test_mtti_increases_with_replication():
+    """The paper's Fig 9(b): MTTI grows with replication degree."""
+    base = mtti_montecarlo(ReplicaTopology.create(16, 0.0), 100.0, trials=400)
+    half = mtti_montecarlo(ReplicaTopology.create(16, 0.5), 100.0, trials=400)
+    full = mtti_montecarlo(ReplicaTopology.create(16, 1.0), 100.0, trials=400)
+    assert base < half < full
+    assert full > 2.5 * base  # full replication multiplies MTTI
+
+
+def test_full_replication_failure_count_birthday():
+    """With n mirrored pairs, E[#failures to interruption] ~ sqrt(pi*n/2)+...
+    (Ferreira et al.) - must exceed 2 and grow with n."""
+    e8 = expected_failures_to_interruption(ReplicaTopology.create(8, 1.0), 500)
+    e32 = expected_failures_to_interruption(ReplicaTopology.create(32, 1.0), 500)
+    assert 2.0 < e8 < e32
+
+
+def test_daly_interval_monotone():
+    assert daly_interval(100.0, 1.0) < daly_interval(10000.0, 1.0)
+
+
+def test_efficiency_report_fields():
+    out = efficiency(ReplicaTopology.create(8, 0.5), 50.0, 1.0, 2.0, trials=200)
+    assert 0 < out["efficiency"] <= 1
+    assert out["resource_factor"] == pytest.approx(
+        ReplicaTopology.create(8, 0.5).n_comp / 8
+    )
+
+
+def test_fault_injector_deterministic():
+    a = FaultInjector(8, scale=10, seed=42).schedule(100.0, list(range(8)))
+    b = FaultInjector(8, scale=10, seed=42).schedule(100.0, list(range(8)))
+    assert a == b and len(a) > 0
+
+
+# ---------------------------------------------------------------------------
+# state transfer (3-phase clone)
+# ---------------------------------------------------------------------------
+
+
+def test_clone_state_phases_and_verify():
+    params = {"w": jnp.ones((32, 32)), "b": jnp.zeros((32,))}
+    opt = {"mu": jnp.zeros((32, 32))}
+    host = HostState(step=7, rng_seed=1, data_cursor=70, collective_seq=7, generation=0)
+    p2, o2, h2, rep = clone_state(params, opt, host)
+    assert rep.verified
+    assert set(rep.bytes_by_phase) == {
+        "data_segment(params)",
+        "heap_segment(optimizer)",
+        "stack_segment(host)",
+    }
+    assert h2.step == 7
+    assert float(jnp.max(jnp.abs(p2["w"] - params["w"]))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# optimizer / schedules / compression
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_converges_quadratic():
+    opt = adamw(0.1, weight_decay=0.0, grad_clip=0.0)
+    params = {"x": jnp.asarray(5.0)}
+    state = opt.init(params)
+    for _ in range(200):
+        g = {"x": 2 * params["x"]}
+        params, state, _ = opt.update(g, state, params)
+    assert abs(float(params["x"])) < 1e-2
+
+
+def test_grad_clip_bounds_update():
+    opt = adamw(1.0, grad_clip=1.0, weight_decay=0.0)
+    p = {"x": jnp.zeros(4)}
+    s = opt.init(p)
+    _, _, stats = opt.update({"x": jnp.full(4, 1e6)}, s, p)
+    assert float(stats["grad_norm"]) > 1e5  # reported raw
+
+
+def test_warmup_cosine_shape():
+    lr = warmup_cosine(1e-3, 10, 100)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert float(lr(jnp.asarray(10))) == pytest.approx(1e-3, rel=1e-3)
+    assert float(lr(jnp.asarray(100))) < 2e-4
+
+
+@pytest.mark.parametrize("codec", ["none", "bf16", "int8"])
+def test_compression_roundtrip_error(codec):
+    g = {"w": jnp.linspace(-1, 1, 128)}
+    out = roundtrip(g, codec)
+    err = float(jnp.max(jnp.abs(out["w"].astype(jnp.float32) - g["w"])))
+    bound = {"none": 0.0, "bf16": 6e-3, "int8": 1.2e-2}[codec]
+    assert err <= bound
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_deterministic_and_seekable():
+    cfg = smoke_config("qwen2.5-3b")
+    p = TokenPipeline(cfg, seq_len=32, per_slice_batch=2, seed=7)
+    a = p.shard(5, 1)["tokens"]
+    b = p.shard(5, 1)["tokens"]
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, p.shard(6, 1)["tokens"])
+    assert not np.array_equal(a, p.shard(5, 2)["tokens"])
+
+
+def test_pipeline_mirrors_replicas():
+    cfg = smoke_config("qwen2.5-3b")
+    world = WorldState.create(4, 1.0)  # roles: cmp {0,1}, rep {2<-0, 3<-1}
+    p = TokenPipeline(cfg, seq_len=16, per_slice_batch=2, seed=0)
+    g = p.global_batch(3, world)["tokens"].reshape(4, 2, 16)
+    order = world.roles_in_mesh_order()
+    by_role = {r: g[i] for i, r in enumerate(order)}
+    assert np.array_equal(by_role[0], by_role[2])
+    assert np.array_equal(by_role[1], by_role[3])
+    assert not np.array_equal(by_role[0], by_role[1])
+
+
+def test_rebalance_batch():
+    per, pad = rebalance_batch(256, 13)
+    assert per * 13 >= 256 and pad == per * 13 - 256

@@ -1,0 +1,157 @@
+"""Per-kernel validation: shape/dtype sweeps + hypothesis property tests
+against the pure-jnp ref oracles (kernels run in interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention_ops import flash_attention
+from repro.kernels.flash_attention_ref import flash_attention_ref
+from repro.kernels.rmsnorm_ops import rmsnorm
+from repro.kernels.rmsnorm_ref import rmsnorm_ref
+from repro.kernels.ssd_scan_ops import ssd_scan
+from repro.kernels.ssd_scan_ref import ssd_ref
+from repro.models.ssd import ssd_chunked
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # B, S, H, KV, hd, causal, window, softcap, dtype
+    (2, 256, 4, 2, 64, True, 0, 0.0, jnp.float32),
+    (1, 128, 4, 4, 32, True, 0, 50.0, jnp.float32),
+    (2, 256, 8, 2, 64, True, 64, 0.0, jnp.float32),
+    (1, 256, 4, 2, 64, False, 0, 0.0, jnp.float32),
+    (1, 200, 4, 2, 64, True, 0, 0.0, jnp.float32),  # non-multiple of block
+    (1, 128, 2, 1, 128, True, 32, 0.0, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd,causal,window,cap,dtype", ATTN_CASES)
+def test_flash_attention_vs_ref(B, S, H, KV, hd, causal, window, cap, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, softcap=cap)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window, softcap=cap)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32))))
+    assert err < tol, err
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s_blocks=st.integers(1, 4),
+    heads=st.sampled_from([(4, 1), (4, 2), (4, 4), (8, 2)]),
+    hd=st.sampled_from([16, 32, 64]),
+    causal=st.booleans(),
+)
+def test_flash_attention_property(s_blocks, heads, hd, causal):
+    H, KV = heads
+    S = 64 * s_blocks
+    ks = jax.random.split(jax.random.PRNGKey(S * H + hd), 3)
+    q = jax.random.normal(ks[0], (1, S, H, hd))
+    k = jax.random.normal(ks[1], (1, S, KV, hd))
+    v = jax.random.normal(ks[2], (1, S, KV, hd))
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    assert float(jnp.max(jnp.abs(out - ref))) < 2e-5
+    # softmax convexity: outputs lie within V's row-wise range
+    vmin, vmax = float(jnp.min(v)), float(jnp.max(v))
+    assert float(jnp.min(out)) >= vmin - 1e-4
+    assert float(jnp.max(out)) <= vmax + 1e-4
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    # B, S, nh, hd, ds, chunk
+    (2, 128, 8, 32, 64, 32),
+    (1, 96, 4, 16, 32, 32),
+    (2, 64, 16, 64, 128, 16),
+    (1, 100, 4, 16, 32, 32),  # padding path
+]
+
+
+def _ssd_inputs(key, B, S, nh, hd, ds):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, nh, hd))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, ds)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, S, ds)) * 0.5
+    D = jnp.ones((nh,)) * 0.5
+    return x, dt, A, Bm, Cm, D
+
+
+@pytest.mark.parametrize("B,S,nh,hd,ds,chunk", SSD_CASES)
+def test_ssd_kernel_vs_ref(B, S, nh, hd, ds, chunk):
+    x, dt, A, Bm, Cm, D = _ssd_inputs(jax.random.PRNGKey(1), B, S, nh, hd, ds)
+    y_ref, s_ref = ssd_ref(x, dt, A, Bm, Cm, D)
+    y_pal, s_pal = ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk, h_blk=4)
+    assert float(jnp.max(jnp.abs(y_ref - y_pal))) < 2e-3
+    assert float(jnp.max(jnp.abs(s_ref - s_pal))) < 2e-3
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    chunks=st.integers(2, 4),
+    nh=st.sampled_from([4, 8]),
+    ds=st.sampled_from([16, 32]),
+)
+def test_ssd_chunked_matches_sequential(chunks, nh, ds):
+    """Property: the chunked (parallel) SSD equals the sequential
+    recurrence for any chunking - the state-space duality itself."""
+    S = 32 * chunks
+    x, dt, A, Bm, Cm, D = _ssd_inputs(jax.random.PRNGKey(S + nh), 1, S, nh, 16, ds)
+    y_ref, s_ref = ssd_ref(x, dt, A, Bm, Cm, D)
+    y_chk, s_chk = ssd_chunked(x, dt, A, Bm, Cm, D, chunk=32)
+    assert float(jnp.max(jnp.abs(y_ref - y_chk))) < 2e-3
+    assert float(jnp.max(jnp.abs(s_ref - s_chk))) < 2e-3
+
+
+def test_ssd_decay_monotonicity():
+    """With very negative A (fast decay), early tokens must not influence
+    late outputs: y depends only on the recent past."""
+    B, S, nh, hd, ds = 1, 64, 2, 8, 8
+    x, dt, A, Bm, Cm, D = _ssd_inputs(jax.random.PRNGKey(9), B, S, nh, hd, ds)
+    A = jnp.full((nh,), -50.0)  # near-total decay per step
+    y1, _ = ssd_ref(x, dt, A, Bm, Cm, D)
+    x2 = x.at[:, 0].set(100.0)  # perturb the distant past
+    y2, _ = ssd_ref(x2, dt, A, Bm, Cm, D)
+    assert float(jnp.max(jnp.abs(y1[:, -1] - y2[:, -1]))) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(4, 37, 256), (2, 128), (1, 5, 7, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_vs_ref(shape, dtype):
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, shape, dtype)
+    s = jax.random.normal(key, (shape[-1],)) * 0.1
+    out = rmsnorm(x, s)
+    ref = rmsnorm_ref(x, s)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)))) < tol
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.integers(1, 300), d=st.sampled_from([128, 256]))
+def test_rmsnorm_scale_invariance(rows, d):
+    """Property: rmsnorm(c*x) == rmsnorm(x) for c > 0."""
+    key = jax.random.PRNGKey(rows * d)
+    x = jax.random.normal(key, (rows, d))
+    s = jnp.zeros((d,))
+    a = rmsnorm(x, s)
+    b = rmsnorm(3.7 * x, s)
+    assert float(jnp.max(jnp.abs(a - b))) < 1e-4

@@ -1,0 +1,125 @@
+"""Layer-level unit + property tests: attention impl agreement, RoPE,
+M-RoPE, MoE dispatch, cross-entropy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MoEConfig
+from repro.configs.registry import smoke_config
+from repro.models import layers as L
+
+
+def _qkv(key, B, S, H, KV, hd):
+    ks = jax.random.split(key, 3)
+    return (
+        jax.random.normal(ks[0], (B, S, H, hd)),
+        jax.random.normal(ks[1], (B, S, KV, hd)),
+        jax.random.normal(ks[2], (B, S, KV, hd)),
+    )
+
+
+def test_chunked_matches_naive_causal():
+    q, k, v = _qkv(jax.random.PRNGKey(0), 2, 128, 4, 2, 32)
+    a = L.attn_naive(q, k, v, causal=True)
+    b = L.attn_chunked(q, k, v, causal=True, block_q=32, block_k=32)
+    assert float(jnp.max(jnp.abs(a - b))) < 2e-5
+
+
+def test_banded_matches_naive_sliding():
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 256, 4, 2, 32)
+    a = L.attn_naive(q, k, v, causal=True, window=64)
+    b = L.attn_banded(q, k, v, window=64, block_q=64)
+    assert float(jnp.max(jnp.abs(a - b))) < 2e-5
+
+
+def test_decode_matches_naive_last_row():
+    B, S, H, KV, hd = 2, 64, 4, 2, 32
+    q, k, v = _qkv(jax.random.PRNGKey(2), B, S, H, KV, hd)
+    full = L.attn_naive(q, k, v, causal=True)
+    out = L.attn_decode(q[:, -1:], k, v, jnp.int32(S - 1), block_k=16)
+    assert float(jnp.max(jnp.abs(out[:, 0] - full[:, -1]))) < 2e-5
+
+
+@settings(max_examples=8, deadline=None)
+@given(window=st.sampled_from([16, 32, 64]), s_mult=st.integers(2, 4))
+def test_window_equals_full_when_wide(window, s_mult):
+    """Property: a window >= S is exactly full causal attention."""
+    S = 16 * s_mult
+    q, k, v = _qkv(jax.random.PRNGKey(window + S), 1, S, 2, 2, 16)
+    a = L.attn_naive(q, k, v, causal=True, window=0)
+    b = L.attn_naive(q, k, v, causal=True, window=max(window, S))
+    if max(window, S) >= S:
+        assert float(jnp.max(jnp.abs(a - b))) < 1e-6
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE scores depend only on relative positions: shifting all positions
+    by a constant leaves q.k products unchanged."""
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (1, 8, 2, 32))
+    p0 = jnp.arange(8)
+    q0 = L.apply_rope(x, p0, 10000.0)
+    k0 = L.apply_rope(x, p0, 10000.0)
+    s0 = jnp.einsum("bqhd,bkhd->bhqk", q0, k0)
+    q1 = L.apply_rope(x, p0 + 100, 10000.0)
+    k1 = L.apply_rope(x, p0 + 100, 10000.0)
+    s1 = jnp.einsum("bqhd,bkhd->bhqk", q1, k1)
+    assert float(jnp.max(jnp.abs(s0 - s1))) < 1e-3
+
+
+def test_mrope_positions_layout():
+    pos = L.mrope_positions(2, 20, 16)  # 4x4 grid prefix + 4 text
+    t, h, w = np.asarray(pos)[:, 0, :], np.asarray(pos)[1, 0, :], np.asarray(pos)[2, 0, :]
+    pos = np.asarray(pos)
+    assert (pos[0, 0, :16] == 0).all()  # temporal frozen over the image
+    assert pos[2, 0, 1] == 1  # width walks the grid
+    assert (np.diff(pos[0, 0, 16:]) == 1).all()  # text advances t
+
+
+def test_softmax_xent_matches_manual():
+    key = jax.random.PRNGKey(4)
+    logits = jax.random.normal(key, (3, 5, 17))
+    labels = jax.random.randint(key, (3, 5), 0, 17)
+    ours = L.softmax_xent(logits, labels)
+    ref = -jnp.mean(
+        jnp.take_along_axis(jax.nn.log_softmax(logits), labels[..., None], axis=-1)
+    )
+    assert float(jnp.abs(ours - ref)) < 1e-5
+
+
+def test_moe_forward_routes_and_balances():
+    cfg = smoke_config("mixtral-8x7b")
+    key = jax.random.PRNGKey(5)
+    p = L.moe_params_init(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (2, 16, cfg.d_model))
+    out, aux = L.moe_forward(p, x, cfg)
+    assert out.shape == x.shape
+    assert float(aux) > 0  # load-balance loss active
+    # zero input -> zero expert output (router softmax still fires but
+    # experts see zeros and swiglu(0)=0)
+    out0, _ = L.moe_forward(p, jnp.zeros_like(x), cfg)
+    assert float(jnp.max(jnp.abs(out0))) < 1e-5
+
+
+def test_moe_capacity_drops_overflow():
+    cfg = smoke_config("phi3.5-moe-42b-a6.6b")
+    # capacity factor so tiny that most tokens drop -> output much smaller
+    import dataclasses
+    tight = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.01)
+    )
+    key = jax.random.PRNGKey(6)
+    p = L.moe_params_init(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (2, 64, cfg.d_model))
+    full, _ = L.moe_forward(p, x, cfg)
+    dropped, _ = L.moe_forward(p, x, tight)
+    assert float(jnp.mean(jnp.abs(dropped))) < float(jnp.mean(jnp.abs(full)))
+
+
+def test_gqa_repeat_kv():
+    k = jnp.arange(2 * 4 * 2 * 3, dtype=jnp.float32).reshape(2, 4, 2, 3)
+    r = L.repeat_kv(k, 2)
+    assert r.shape == (2, 4, 4, 3)
+    assert jnp.array_equal(r[:, :, 0], r[:, :, 1])

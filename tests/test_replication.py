@@ -1,0 +1,102 @@
+"""Property tests for the replica topology + world repair (the paper's
+communicator algebra). These invariants are what keep the
+axis_index_groups handed to XLA well-formed through arbitrary failure
+sequences."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.replication import ReplicaTopology, WorldState, split_comp_rep
+
+PAPER_RDEGREES = [0.0, 0.0625, 0.125, 0.25, 0.5, 1.0]
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 32, 512])
+@pytest.mark.parametrize("r", PAPER_RDEGREES)
+def test_topology_wellformed(n, r):
+    topo = ReplicaTopology.create(n, r)
+    topo.validate()
+    assert topo.n_slices == n
+    if r == 0:
+        assert topo.n_rep == 0
+    if r == 1.0 and n % 2 == 0:
+        assert topo.n_comp == topo.n_rep == n // 2
+
+
+@pytest.mark.parametrize("n,r", [(16, 0.25), (16, 1.0), (8, 0.5)])
+def test_six_communicators(n, r):
+    topo = ReplicaTopology.create(n, r)
+    # COMM_CMP + inert group partitions the axis
+    flat = sorted(i for g in topo.comm_cmp_groups() for i in g)
+    assert flat == list(range(n))
+    # intercomm pairs bridge cmp -> its replica
+    for c, rr in topo.intercomm_perm():
+        assert topo.replica_of(rr) == c
+        assert topo.partner_of(c) == rr
+    # CMP_NO_REP = computational ranks without replicas
+    no_rep = topo.cmp_no_rep()
+    assert all(topo.partner_of(c) is None for c in no_rep)
+    # mirror source maps replicas onto their partner's shard
+    src = topo.mirror_source()
+    assert src[: topo.n_comp] == list(range(topo.n_comp))
+    for j, c in enumerate(topo.replica_map):
+        assert src[topo.n_comp + j] == c
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.integers(2, 24),
+    r=st.sampled_from(PAPER_RDEGREES),
+    kills=st.lists(st.integers(0, 23), min_size=1, max_size=6),
+)
+def test_repair_invariants(n, r, kills):
+    """After ANY failure sequence: groups still partition the live world,
+    replica maps stay injective and in-range, dead slices never appear."""
+    world = WorldState.create(n, r)
+    for k in kills:
+        victim = k % world.n_physical
+        world, report = world.repair([victim])
+        topo = world.topo
+        if topo.n_comp == 0:
+            return  # whole computational capacity lost - nothing to check
+        topo.validate()
+        # assignment references only live physicals
+        assert all(p not in world.dead for p in world.assignment)
+        assert len(set(world.assignment)) == len(world.assignment)
+        # mesh-space groups partition the shrunk mesh
+        groups = world.physical_groups(topo.comm_cmp_groups())
+        flat = sorted(i for g in groups for i in g)
+        assert flat == list(range(world.n_live))
+        # generation strictly increases
+        assert world.generation >= 1
+
+
+def test_promote_moves_replica_into_role():
+    world = WorldState.create(4, 1.0)  # cmp {0,1}, reps {2:0, 3:1}
+    new, rep = world.repair([0])
+    assert rep["promoted"] == [(0, 2)]
+    assert new.topo.n_comp == 2
+    assert new.assignment[0] == 2  # replica's physical now plays cmp role 0
+    assert new.topo.replica_map == (1,)  # only cmp 1 keeps a replica
+
+
+def test_double_failure_of_pair_is_interruption():
+    world = WorldState.create(4, 1.0)
+    world, rep1 = world.repair([0])  # promote 2 into role 0
+    world, rep2 = world.repair([2])  # the promoted slice dies too
+    assert rep2["lost_cmp"] == [0]
+    assert world.topo.n_comp == 1  # shrunk
+
+
+def test_replica_failure_is_dropped_silently():
+    world = WorldState.create(4, 0.5)  # nComp=3? -> check
+    topo = world.topo
+    rep_phys = world.assignment[topo.n_comp]
+    world, rep = world.repair([rep_phys])
+    assert rep["dropped_reps"] and not rep["lost_cmp"] and not rep["promoted"]
+
+
+@pytest.mark.parametrize("n,r", [(16, 0.25), (12, 0.5)])
+def test_paper_rdegree_split(n, r):
+    n_comp, n_rep = split_comp_rep(n, r)
+    assert n_comp + n_rep == n
+    assert abs(n_rep / n_comp - r) < 0.25  # integer rounding tolerance

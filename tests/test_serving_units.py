@@ -1,0 +1,77 @@
+"""Serving-engine unit logic (host-side, no devices needed): cache row
+repacking across failover, token mirroring, and decode-cache layouts."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import smoke_config
+from repro.core.replication import WorldState
+from repro.models import model as M
+
+
+def test_repack_moves_promoted_cache_rows():
+    """After promote, the new mesh order must draw each role's cache rows
+    from the physical slice that now owns the role (replica keeps its own
+    rows). Mirrors ServeEngine._failover's repack."""
+    old = WorldState.create(4, 1.0)  # cmp {0,1} reps {2<-0, 3<-1}
+    new, rep = old.repair([0])  # phys 2 promoted into role 0
+    assert rep["promoted"] == [(0, 2)]
+    b = 2  # per-slice batch
+    # cache arr: (L=1, B_total=8, F=1), row value = physical slice id
+    arr = np.repeat(np.arange(4), b).reshape(1, 8, 1).astype(np.float32)
+
+    old_pos = old.mesh_position()
+    new_order = new.roles_in_mesh_order()
+    rows = []
+    for r in new_order:
+        phys = new.assignment[r]
+        src = old_pos[phys]
+        rows.append(arr[:, src * b : (src + 1) * b])
+    packed = np.concatenate(rows, axis=1)
+    # live physicals sorted: [1, 2, 3] -> roles [1, 0, rep(1)]
+    live = new.live_physicals()
+    assert live == [1, 2, 3]
+    for i, phys in enumerate(live):
+        assert (packed[:, i * b : (i + 1) * b] == phys).all()
+
+
+def test_mirror_source_after_repair():
+    w = WorldState.create(6, 0.5)  # 4 cmp + 2 rep
+    w2, _ = w.repair([0])
+    src = w2.topo.mirror_source()
+    # every replica consumes a live computational shard
+    for j, c in enumerate(w2.topo.replica_map):
+        assert src[w2.topo.n_comp + j] == c < w2.topo.n_comp
+
+
+@pytest.mark.parametrize("name", ["gemma3-12b", "mamba2-2.7b", "seamless-m4t-medium"])
+def test_cache_layout_by_family(name):
+    cfg = smoke_config(name)
+    cache = M.init_cache(cfg, batch=3, max_len=32, enc_len=8, dtype=jnp.float32)
+    leaves = jax.tree.leaves(cache)
+    assert all(l.dtype in (jnp.float32, jnp.int32) for l in leaves)
+    if name == "mamba2-2.7b":
+        assert set(cache["blocks"].keys()) == {"conv_x", "conv_bc", "ssm"}
+        L, B = cache["blocks"]["ssm"].shape[:2]
+        assert (L, B) == (cfg.n_layers, 3)
+    if name == "seamless-m4t-medium":
+        assert "cross" in cache
+        assert cache["cross"]["k"].shape[2] == 8  # enc_len
+    if name == "gemma3-12b":
+        # grouped: local windows are capped at the window size
+        loc = cache["groups"]["local"]["k"]
+        glob = cache["groups"]["global"]["k"]
+        assert loc.shape[3] == min(cfg.window, 32)
+        assert glob.shape[2] == 32
+
+
+def test_decode_cache_window_ring_buffer():
+    """A sliding-window ring cache must match full attention while pos <
+    window (prefix fits), by construction of the modular slot."""
+    cfg = smoke_config("mixtral-8x7b")
+    assert cfg.window == 32
+    cache = M.init_cache(cfg, 2, max_len=32, dtype=jnp.float32)
+    k = cache["blocks"]["k"]
+    assert k.shape[2] == 32  # ring size = window

@@ -1,0 +1,143 @@
+"""Launch-layer units: input specs, HLO collective parsing, sharding rules,
+and (when present) the dry-run artifacts themselves."""
+import glob
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS, get_arch
+from repro.core.replication import WorldState
+from repro.dist.sharding import param_spec, cache_manual_specs
+from repro.launch.specs import per_slice_batch, seq_layout
+from repro.models import model as M
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+
+def test_parse_collectives():
+    from repro.launch import hlo_analysis as DR
+
+    hlo = """
+  %ar = f32[1024,512]{1,0} all-reduce(f32[1024,512]{1,0} %p0), replica_groups={}
+  %ag.1 = bf16[256,64]{1,0} all-gather(bf16[16,64]{1,0} %p1), dimensions={0}
+  %cp = f32[8]{0} collective-permute(f32[8]{0} %p2), source_target_pairs={{0,1}}
+  %rs = f32[4,4]{1,0} reduce-scatter(f32[64,4]{1,0} %p3), dimensions={0}
+  %a2a = s8[32,32]{1,0} all-to-all(s8[32,32]{1,0} %p4), dimensions={0}
+  %ars = f32[2,2]{1,0} all-reduce-start(f32[2,2]{1,0} %p5)
+"""
+    out = DR.parse_collectives(hlo)
+    assert out["all-reduce"]["count"] == 2
+    assert out["all-reduce"]["bytes"] == 1024 * 512 * 4 + 2 * 2 * 4
+    assert out["all-gather"]["bytes"] == 256 * 64 * 2  # result bytes
+    assert out["reduce-scatter"]["bytes"] == 64 * 4 * 4  # operand bytes
+    assert out["collective-permute"]["count"] == 1
+    assert out["all-to-all"]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list(ARCHS))
+def test_param_specs_divisible_everywhere(name):
+    """Every parameter of every FULL config must receive a jit-legal
+    sharding on a 16-way model axis (the dry-run's hard requirement)."""
+    cfg = get_arch(name)
+    pshape = jax.eval_shape(lambda: M.init(jax.random.PRNGKey(0), cfg))
+    flat, _ = jax.tree_util.tree_flatten_with_path(pshape)
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        spec = param_spec(path, leaf.shape, cfg, 16)
+        for dim, s in zip(leaf.shape, tuple(spec)):
+            names = s if isinstance(s, tuple) else ((s,) if s else ())
+            if "model" in names:
+                assert dim % 16 == 0, (path, leaf.shape, spec)
+
+
+def test_cache_manual_specs_grouped():
+    cfg = get_arch("gemma3-12b")
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, 16, max_len=2048, dtype=jnp.bfloat16)
+    )
+    specs = cache_manual_specs(cache, "data")
+    flat, _ = jax.tree_util.tree_flatten_with_path(specs)
+    for kp, spec in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        # grouped local caches: (G, 5, B, S, KV, hd) -> batch at index 2
+        if "local" in path:
+            assert tuple(spec) == (None, None, "data", None, None, None), path
+        elif path.endswith(("k", "v")):
+            assert tuple(spec)[-4] == "data", (path, spec)
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+
+def test_per_slice_batch_rules():
+    w16 = WorldState.create(16, 0.0)
+    assert per_slice_batch(SHAPES["train_4k"], w16) == (16, True)
+    assert per_slice_batch(SHAPES["decode_32k"], w16) == (8, True)
+    assert per_slice_batch(SHAPES["long_500k"], w16) == (1, False)  # replicate
+    w_r = WorldState.create(16, 1.0)  # 8 comp
+    per, shard = per_slice_batch(SHAPES["prefill_32k"], w_r)
+    assert shard and per == 4
+
+
+def test_seq_layouts():
+    vlm = get_arch("qwen2-vl-2b")
+    lay = seq_layout(vlm, SHAPES["train_4k"])
+    assert lay["text"] + lay["patches"] == 4096
+    enc = get_arch("seamless-m4t-medium")
+    lay = seq_layout(enc, SHAPES["train_4k"])
+    assert lay["text"] == lay["frames"] == 2048
+
+
+# ---------------------------------------------------------------------------
+# dry-run artifacts (when the sweep has produced them)
+# ---------------------------------------------------------------------------
+
+_DRY = sorted(
+    glob.glob(os.path.join(os.path.dirname(__file__), "..", "runs", "dryrun*", "*.json"))
+)
+
+
+@pytest.mark.skipif(not _DRY, reason="no dry-run artifacts present")
+def test_dryrun_artifacts_wellformed():
+    ok = fail = skip = 0
+    for path in _DRY:
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("skipped"):
+            skip += 1
+            assert "full-attention" in rec["skip_reason"]
+            continue
+        if not rec.get("ok"):
+            fail += 1
+            continue
+        ok += 1
+        rf = rec["roofline"]
+        assert rf["compute_s"] >= 0 and rf["memory_s"] > 0
+        assert rf["dominant"] in ("compute_s", "memory_s", "collective_s")
+    assert ok > 0
+    # the latest sweep must have no failures (old sweeps may retain some)
+    latest = [p for p in _DRY if "dryrun_final" in p]
+    if latest:
+        bad = []
+        for p in latest:
+            with open(p) as f:
+                rec = json.load(f)
+            if not (rec.get("ok") or rec.get("skipped")):
+                bad.append(os.path.basename(p))
+        assert not bad, bad
