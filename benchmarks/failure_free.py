@@ -19,6 +19,7 @@ PAPER_RDEGREES = [0.0, 0.0625, 0.125, 0.25, 0.5, 1.0]
 _CHILD = """
 import os, sys, time, json
 import jax, numpy as np, jax.numpy as jnp
+from repro.compat import set_mesh
 from repro.configs.base import ReplicationConfig, TrainConfig
 from repro.configs.registry import smoke_config
 from repro.core.replication import WorldState
@@ -30,6 +31,8 @@ from repro.optim.schedules import constant
 from repro.dist.sharding import param_shardings
 from repro.data.pipeline import TokenPipeline
 from repro.apps.miniapps import MINIAPPS
+from repro.ft import FTSession
+from repro.ft.miniapp import MiniAppProgram
 
 N_SLICES = 8
 REPS = int(os.environ.get("BENCH_REPS", "5"))
@@ -51,7 +54,7 @@ def timeit(fn, *args, reps=REPS):
 for rdeg in %(degrees)s:
     world = WorldState.create(N_SLICES, rdeg)
     repl = ReplicationConfig(rdegree=rdeg, collective_mode=mode)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         # --- LM train step ---
         cfg = smoke_config("qwen2.5-3b")
         pipe = TokenPipeline(cfg, seq_len=64, per_slice_batch=2, seed=0)
@@ -66,15 +69,15 @@ for rdeg in %(degrees)s:
         t = timeit(lambda b: step(params, opt_state, b)[2]["loss"], batch)
         results.append({"app": "lm_train", "rdegree": rdeg, "mode": mode,
                         "n_comp": world.topo.n_comp, "sec": t})
-        # --- mini-apps ---
-        for name, make in MINIAPPS.items():
+        # --- mini-apps, built + dispatched through the repro.ft session ---
+        for name in MINIAPPS:
             if name == "is" and world.topo.n_rep not in (0, world.topo.n_comp):
                 continue
-            fn, init, verify = make(mesh, world, repl)
-            x = jnp.asarray(init)
-            t = timeit(fn, x)
-            out = fn(x)
-            assert verify(out), name
+            prog = MiniAppProgram(name, repl)
+            FTSession(prog, n_slices=N_SLICES, rdegree=rdeg,
+                      replay="none", unit="iter")
+            t = timeit(lambda: prog.run_step(0))
+            assert prog.verified(), name
             results.append({"app": name, "rdegree": rdeg, "mode": mode,
                             "n_comp": world.topo.n_comp, "sec": t})
 print("RESULTS_JSON:" + json.dumps(results))

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ReplicationConfig
 from repro.core.data_plane import manual_axes, _flat_slice_index
 from repro.core.replication import WorldState
@@ -109,7 +110,7 @@ def _wrap(mesh, world, fn, n_in, n_out, repl):
     in_specs = tuple([P(lead)] * n_in)
     out_specs = tuple([P(lead)] * n_out) if n_out > 1 else P(lead)
     return jax.jit(
-        jax.shard_map(
+        shard_map(
             fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             axis_names=set(axes), check_vma=False,
         )
@@ -180,7 +181,7 @@ def make_cg(mesh, world, repl, *, local_n=512, iters=8):
         axes = manual_axes(mesh)
         lead = axes if len(axes) > 1 else axes[0]
         return jax.jit(
-            jax.shard_map(
+            shard_map(
                 step, mesh=mesh, in_specs=(P(lead),),
                 out_specs=(P(lead), P(lead)),
                 axis_names=set(axes), check_vma=False,
@@ -262,7 +263,7 @@ def make_mg(mesh, world, repl, *, local_n=1024, cycles=4):
     axes = manual_axes(mesh)
     lead = axes if len(axes) > 1 else axes[0]
     fn = jax.jit(
-        jax.shard_map(
+        shard_map(
             step, mesh=mesh, in_specs=(P(lead),),
             out_specs=(P(lead), P(lead)),
             axis_names=set(axes), check_vma=False,
@@ -312,7 +313,7 @@ def make_is(mesh, world, repl, *, local_n=1 << 12):
     axes = manual_axes(mesh)
     lead = axes if len(axes) > 1 else axes[0]
     fn = jax.jit(
-        jax.shard_map(
+        shard_map(
             step, mesh=mesh, in_specs=(P(lead),),
             out_specs=(P(lead), P(lead)),
             axis_names=set(axes), check_vma=False,
@@ -355,7 +356,7 @@ def make_pic(mesh, world, repl, *, n_part=1 << 12, grid=256, steps=4):
     axes = manual_axes(mesh)
     lead = axes if len(axes) > 1 else axes[0]
     fn = jax.jit(
-        jax.shard_map(
+        shard_map(
             step, mesh=mesh, in_specs=(P(lead),),
             out_specs=(P(lead), P(lead)),
             axis_names=set(axes), check_vma=False,

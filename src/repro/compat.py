@@ -1,0 +1,135 @@
+"""JAX version shim: one import site for APIs that moved between releases.
+
+The repo targets the modern sharding surface (``jax.shard_map``,
+``jax.set_mesh``, ``jax.sharding.AxisType``) but must also run on the
+jax 0.4.x line installed in the offline container, where:
+
+- ``shard_map`` lives in ``jax.experimental.shard_map`` and spells its
+  arguments differently (``auto``/``check_rep`` instead of
+  ``axis_names``/``check_vma``);
+- ``jax.set_mesh`` does not exist - ``Mesh`` itself is the context
+  manager that activates the physical mesh;
+- ``Mesh``/``jax.make_mesh`` take no ``axis_types`` argument (every axis
+  behaves like the later ``AxisType.Auto``).
+
+Everything below is semantics-preserving: on new jax it forwards 1:1, on
+old jax it translates. All repo code goes through this module instead of
+touching the moved names directly.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = [
+    "AxisType",
+    "HAS_AXIS_TYPES",
+    "make_mesh",
+    "mesh_from_devices",
+    "set_mesh",
+    "shard_map",
+]
+
+# ---------------------------------------------------------------------------
+# AxisType + mesh construction
+# ---------------------------------------------------------------------------
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+
+    HAS_AXIS_TYPES = True
+except ImportError:  # jax 0.4.x: every axis is implicitly Auto
+    import enum
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    HAS_AXIS_TYPES = False
+
+
+def _auto_types(n: int) -> Tuple["AxisType", ...]:
+    return (AxisType.Auto,) * n
+
+
+def make_mesh(shape: Sequence[int], axis_names: Sequence[str],
+              axis_types: Optional[Tuple] = None) -> Mesh:
+    """``jax.make_mesh`` with every axis Auto (GSPMD-managed)."""
+    if HAS_AXIS_TYPES:
+        return jax.make_mesh(
+            tuple(shape), tuple(axis_names),
+            axis_types=axis_types or _auto_types(len(tuple(shape))),
+        )
+    return jax.make_mesh(tuple(shape), tuple(axis_names))
+
+
+def mesh_from_devices(devices, axis_names: Sequence[str],
+                      axis_types: Optional[Tuple] = None) -> Mesh:
+    """``Mesh(device_array, names)`` with every axis Auto - used where the
+    device placement matters (elastic shrink keeps survivor order)."""
+    devices = np.asarray(devices)
+    if HAS_AXIS_TYPES:
+        return Mesh(
+            devices, tuple(axis_names),
+            axis_types=axis_types or _auto_types(devices.ndim),
+        )
+    return Mesh(devices, tuple(axis_names))
+
+
+# ---------------------------------------------------------------------------
+# set_mesh
+# ---------------------------------------------------------------------------
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+else:
+
+    @contextlib.contextmanager
+    def set_mesh(mesh: Mesh):  # type: ignore[no-redef]
+        """On 0.4.x the Mesh object is itself the activation context."""
+        with mesh:
+            yield mesh
+
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma: bool = False):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma, **kw,
+        )
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_legacy
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma: bool = False):  # type: ignore[no-redef]
+        """Translate to the 0.4.x spelling; ``check_vma`` maps to
+        ``check_rep``.
+
+        EVERY mesh axis is made manual, including the axes the caller left
+        to GSPMD (``axis_names``'s complement, normally the 'model' axis):
+        the 0.4.x partial-``auto`` path is unusable here - ``axis_index``
+        lowers to a PartitionId op the SPMD partitioner rejects, and the
+        train step trips a CHECK in XLA's manual-subgroup sharding
+        propagation. Bodies never reference the model axis by name, so with
+        it manual each model shard redundantly computes the same replicated
+        result - bit-identical semantics, at a redundant-compute cost that
+        only affects the legacy-jax simulation path."""
+        return _shard_map_legacy(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=bool(check_vma), auto=frozenset(),
+        )

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig, ReplicationConfig, TrainConfig
 from repro.core.replication import WorldState
 from repro.models import model as M
@@ -82,12 +83,14 @@ def _tree_add(a: PyTree, b: PyTree) -> PyTree:
 # ---------------------------------------------------------------------------
 
 
-def reduce_gradients(grads: PyTree, *, axes: Tuple[str, ...], mesh: Mesh,
+def reduce_gradients(grads: PyTree, *, idx, axes: Tuple[str, ...], mesh: Mesh,
                      world: WorldState, repl: ReplicationConfig) -> PyTree:
     """Replica-aware gradient reduction. Returns the summed gradient over
-    computational slices, available on EVERY slice (cmp and rep)."""
+    computational slices, available on EVERY slice (cmp and rep).
+
+    ``idx`` is this slice's flattened (pod, data) index, threaded in as a
+    sharded iota input (not ``axis_index``: see ``_slice_iota``)."""
     topo = world.topo
-    idx = _flat_slice_index(axes, mesh)
     roles = world.roles_in_mesh_order()
     is_rep_by_pos = np.asarray(
         [topo.is_rep_mask()[r] for r in roles], dtype=np.float32
@@ -133,11 +136,10 @@ def reduce_gradients(grads: PyTree, *, axes: Tuple[str, ...], mesh: Mesh,
     return _tree_where(is_rep > 0, g_rep, g_local)
 
 
-def sdc_check(grads: PyTree, *, axes, mesh, world: WorldState):
+def sdc_check(grads: PyTree, *, idx, axes, mesh, world: WorldState):
     """RedMPI-style silent-data-corruption cross-check: mirrored pairs
     compare a gradient checksum; returns the summed |pair difference|."""
     topo = world.topo
-    idx = _flat_slice_index(axes, mesh)
     roles = world.roles_in_mesh_order()
     sign_by_pos = np.asarray(
         [-1.0 if topo.is_rep_mask()[r] else 1.0 for r in roles], dtype=np.float32
@@ -183,7 +185,12 @@ def build_train_step(
     topo = world.topo
     inv_ncomp = 1.0 / topo.n_comp
 
-    def per_slice(params, opt_state, batch):
+    def per_slice(params, opt_state, batch, slice_iota):
+        # this slice's flat (pod, data) index: first element of the sharded
+        # iota (each slice sees a length-1 shard). axis_index would be
+        # equivalent but does not lower on jax 0.4.x when the model axis is
+        # a GSPMD auto axis (PartitionId limitation - see repro.compat).
+        idx = slice_iota[0]
         def loss_of(p, b):
             return M.loss_fn(p, b, model_cfg, impl=impl)
 
@@ -209,15 +216,18 @@ def build_train_step(
 
         metrics: Dict[str, jnp.ndarray] = {}
         if repl.sdc_check and topo.n_rep:
-            metrics["sdc"] = sdc_check(grads, axes=axes, mesh=mesh, world=world)
+            metrics["sdc"] = sdc_check(
+                grads, idx=idx, axes=axes, mesh=mesh, world=world
+            )
 
-        g = reduce_gradients(grads, axes=axes, mesh=mesh, world=world, repl=repl)
+        g = reduce_gradients(
+            grads, idx=idx, axes=axes, mesh=mesh, world=world, repl=repl
+        )
         g = _tree_scale(g, inv_ncomp)
 
         params_new, opt_state_new, stats = optimizer.update(g, opt_state, params)
 
         # loss averaged over computational slices (scalar all-reduce)
-        idx = _flat_slice_index(axes, mesh)
         roles = world.roles_in_mesh_order()
         is_cmp = 1.0 - jnp.asarray(
             np.asarray([topo.is_rep_mask()[r] for r in roles], dtype=np.float32)
@@ -227,17 +237,25 @@ def build_train_step(
         metrics.update(stats)
         return params_new, opt_state_new, metrics
 
-    batch_spec = P(axes if len(axes) > 1 else axes[0])
-    smapped = jax.shard_map(
+    lead = axes if len(axes) > 1 else axes[0]
+    batch_spec = P(lead)
+    smapped = shard_map(
         per_slice,
         mesh=mesh,
-        in_specs=(P(), P(), batch_spec),
+        in_specs=(P(), P(), batch_spec, P(lead)),
         out_specs=(P(), P(), P()),
         axis_names=set(axes),
         check_vma=False,
     )
+    n_total = n_slices(mesh)
+
+    def step(params, opt_state, batch):
+        return smapped(
+            params, opt_state, batch, jnp.arange(n_total, dtype=jnp.int32)
+        )
+
     donate_argnums = (0, 1) if donate else ()
-    return jax.jit(smapped, donate_argnums=donate_argnums)
+    return jax.jit(step, donate_argnums=donate_argnums)
 
 
 # ---------------------------------------------------------------------------
@@ -290,7 +308,7 @@ def build_serve_step(
         # stacks (gemma3) need cache_example for per-leaf placement
         cache_spec = P(None, lead) if shard_batch else P()
 
-    smapped = jax.shard_map(
+    smapped = shard_map(
         per_slice,
         mesh=mesh,
         in_specs=(P(), cache_spec, tok_spec, P()),
@@ -323,7 +341,7 @@ def build_prefill_step(
         return logits
 
     batch_spec = P(axes if len(axes) > 1 else axes[0])
-    smapped = jax.shard_map(
+    smapped = shard_map(
         per_slice,
         mesh=mesh,
         in_specs=(P(), batch_spec),

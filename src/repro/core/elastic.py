@@ -13,8 +13,9 @@ from typing import Any, List, Sequence, Tuple
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import mesh_from_devices
 from repro.configs.base import ModelConfig
 from repro.core.replication import WorldState
 
@@ -32,10 +33,8 @@ def shrink_mesh(mesh: Mesh, live_slices: Sequence[int]) -> Mesh:
     devs = mesh.devices.reshape(-1, model_dim)
     live = sorted(live_slices)
     new_devs = devs[np.asarray(live)]
-    return Mesh(
-        new_devs.reshape(len(live), model_dim),
-        ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
+    return mesh_from_devices(
+        new_devs.reshape(len(live), model_dim), ("data", "model")
     )
 
 

@@ -1,12 +1,17 @@
 """SimCluster: the paper's failure-management flow, executed for real.
 
 Runs actual replicated train steps (real shard_map collectives over fake
-CPU devices), injects failures, and drives the REAL recovery machinery:
+CPU devices) as a thin :class:`~repro.ft.program.ResilientProgram`: all of
+the recovery machinery -
 
   detect (control plane) -> revoke -> agree -> shrink/promote
   (WorldState.repair) -> elastic mesh rebuild -> communicator regeneration
   (step re-lowered with new axis_index_groups) -> step replay (recovery
   logs + deterministic pipeline) -> resume
+
+- lives in :class:`~repro.ft.session.FTSession`; this module only supplies
+the train data plane (build/run a step) and the trainer-specific hooks
+(seekable pipeline sample ranges, state snapshot/restore/fresh-init).
 
 This is the vehicle for the paper's Sec. VII-B experiments (overheads under
 failures, MTTI vs replication degree) and for the flagship integration
@@ -19,44 +24,33 @@ and benchmarks do this so the main process keeps 1 device).
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType, Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ReplicationConfig, TrainConfig
 from repro.checkpoint.checkpointer import Checkpointer, PartnerStore
+from repro.compat import set_mesh
+from repro.configs.base import ModelConfig, ReplicationConfig, TrainConfig
 from repro.core import data_plane as DP
-from repro.core.control_plane import ControlPlane, CommunicatorRevoked, ProcessFailed
-from repro.core.elastic import shrink_mesh
-from repro.core.recovery import ReplayPlan, StepLog, StepRecord, min_completed_step, replay_plan
-from repro.core.replication import WorldState
 from repro.data.pipeline import TokenPipeline
-from repro.dist.sharding import param_shardings
+from repro.dist.sharding import opt_shardings, param_shardings
+from repro.ft import FailureSchedule, FTReport, FTSession, ResilientProgram
 from repro.models import model as M
 from repro.optim.adamw import adamw
 from repro.optim.schedules import constant
 
 
 @dataclass
-class SimReport:
-    steps_completed: int = 0
-    app_seconds: float = 0.0
-    handler_seconds: float = 0.0
-    failures: int = 0
-    promotes: int = 0
-    restarts: int = 0
-    interruptions: List[int] = field(default_factory=list)  # steps at interrupt
-    replayed_steps: int = 0
+class SimReport(FTReport):
+    """FTReport + the training-loss trajectory."""
+
     losses: List[float] = field(default_factory=list)
-    events: List[str] = field(default_factory=list)
 
 
-class SimCluster:
+class SimCluster(ResilientProgram):
     def __init__(
         self,
         model_cfg: ModelConfig,
@@ -74,153 +68,118 @@ class SimCluster:
         impl: str = "chunked",
         microbatches: int = 1,
     ):
-        n_dev = len(jax.devices())
-        assert n_dev >= n_slices * model_shards, (
-            f"need {n_slices * model_shards} devices, have {n_dev} - launch in a "
-            "subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=N"
-        )
         self.model_cfg = model_cfg
         self.repl = ReplicationConfig(rdegree=rdegree, collective_mode=collective_mode)
         self.train_cfg = TrainConfig(microbatches=microbatches)
-        self.model_shards = model_shards
         self.impl = impl
-        self.base_mesh = Mesh(
-            np.array(jax.devices()[: n_slices * model_shards]).reshape(
-                n_slices, model_shards
-            ),
-            ("data", "model"),
-            axis_types=(AxisType.Auto, AxisType.Auto),
-        )
-        self.world = WorldState.create(n_slices, rdegree)
-        self.control = ControlPlane(heartbeat_timeout=1e9)  # report-driven in sim
         self.pipeline = TokenPipeline(
             model_cfg, seq_len=seq_len, per_slice_batch=per_slice_batch, seed=seed
         )
         self.optimizer = adamw(constant(lr))
-        self.partner = PartnerStore()
-        self.ckpt = Checkpointer(checkpoint_dir) if checkpoint_dir else None
-        self.checkpoint_every = checkpoint_every
-        self.logs: Dict[int, StepLog] = {
-            r: StepLog(r) for r in range(self.world.topo.n_slices)
-        }
-        self.generation = 0
-        self.report = SimReport()
 
         key = jax.random.PRNGKey(seed)
         self.params = M.init(key, model_cfg)
         self.opt_state = self.optimizer.init(self.params)
-        self.mesh: Mesh = None  # set by _rebuild
         self.step_fn = None
-        self._rebuild()
+
+        # the session owns the entire ULFM lifecycle; FTSession.__init__
+        # builds the base mesh and calls build_step for the initial lowering
+        self.session = FTSession(
+            self,
+            n_slices=n_slices,
+            model_shards=model_shards,
+            rdegree=rdegree,
+            heartbeat_timeout=1e9,  # report-driven in sim
+            partner=PartnerStore(),
+            checkpointer=Checkpointer(checkpoint_dir) if checkpoint_dir else None,
+            checkpoint_every=checkpoint_every,
+            replay="log",
+            report=SimReport(),
+            unit="step",
+        )
+
+    # ---- convenience views over the session --------------------------------
+    @property
+    def world(self):
+        return self.session.world
+
+    @property
+    def mesh(self):
+        return self.session.mesh
+
+    @property
+    def report(self) -> SimReport:
+        return self.session.report
+
+    @property
+    def generation(self) -> int:
+        return self.session.generation
+
+    @property
+    def partner(self) -> PartnerStore:
+        return self.session.partner
+
+    @property
+    def ckpt(self) -> Optional[Checkpointer]:
+        return self.session.checkpointer
 
     # ------------------------------------------------------------------
-    def _rebuild(self) -> None:
-        """(Re)generate communicators: shrink the mesh to live slices,
-        re-place state, re-lower the step with the new groups."""
-        live = self.world.live_physicals()
-        self.mesh = shrink_mesh(self.base_mesh, live)
-        with jax.set_mesh(self.mesh):
-            pshard = param_shardings(self.params, self.mesh, self.model_cfg)
-            self.params = jax.device_put(self.params, pshard)
-            self.opt_state = jax.device_put(
-                self.opt_state,
-                type(self.opt_state)(
-                    step=NamedSharding(self.mesh, P()),
-                    mu=pshard,
-                    nu=pshard,
-                ),
-            )
+    # ResilientProgram hooks
+    # ------------------------------------------------------------------
+    def build_step(self, mesh, world) -> None:
+        """Re-place state onto the (shrunk) mesh and re-lower the step with
+        the new world's axis_index_groups."""
+        with set_mesh(mesh):
+            self._place_state(mesh)
             self.step_fn = DP.build_train_step(
                 self.model_cfg,
                 self.train_cfg,
                 self.repl,
-                self.mesh,
-                self.world,
+                mesh,
+                world,
                 self.optimizer,
                 impl=self.impl,
                 donate=False,
             )
 
+    def run_step(self, step: int) -> float:
+        loss = self._run_one_step(step)
+        self.report.losses.append(loss)
+        return loss
+
+    def sample_range(self, step: int, cmp_role: int):
+        return self.pipeline.sample_range(step, cmp_role)
+
+    def snapshot(self):
+        return (
+            {"params": self.params, "opt": self.opt_state},
+            {"n_comp": self.world.topo.n_comp},
+        )
+
+    def restore(self, state, meta) -> None:
+        self.params, self.opt_state = state["params"], state["opt"]
+
+    def init_fresh(self) -> None:
+        key = jax.random.PRNGKey(self.pipeline.seed)
+        self.params = M.init(key, self.model_cfg)
+        self.opt_state = self.optimizer.init(self.params)
+
     # ------------------------------------------------------------------
+    def _place_state(self, mesh) -> None:
+        pshard = param_shardings(self.params, mesh, self.model_cfg)
+        self.params = jax.device_put(self.params, pshard)
+        self.opt_state = jax.device_put(
+            self.opt_state, opt_shardings(self.opt_state, pshard, mesh)
+        )
+
     def _run_one_step(self, step: int) -> float:
         batch_np = self.pipeline.global_batch(step, self.world)
-        with jax.set_mesh(self.mesh):
+        with set_mesh(self.mesh):
             batch = jax.tree.map(jnp.asarray, batch_np)
             self.params, self.opt_state, metrics = self.step_fn(
                 self.params, self.opt_state, batch
             )
-            loss = float(metrics["loss"])
-        for role in range(self.world.topo.n_slices):
-            src = self.world.topo.mirror_source()[role]
-            s0, s1 = self.pipeline.sample_range(step, src)
-            self.logs.setdefault(role, StepLog(role)).record(
-                StepRecord(step=step, sample_start=s0, sample_end=s1, collective_seq=step)
-            )
-        return loss
-
-    def _checkpoint(self, step: int) -> None:
-        state = {"params": self.params, "opt": self.opt_state}
-        meta = {"step": step, "n_comp": self.world.topo.n_comp}
-        # level 1: partner memory for every slice (cheap in-sim)
-        self.partner.save(0, step, state, meta)
-        # level 2: durable
-        if self.ckpt is not None:
-            self.ckpt.save(step, state, meta)
-
-    # ------------------------------------------------------------------
-    def error_handler(self, step: int) -> Tuple[Dict, ReplayPlan]:
-        """Paper Sec. VI: revoke -> agree -> repair -> regenerate ->
-        message recovery. Returns (repair report, replay plan)."""
-        t0 = time.perf_counter()
-        self.control.revoke()
-        failed = self.control.agree()
-        old_topo = self.world.topo
-        new_world, rep = self.world.repair(sorted(failed))
-        restored_step: Optional[int] = None
-
-        if rep["lost_cmp"]:
-            # unrecoverable by replication: multi-level restore
-            self.report.restarts += 1
-            self.report.interruptions.append(step)
-            template = {"params": self.params, "opt": self.opt_state}
-            got = self.partner.restore(0, template)
-            if got is None and self.ckpt is not None:
-                got = self.ckpt.restore(template)
-            if got is not None:
-                restored_step, state, _ = got
-                self.params, self.opt_state = state["params"], state["opt"]
-            else:
-                restored_step = -1  # restart from scratch
-                key = jax.random.PRNGKey(self.pipeline.seed)
-                self.params = M.init(key, self.model_cfg)
-                self.opt_state = self.optimizer.init(self.params)
-        else:
-            self.report.promotes += len(rep["promoted"])
-
-        # message recovery plan from the SURVIVORS' logs (paper Sec. VI-B:
-        # "identify the collectives that every live process has completed")
-        # - computed before the logs are re-keyed for the new world.
-        survivor_roles = [
-            r
-            for r in range(old_topo.n_slices)
-            if self.world.assignment[r] not in failed
-        ]
-        live_logs = [self.logs[r] for r in survivor_roles if r in self.logs]
-        plan = replay_plan(live_logs, step, restored_step=restored_step)
-
-        self.world = new_world
-        self.logs = {r: StepLog(r) for r in range(new_world.topo.n_slices)}
-        for r, log in self.logs.items():
-            log.applied.update(range(0, plan.start_step))
-        self._rebuild()
-        self.control.shrink_complete(failed)
-        self.generation = new_world.generation
-        self.report.handler_seconds += time.perf_counter() - t0
-        self.report.events.append(
-            f"step {step}: failed={sorted(failed)} promoted={rep['promoted']} "
-            f"lost={rep['lost_cmp']} plan={plan.reason}@{plan.start_step}"
-        )
-        return rep, plan
+            return float(metrics["loss"])
 
     # ------------------------------------------------------------------
     def run(
@@ -229,56 +188,22 @@ class SimCluster:
         failures: Optional[Dict[int, List[int]]] = None,
         warmup_compile: bool = True,
     ) -> SimReport:
-        """Run ``steps`` training steps. ``failures`` maps step index ->
-        physical slices to kill *during* that step (detected at its
-        dispatch boundary, like a communication-time detection)."""
-        failures = failures or {}
+        """Run ``steps`` training steps through the session's dispatch loop.
+        ``failures`` maps step index -> physical slices to kill *during*
+        that step (detected at its dispatch boundary, like a
+        communication-time detection); the schedule is copied, never
+        mutated."""
         if warmup_compile:
-            # compile outside timing WITHOUT consuming step 0: snapshot state,
-            # run, restore (the update must not be applied twice)
+            # compile outside timing WITHOUT consuming step 0: snapshot
+            # state, run, restore (the update must not be applied twice)
             saved_p = jax.tree.map(np.asarray, self.params)
             saved_o = jax.tree.map(np.asarray, self.opt_state)
             self._run_one_step(0)
-            with jax.set_mesh(self.mesh):
-                pshard = param_shardings(saved_p, self.mesh, self.model_cfg)
-                self.params = jax.device_put(saved_p, pshard)
-                self.opt_state = jax.device_put(
-                    saved_o,
-                    type(self.opt_state)(
-                        step=NamedSharding(self.mesh, P()), mu=pshard, nu=pshard
-                    ),
-                )
-            self.logs = {r: StepLog(r) for r in range(self.world.topo.n_slices)}
-
-        step = 0
-        while step < steps:
-            if step in failures and failures[step]:
-                for victim in failures.pop(step):
-                    if victim in self.world.assignment:
-                        self.control.report_failure(victim)
-                        self.report.failures += 1
-            try:
-                self.control.check(self.generation)
-            except (CommunicatorRevoked, ProcessFailed):
-                _, plan = self.error_handler(step)
-                replay_from = max(plan.start_step, 0)
-                self.report.replayed_steps += max(0, step - replay_from)
-                step = replay_from
-                continue
-
-            t0 = time.perf_counter()
-            loss = self._run_one_step(step)
-            self.report.app_seconds += time.perf_counter() - t0
-            self.report.losses.append(loss)
-            self.report.steps_completed += 1
-            if (
-                self.checkpoint_every
-                and step > 0
-                and step % self.checkpoint_every == 0
-            ):
-                self._checkpoint(step)
-            step += 1
-        return self.report
+            self.params, self.opt_state = saved_p, saved_o
+            with set_mesh(self.mesh):
+                self._place_state(self.mesh)
+            self.session.reset_logs()
+        return self.session.run(steps, FailureSchedule(failures))
 
     # ------------------------------------------------------------------
     def params_replica(self) -> Dict:

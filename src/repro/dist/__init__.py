@@ -1,0 +1,1 @@
+"""Distribution rules: sharding specs for params, optimizer state, caches."""

@@ -1,0 +1,193 @@
+"""Sharding rules for every state pytree in the system.
+
+The mesh has two kinds of axes (paper Sec. V mapping):
+
+- the flattened (pod, data) *slice* axes - the replication/failure domain,
+  manual inside ``shard_map``; params are replicated over them, batches and
+  decode caches are sharded over them;
+- the ``model`` axis - a GSPMD auto axis carrying tensor/expert parallelism
+  inside a slice.
+
+Rules are name-based over the flattened param path (the same paths the
+checkpointer serializes), and every model-axis placement is guarded by
+divisibility so any config lowers on any mesh: a dimension that does not
+divide the model-axis size is simply replicated.
+
+Layout summary (base shapes; stacked leaves carry leading layer/group dims):
+
+- ``embed`` (V, d)        -> vocab over model   (padded_vocab is 256-aligned)
+- ``lm_head`` (d, V)      -> vocab over model
+- attention ``wq/wk/wv``  -> output (head) dim over model; ``wo`` input dim
+- MLP ``w_gate/w_up``     -> d_ff over model; ``w_down`` d_ff (input) dim
+- MoE expert stacks       -> expert dim over model (``MoEConfig.sharding ==
+  'expert'``), else d_ff (tensor parallel); router replicated
+- Mamba ``in_*``          -> projection output over model; ``out_proj`` and
+  conv weights input-channel over model; scalar head params replicated
+- norms / biases / scalars -> replicated
+
+Decode caches shard the request batch over the slice axes (the serving
+analogue of the replication domain) and the head dim over model, matching
+the decode path's point-of-use constraints in ``models/layers.py``.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+# leaves whose LAST dim is the model-sharded output projection
+_SHARD_OUT = frozenset(
+    {"wq", "wk", "wv", "w_gate", "w_up", "in_z", "in_x", "in_bc", "in_dt",
+     "bq", "bk", "bv"}
+)
+# leaves whose SECOND-TO-LAST dim is the model-sharded input contraction
+_SHARD_IN = frozenset({"wo", "w_down", "out_proj", "conv_x_w", "conv_bc_w"})
+
+
+def path_str(key_path) -> str:
+    return "/".join(
+        str(getattr(k, "key", getattr(k, "idx", k))) for k in key_path
+    )
+
+
+def _model_size(mesh: Mesh) -> int:
+    return int(mesh.shape["model"]) if "model" in mesh.axis_names else 1
+
+
+def slice_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _lead(mesh: Mesh):
+    axes = slice_axes(mesh)
+    return axes if len(axes) > 1 else axes[0]
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def param_spec(path: str, shape: Sequence[int], cfg: ModelConfig,
+               n_model: int) -> P:
+    """PartitionSpec for one parameter leaf. ``path`` is the flattened
+    pytree path, ``shape`` the full (possibly layer-stacked) shape."""
+    parts = path.split("/")
+    leaf = parts[-1]
+    spec = [None] * len(shape)
+    if n_model <= 1 or not shape:
+        return P(*spec)
+
+    def place(axis: int) -> None:
+        if shape[axis] >= n_model and shape[axis] % n_model == 0:
+            spec[axis] = "model"
+
+    if leaf == "embed":
+        place(len(shape) - 2)  # (V, d): vocab
+    elif leaf == "lm_head":
+        place(len(shape) - 1)  # (d, V): vocab
+    elif leaf == "router":
+        pass  # tiny; replicated keeps routing local
+    elif "moe" in parts and leaf in ("w_gate", "w_up", "w_down"):
+        # expert stacks (.., E, in, out)
+        mode = cfg.moe.sharding if cfg.moe is not None else "tensor"
+        e_axis = len(shape) - 3
+        f_axis = len(shape) - 1 if leaf != "w_down" else len(shape) - 2
+        if mode == "expert" and shape[e_axis] % n_model == 0:
+            spec[e_axis] = "model"
+        else:
+            place(f_axis)
+    elif leaf in _SHARD_OUT:
+        place(len(shape) - 1)
+    elif leaf in _SHARD_IN:
+        place(len(shape) - 2)
+    return P(*spec)
+
+
+def param_shardings(params: PyTree, mesh: Mesh, cfg: ModelConfig) -> PyTree:
+    """NamedSharding pytree for a param tree (arrays or ShapeDtypeStructs):
+    replicated over the slice axes, model-sharded per ``param_spec``."""
+    n_model = _model_size(mesh)
+
+    def per_leaf(key_path, leaf):
+        return NamedSharding(
+            mesh, param_spec(path_str(key_path), leaf.shape, cfg, n_model)
+        )
+
+    return jax.tree_util.tree_map_with_path(per_leaf, params)
+
+
+def opt_shardings(opt_state: PyTree, pshard: PyTree, mesh: Mesh) -> PyTree:
+    """Optimizer-state shardings: moments mirror the params, the step
+    counter is a replicated scalar."""
+    return type(opt_state)(
+        step=NamedSharding(mesh, P()), mu=pshard, nu=pshard
+    )
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+
+
+def cache_batch_axis(path: str, ndim: int) -> int:
+    """Index of the request-batch dim in a cache leaf.
+
+    Attention k/v leaves are (..stack dims.., B, S, KV, hd) -> ndim-4
+    (covers plain (L,B,S,KV,hd), grouped (G,R,B,S,KV,hd) and cross
+    (L,B,enc,KV,hd)); SSM conv/state stacks are (L, B, ...) -> 1.
+    """
+    leaf = path.split("/")[-1]
+    if leaf in ("k", "v"):
+        return ndim - 4
+    return 1
+
+
+def cache_manual_specs(cache: PyTree, lead) -> PyTree:
+    """Per-leaf PartitionSpecs over the MANUAL slice axes only (shard_map
+    in/out specs): ``lead`` on the batch dim, everything else unconstrained
+    (the model axis is auto). ``lead=None`` replicates (small-batch cells).
+    """
+
+    def per_leaf(key_path, leaf):
+        spec = [None] * leaf.ndim
+        if lead is not None:
+            spec[cache_batch_axis(path_str(key_path), leaf.ndim)] = lead
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(per_leaf, cache)
+
+
+def cache_shardings(cache: PyTree, mesh: Mesh, *,
+                    shard_batch: bool = True) -> PyTree:
+    """NamedSharding pytree for a decode cache: batch over the slice axes
+    (when it divides), head dim of k/v over the model axis (when it
+    divides) so decode attention runs shard-local (layers.py decode path).
+    """
+    n_model = _model_size(mesh)
+    axes = slice_axes(mesh)
+    lead = _lead(mesh)
+    n_slices = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+    def per_leaf(key_path, leaf):
+        path = path_str(key_path)
+        spec = [None] * leaf.ndim
+        if shard_batch and axes:
+            b_axis = cache_batch_axis(path, leaf.ndim)
+            if leaf.shape[b_axis] % n_slices == 0 and leaf.shape[b_axis] > 0:
+                spec[b_axis] = lead
+        if (
+            n_model > 1
+            and path.split("/")[-1] in ("k", "v")
+            and leaf.shape[-1] % n_model == 0
+        ):
+            spec[-1] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(per_leaf, cache)

@@ -1,0 +1,34 @@
+"""``repro.ft`` - the single public API for fault-tolerant execution.
+
+PartRePer-MPI's promise is that an existing MPI application becomes fault
+tolerant by linking one library: the EMPI_* wrappers run the hot path on
+the fast native MPI while Open MPI + ULFM handle detect -> revoke ->
+agree -> shrink behind the scenes. This package is that library for jitted
+JAX programs:
+
+- :class:`ResilientProgram` is the application surface - wrap a step
+  function (and optionally snapshot/restore/repack hooks) and every future
+  workload is a ~50-line program;
+- :class:`FTSession` is the wrapper library - it owns the base mesh,
+  :class:`~repro.core.replication.WorldState`, the
+  :class:`~repro.core.control_plane.ControlPlane`, the generation guard,
+  the full error handler (revoke -> agree -> repair -> shrink ->
+  re-lower -> replay), multi-level restore (partner memory -> durable
+  checkpoint -> fresh init), failure injection via
+  :class:`FailureSchedule`, and the unified :class:`FTReport`.
+
+Paper mapping: FTSession.run is Fig. 7's dispatch loop, FTSession.recover
+is Sec. VI's error handler, FailureSchedule is the fault injector, and the
+ResilientProgram hooks are the application-side EMPI entry points.
+"""
+from repro.core.recovery import ReplayPlan
+from repro.ft.program import ResilientProgram
+from repro.ft.session import FailureSchedule, FTReport, FTSession
+
+__all__ = [
+    "FailureSchedule",
+    "FTReport",
+    "FTSession",
+    "ReplayPlan",
+    "ResilientProgram",
+]

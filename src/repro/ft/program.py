@@ -1,0 +1,88 @@
+"""The application surface of ``repro.ft``.
+
+A :class:`ResilientProgram` is what an application implements to run under
+:class:`~repro.ft.session.FTSession`. Only two hooks are mandatory -
+``build_step`` (lower the jitted step onto a mesh/world) and ``run_step``
+(execute one dispatch unit). Everything else defaults to a no-op and is
+opted into by workloads that need it:
+
+===================  =====================================================
+hook                 who uses it
+===================  =====================================================
+``build_step``       everyone: re-lowered on every communicator regen
+``run_step``         everyone: the hot-path dispatch unit (step / token)
+``sample_range``     trainers with a seekable pipeline (message logging)
+``snapshot``         trainers: state for partner/durable checkpoints
+``restore``          trainers: load a checkpoint after an unmasked failure
+``init_fresh``       trainers: restart from scratch (no checkpoint found)
+``repack_state``     servers: carry promoted replicas' live caches across
+                     the shrink (paper: "the replica now becomes the
+                     computational process")
+``replay_inputs``    anything holding input cursors that must seek to the
+                     replay plan's start step
+===================  =====================================================
+
+The session assigns itself to ``program.session`` before the first
+``build_step`` call, so programs may read ``self.session.world`` /
+``self.session.mesh`` / ``self.session.report`` from any hook.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core.recovery import ReplayPlan
+from repro.core.replication import WorldState
+
+PyTree = Any
+
+
+class ResilientProgram:
+    """Base class (and documentation of the hook contract) for programs
+    executed by :class:`~repro.ft.session.FTSession`."""
+
+    # set by FTSession.__init__ before the first build_step call
+    session: Any = None
+
+    # ---- mandatory ---------------------------------------------------------
+    def build_step(self, mesh, world: WorldState) -> None:
+        """(Re)generate communicators: re-place state onto ``mesh`` and
+        re-lower the step function with the new world's groups. Called once
+        at session construction and after every repair."""
+        raise NotImplementedError
+
+    def run_step(self, step: int) -> Any:
+        """Execute dispatch unit ``step`` (a train step, a decode token, a
+        mini-app iteration). Timed as app time by the session."""
+        raise NotImplementedError
+
+    # ---- message logging / replay (trainers) -------------------------------
+    def sample_range(self, step: int, cmp_role: int) -> Tuple[int, int]:
+        """Global sample-id range the computational role consumed at
+        ``step`` - recorded into the per-role step logs."""
+        return (0, 0)
+
+    def replay_inputs(self, plan: ReplayPlan) -> None:
+        """Seek input state to ``plan.start_step`` (no-op for programs whose
+        inputs are pure functions of the step index)."""
+
+    # ---- multi-level restore (trainers) ------------------------------------
+    def snapshot(self) -> Optional[Tuple[PyTree, Dict]]:
+        """(state, meta) for checkpointing; the state pytree doubles as the
+        restore template. ``None`` => the program is not checkpointable."""
+        return None
+
+    def restore(self, state: PyTree, meta: Dict) -> None:
+        """Adopt checkpointed ``state`` (inverse of ``snapshot``)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} snapshots state but does not restore"
+        )
+
+    def init_fresh(self) -> None:
+        """Re-initialize from scratch - the restore path of last resort.
+        Default: keep current state (stateless programs resume in place)."""
+
+    # ---- elastic repack (servers) ------------------------------------------
+    def repack_state(self, old_world: WorldState, new_world: WorldState) -> None:
+        """Carry live state across the shrink, BEFORE ``build_step`` runs on
+        the new world (e.g. re-pack per-slice KV-cache rows so promoted
+        replicas keep their mirrored caches)."""

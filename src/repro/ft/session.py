@@ -1,0 +1,345 @@
+"""FTSession: the ULFM lifecycle, owned once, for every workload.
+
+The session is the paper's wrapper library. The program supplies the data
+plane (a jitted step built by ``build_step``); the session supplies
+everything PartRePer-MPI layers around it:
+
+- the base mesh over the physical slice pool (fixed for the job's life);
+- :class:`~repro.core.replication.WorldState` - the role -> physical-slice
+  assignment that repair shuffles ("the replica now becomes the
+  computational process");
+- :class:`~repro.core.control_plane.ControlPlane` - detection, revocation,
+  agreement (Secs. III-B, IV, VI-A);
+- the generation guard in the dispatch loop (Fig. 7's EMPI_Test
+  interleave, host-side);
+- the error handler (Sec. VI): revoke -> agree -> ``WorldState.repair`` ->
+  multi-level restore when replication cannot mask the failure ->
+  ``shrink_mesh`` -> program re-lower -> replay plan from the survivors'
+  step logs (Sec. VI-B message recovery, with duplicate suppression);
+- multi-level checkpointing (partner memory -> durable) on the trainer's
+  cadence;
+- deterministic failure injection via :class:`FailureSchedule`;
+- a unified :class:`FTReport` of app/handler seconds and recovery events.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer, PartnerStore
+from repro.compat import mesh_from_devices
+from repro.core.control_plane import (
+    CommunicatorRevoked,
+    ControlPlane,
+    ProcessFailed,
+)
+from repro.core.elastic import shrink_mesh
+from repro.core.recovery import ReplayPlan, StepLog, StepRecord, replay_plan
+from repro.core.replication import WorldState
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class FTReport:
+    """Unified accounting across workloads. Programs may subclass to add
+    workload-specific fields (losses, token counts, ...)."""
+
+    steps_completed: int = 0
+    app_seconds: float = 0.0
+    handler_seconds: float = 0.0
+    failures: int = 0
+    promotes: int = 0
+    restarts: int = 0
+    interruptions: List[int] = field(default_factory=list)
+    replayed_steps: int = 0
+    events: List[str] = field(default_factory=list)
+
+
+# ---------------------------------------------------------------------------
+# failure schedule
+# ---------------------------------------------------------------------------
+
+
+class FailureSchedule:
+    """Deterministic injection plan: dispatch step -> physical slices to
+    kill at that step's boundary. Always copies its input, so consuming the
+    schedule never mutates a caller-owned dict (the old ``failures.pop``
+    bug), and one dict can seed several runs."""
+
+    def __init__(
+        self,
+        failures: Union[None, "FailureSchedule", Mapping[int, Sequence[int]]] = None,
+    ):
+        if isinstance(failures, FailureSchedule):
+            src = failures._by_step
+        else:
+            src = failures or {}
+        self._by_step: Dict[int, List[int]] = {
+            int(s): list(v) for s, v in dict(src).items() if v
+        }
+
+    @classmethod
+    def parse(cls, spec: str) -> "FailureSchedule":
+        """CLI syntax: comma list of ``step:physical_slice`` pairs."""
+        out: Dict[int, List[int]] = {}
+        for item in filter(None, (spec or "").split(",")):
+            try:
+                s, v = item.split(":")
+                out.setdefault(int(s), []).append(int(v))
+            except ValueError:
+                raise ValueError(
+                    f"bad failure injection {item!r}: expected "
+                    "step:physical_slice (e.g. --inject-failure 5:0,9:2)"
+                ) from None
+        return cls(out)
+
+    def take(self, step: int) -> List[int]:
+        """Victims scheduled for ``step`` (consumed; replays do not re-kill)."""
+        return self._by_step.pop(step, [])
+
+    def pending(self) -> int:
+        return sum(len(v) for v in self._by_step.values())
+
+    def __bool__(self) -> bool:
+        return bool(self._by_step)
+
+
+# ---------------------------------------------------------------------------
+# the session
+# ---------------------------------------------------------------------------
+
+
+class FTSession:
+    """Fault-tolerant executor for one :class:`ResilientProgram`.
+
+    ``replay`` selects the message-recovery policy:
+
+    - ``"log"``  (trainers): per-role step logs feed ``replay_plan`` - the
+      promote path replays only the in-flight step(s), the restore path
+      replays everything after the checkpoint;
+    - ``"none"`` (servers / stateless apps): resume in place at the
+      interrupted step - promoted replicas carry live state, lost work is
+      the program's business (``repack_state`` re-queues it).
+    """
+
+    def __init__(
+        self,
+        program,
+        *,
+        n_slices: int,
+        model_shards: int = 1,
+        rdegree: float = 0.0,
+        devices: Optional[Sequence] = None,
+        heartbeat_timeout: float = 1e9,
+        partner: Optional[PartnerStore] = None,
+        checkpointer: Optional[Checkpointer] = None,
+        checkpoint_every: int = 0,
+        replay: str = "log",
+        report: Optional[FTReport] = None,
+        unit: str = "step",
+    ):
+        assert replay in ("log", "none"), replay
+        import jax  # deferred: callers set XLA_FLAGS before first jax use
+
+        devs = list(devices) if devices is not None else list(jax.devices())
+        need = n_slices * model_shards
+        assert len(devs) >= need, (
+            f"need {need} devices, have {len(devs)} - launch in a subprocess "
+            "with XLA_FLAGS=--xla_force_host_platform_device_count=N"
+        )
+        self.base_mesh = mesh_from_devices(
+            np.array(devs[:need]).reshape(n_slices, model_shards),
+            ("data", "model"),
+        )
+        self.program = program
+        program.session = self
+        self.world = WorldState.create(n_slices, rdegree)
+        self.control = ControlPlane(heartbeat_timeout=heartbeat_timeout)
+        self.partner = partner
+        self.checkpointer = checkpointer
+        self.checkpoint_every = checkpoint_every
+        self.replay = replay
+        self.report = report if report is not None else FTReport()
+        self.unit = unit
+        self.generation = 0
+        self.logs: Dict[int, StepLog] = {}
+        self.reset_logs()
+        self.mesh = None
+        self._regenerate()
+
+    # ------------------------------------------------------------------
+    # lifecycle pieces
+    # ------------------------------------------------------------------
+    def _regenerate(self) -> None:
+        """Communicator regeneration: shrink the base mesh to the live
+        slices and have the program re-lower its step."""
+        self.mesh = shrink_mesh(self.base_mesh, self.world.live_physicals())
+        self.program.build_step(self.mesh, self.world)
+
+    def reset_logs(self) -> None:
+        self.logs = (
+            {r: StepLog(r) for r in range(self.world.topo.n_slices)}
+            if self.replay == "log"
+            else {}
+        )
+
+    def inject(self, victims: Sequence[int]) -> None:
+        """Report failed physical slices to the control plane (the fault
+        injector / SIGCHLD path)."""
+        for victim in victims:
+            if victim in self.world.assignment:
+                self.control.report_failure(victim)
+                self.report.failures += 1
+
+    def _record(self, step: int) -> None:
+        src = self.world.topo.mirror_source()
+        for role in range(self.world.topo.n_slices):
+            s0, s1 = self.program.sample_range(step, src[role])
+            self.logs.setdefault(role, StepLog(role)).record(
+                StepRecord(
+                    step=step, sample_start=s0, sample_end=s1,
+                    collective_seq=step,
+                )
+            )
+
+    def _checkpoint(self, step: int) -> None:
+        snap = self.program.snapshot()
+        if snap is None:
+            return
+        state, meta = snap
+        meta = {"step": step, **meta}
+        if self.partner is not None:
+            # level 1: partner memory (cheap, survives single-slice loss)
+            self.partner.save(0, step, state, meta)
+        if self.checkpointer is not None:
+            # level 2: durable
+            self.checkpointer.save(step, state, meta)
+
+    def _multilevel_restore(self) -> int:
+        """Partner memory -> durable checkpoint -> fresh init. Returns the
+        restored step (-1 = restarted from scratch)."""
+        snap = self.program.snapshot()
+        if snap is None:
+            self.program.init_fresh()
+            return -1
+        template, _ = snap
+        got = (
+            self.partner.restore(0, template)
+            if self.partner is not None
+            else None
+        )
+        if got is None and self.checkpointer is not None:
+            got = self.checkpointer.restore(template)
+        if got is not None:
+            restored_step, state, meta = got
+            self.program.restore(state, meta)
+            return restored_step
+        self.program.init_fresh()
+        return -1
+
+    # ------------------------------------------------------------------
+    # the error handler (paper Sec. VI)
+    # ------------------------------------------------------------------
+    def recover(self, step: int) -> Tuple[Dict, ReplayPlan]:
+        """revoke -> agree -> repair -> (restore) -> repack -> regenerate ->
+        message recovery. Returns (repair report, replay plan)."""
+        t0 = time.perf_counter()
+        self.control.revoke()
+        failed = self.control.agree()
+        old_world = self.world
+        new_world, rep = old_world.repair(sorted(failed))
+        restored_step: Optional[int] = None
+
+        self.report.promotes += len(rep["promoted"])
+        if rep["lost_cmp"]:
+            # unrecoverable by replication: multi-level restore (trainers)
+            # or resume-in-place with the lost roles dropped (servers)
+            self.report.restarts += 1
+            self.report.interruptions.append(step)
+            if self.replay == "log":
+                restored_step = self._multilevel_restore()
+
+        # message recovery plan from the SURVIVORS' logs (paper Sec. VI-B:
+        # "identify the collectives that every live process has completed")
+        # - computed before the logs are re-keyed for the new world.
+        if self.replay == "log":
+            survivor_roles = [
+                r
+                for r in range(old_world.topo.n_slices)
+                if old_world.assignment[r] not in failed
+            ]
+            live_logs = [self.logs[r] for r in survivor_roles if r in self.logs]
+            plan = replay_plan(live_logs, step, restored_step=restored_step)
+        else:
+            plan = ReplayPlan(start_step=step, skip={}, reason="resume in place")
+
+        self.program.repack_state(old_world, new_world)
+        self.world = new_world
+        self.reset_logs()
+        for log in self.logs.values():
+            log.applied.update(range(0, plan.start_step))
+        self._regenerate()
+        self.control.shrink_complete(failed)
+        self.generation = new_world.generation
+        self.program.replay_inputs(plan)
+        self.report.handler_seconds += time.perf_counter() - t0
+        self.report.events.append(
+            f"{self.unit} {step}: failed={sorted(failed)} "
+            f"promoted={rep['promoted']} lost={rep['lost_cmp']} "
+            f"plan={plan.reason}@{plan.start_step}"
+        )
+        return rep, plan
+
+    # ------------------------------------------------------------------
+    # the dispatch loop (paper Fig. 7)
+    # ------------------------------------------------------------------
+    def run(
+        self,
+        steps: int,
+        failures: Union[None, FailureSchedule, Mapping[int, Sequence[int]]] = None,
+        *,
+        start_step: int = 0,
+    ) -> FTReport:
+        """Dispatch units ``start_step .. steps-1``, injecting scheduled
+        failures at unit boundaries (a communication-time detection) and
+        recovering through :meth:`recover` on revocation."""
+        schedule = (
+            failures
+            if isinstance(failures, FailureSchedule)
+            else FailureSchedule(failures)
+        )
+        step = start_step
+        while step < steps:
+            self.inject(schedule.take(step))
+            try:
+                self.control.check(self.generation)
+            except (CommunicatorRevoked, ProcessFailed):
+                _, plan = self.recover(step)
+                replay_from = max(plan.start_step, 0)
+                self.report.replayed_steps += max(0, step - replay_from)
+                step = replay_from
+                continue
+
+            t0 = time.perf_counter()
+            self.program.run_step(step)
+            self.report.app_seconds += time.perf_counter() - t0
+            self.report.steps_completed += 1
+            if self.replay == "log":
+                self._record(step)
+            if (
+                self.checkpoint_every
+                and step > 0
+                and step % self.checkpoint_every == 0
+            ):
+                self._checkpoint(step)
+            step += 1
+        return self.report

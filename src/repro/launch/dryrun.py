@@ -38,6 +38,7 @@ from repro.configs.base import (
     shape_applicable,
 )
 from repro.configs.registry import ARCHS, SHAPES, get_arch, get_shape
+from repro.compat import set_mesh
 from repro.core import data_plane as DP
 from repro.core.replication import WorldState
 from repro.launch.mesh import make_production_mesh
@@ -62,7 +63,7 @@ def build_and_lower(model: ModelConfig, shape: ShapeConfig, mesh, world,
                     repl: ReplicationConfig, *, impl: str = "chunked"):
     specs = input_specs(model, shape, world, mesh)
     opt = adamw(constant(1e-3))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         if specs["kind"] == "train":
             step = DP.build_train_step(
                 model, TrainConfig(), repl, mesh, world, opt, impl=impl

@@ -6,8 +6,7 @@ launch/dryrun.py forces 512 host devices before any jax import).
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.compat import make_mesh as _make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,16 +15,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     on the flattened (pod, data) axes; 'model' is the GSPMD auto axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    return _make_mesh(shape, axes)
 
 
 def make_mesh(data: int, model: int, pods: int = 1):
     """Arbitrary mesh for tests / benches on fake or real devices."""
     if pods > 1:
-        return jax.make_mesh(
-            (pods, data, model), ("pod", "data", "model"),
-            axis_types=(AxisType.Auto,) * 3,
-        )
-    return jax.make_mesh(
-        (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
-    )
+        return _make_mesh((pods, data, model), ("pod", "data", "model"))
+    return _make_mesh((data, model), ("data", "model"))

@@ -34,14 +34,11 @@ def main() -> None:
         os.execv(sys.executable, [sys.executable] + sys.argv)
 
     from repro.configs.registry import get_arch, smoke_config
+    from repro.ft import FailureSchedule
     from repro.serving.engine import ServeEngine
 
     model = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
-    failures = {}
-    if args.inject_failure:
-        for item in args.inject_failure.split(","):
-            s, v = item.split(":")
-            failures.setdefault(int(s), []).append(int(v))
+    failures = FailureSchedule.parse(args.inject_failure)
 
     eng = ServeEngine(
         model,

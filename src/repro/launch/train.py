@@ -55,13 +55,10 @@ def main() -> None:
 
     from repro.configs.registry import get_arch, smoke_config
     from repro.core.simulator import SimCluster
+    from repro.ft import FailureSchedule
 
     model = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
-    failures = {}
-    if args.inject_failure:
-        for item in args.inject_failure.split(","):
-            s, v = item.split(":")
-            failures.setdefault(int(s), []).append(int(v))
+    failures = FailureSchedule.parse(args.inject_failure)
 
     sim = SimCluster(
         model,

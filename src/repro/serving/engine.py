@@ -7,41 +7,57 @@ the promoted replica continues decoding from its own live cache: requests
 lose NOTHING - no prefill re-run, no token loss. Unreplicated slice
 failures re-queue their requests (prefill re-run after elastic shrink).
 
+The engine is a thin :class:`~repro.ft.program.ResilientProgram`: the
+detect/revoke/agree/repair lifecycle lives in FTSession (``replay='none'``
+- a server resumes in place); this module supplies only the decode data
+plane and the serving-specific hook - ``repack_state``, which re-packs
+cache rows so promoted replicas keep their mirrored caches across the
+elastic shrink.
+
 The decode step itself has no cross-slice collectives (the model axis is
 GSPMD-managed), so the data plane stays failure-oblivious, exactly like the
 paper's native-MPI plane.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType, Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import set_mesh
 from repro.configs.base import ModelConfig, ReplicationConfig
 from repro.core import data_plane as DP
-from repro.core.control_plane import ControlPlane, CommunicatorRevoked, ProcessFailed
-from repro.core.elastic import shrink_mesh
-from repro.core.replication import WorldState
-from repro.dist.sharding import cache_shardings, param_shardings
+from repro.dist.sharding import (
+    cache_batch_axis,
+    cache_shardings,
+    param_shardings,
+    path_str,
+)
+from repro.ft import FailureSchedule, FTReport, FTSession, ResilientProgram
 from repro.models import model as M
 
 
 @dataclass
-class ServeReport:
+class ServeReport(FTReport):
+    """FTReport + serving counters. ``decode_seconds``/``failover_seconds``
+    are the serving names for the unified app/handler split."""
+
     tokens_decoded: int = 0
-    decode_seconds: float = 0.0
-    failover_seconds: float = 0.0
-    promotes: int = 0
     requeued_requests: int = 0
-    events: List[str] = field(default_factory=list)
+
+    @property
+    def decode_seconds(self) -> float:
+        return self.app_seconds
+
+    @property
+    def failover_seconds(self) -> float:
+        return self.handler_seconds
 
 
-class ServeEngine:
+class ServeEngine(ResilientProgram):
     def __init__(
         self,
         model_cfg: ModelConfig,
@@ -54,61 +70,122 @@ class ServeEngine:
         seed: int = 0,
         params=None,
     ):
-        n_dev = len(jax.devices())
-        assert n_dev >= n_slices * model_shards
         self.model_cfg = model_cfg
         self.repl = ReplicationConfig(rdegree=rdegree)
         self.per_slice_batch = per_slice_batch
         self.max_len = max_len
-        self.base_mesh = Mesh(
-            np.array(jax.devices()[: n_slices * model_shards]).reshape(
-                n_slices, model_shards
-            ),
-            ("data", "model"),
-            axis_types=(AxisType.Auto, AxisType.Auto),
-        )
-        self.world = WorldState.create(n_slices, rdegree)
-        self.control = ControlPlane(heartbeat_timeout=1e9)
-        self.report = ServeReport()
-        self.generation = 0
-
         self.params_host = params or M.init(jax.random.PRNGKey(seed), model_cfg)
-        self.mesh: Mesh = None
-        self.cache = None
+        self.cache = None  # device cache after build_step; host copy mid-repair
         self.pos = 0
-        self._rebuild(fresh_cache=True)
+        self._cur: Optional[np.ndarray] = None
+        self._out: List[np.ndarray] = []
+
+        self.session = FTSession(
+            self,
+            n_slices=n_slices,
+            model_shards=model_shards,
+            rdegree=rdegree,
+            replay="none",
+            report=ServeReport(),
+            unit="token",
+        )
+
+    # ---- convenience views over the session --------------------------------
+    @property
+    def world(self):
+        return self.session.world
+
+    @property
+    def mesh(self):
+        return self.session.mesh
+
+    @property
+    def report(self) -> ServeReport:
+        return self.session.report
+
+    @property
+    def generation(self) -> int:
+        return self.session.generation
 
     # ------------------------------------------------------------------
-    def _rows(self) -> int:
-        return self.world.topo.n_slices * self.per_slice_batch
-
-    def _rebuild(self, fresh_cache: bool = False) -> None:
-        live = self.world.live_physicals()
-        self.mesh = shrink_mesh(self.base_mesh, live)
-        with jax.set_mesh(self.mesh):
-            pshard = param_shardings(self.params_host, self.mesh, self.model_cfg)
+    # ResilientProgram hooks
+    # ------------------------------------------------------------------
+    def build_step(self, mesh, world) -> None:
+        with set_mesh(mesh):
+            pshard = param_shardings(self.params_host, mesh, self.model_cfg)
             self.params = jax.device_put(self.params_host, pshard)
-            if fresh_cache or self.cache is None:
+            if self.cache is None:
                 enc_len = 64 if self.model_cfg.enc_layers else 0
                 cache_host = M.init_cache(
-                    self.model_cfg, self._rows(), max_len=self.max_len,
-                    enc_len=enc_len, dtype=jnp.float32,
+                    self.model_cfg,
+                    world.topo.n_slices * self.per_slice_batch,
+                    max_len=self.max_len,
+                    enc_len=enc_len,
+                    dtype=jnp.float32,
                 )
             else:
                 cache_host = self.cache  # survivors' mirrored caches (host copy)
-            cshard = cache_shardings(cache_host, self.mesh, shard_batch=True)
+            cshard = cache_shardings(cache_host, mesh, shard_batch=True)
             self.cache = jax.device_put(cache_host, cshard)
             self.step_fn = DP.build_serve_step(
-                self.model_cfg, self.repl, self.mesh, self.world,
+                self.model_cfg, self.repl, mesh, world,
                 shard_batch=True, donate=False, cache_example=self.cache,
             )
+
+    def run_step(self, t: int) -> None:
+        fed = self._mirror_tokens(self._cur)
+        with set_mesh(self.mesh):
+            next_fed, self.cache = self.step_fn(
+                self.params, self.cache, jnp.asarray(fed), jnp.int32(self.pos)
+            )
+        next_fed = np.asarray(next_fed)
+        # computational slices' outputs are authoritative
+        order = self.world.roles_in_mesh_order()
+        n_comp = self.world.topo.n_comp
+        by_role = {
+            r: next_fed[i * self.per_slice_batch : (i + 1) * self.per_slice_batch]
+            for i, r in enumerate(order)
+        }
+        cmp_next = np.stack([by_role[c] for c in range(n_comp)])
+        self._out.append(cmp_next[..., 0])
+        self._cur = cmp_next
+        self.pos += 1
+        self.report.tokens_decoded += n_comp * self.per_slice_batch
+
+    def repack_state(self, old_world, new_world) -> None:
+        """Promoted replicas keep their caches: re-pack cache rows so the
+        new mesh order draws each role's cache from the physical slice that
+        now owns it; unreplicated losses re-queue their requests."""
+        cache_host = jax.tree.map(np.asarray, self.cache)  # survivors' caches
+        old_pos = old_world.mesh_position()
+        new_order = new_world.roles_in_mesh_order()
+        b = self.per_slice_batch
+
+        def repack(path, arr):
+            axis = cache_batch_axis(path, arr.ndim)
+            rows = []
+            for r in new_order:
+                phys = new_world.assignment[r]
+                src_row = old_pos[phys]
+                rows.append(
+                    np.take(arr, range(src_row * b, (src_row + 1) * b), axis=axis)
+                )
+            return np.concatenate(rows, axis=axis)
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(cache_host)
+        self.cache = jax.tree_util.tree_unflatten(
+            treedef, [repack(path_str(kp), leaf) for kp, leaf in flat]
+        )
+        lost_roles = old_world.topo.n_comp - new_world.topo.n_comp
+        self.report.requeued_requests += lost_roles * b
+        if self._cur is not None:
+            self._cur = self._cur[: new_world.topo.n_comp]
 
     # ------------------------------------------------------------------
     def _mirror_tokens(self, cmp_tokens: np.ndarray) -> np.ndarray:
         """Lay out per-cmp-slice request tokens in mesh order, mirroring the
         partner's stream onto replica slices."""
-        topo = self.world.topo
-        src = topo.mirror_source()
+        src = self.world.topo.mirror_source()
         order = self.world.roles_in_mesh_order()
         return np.concatenate([cmp_tokens[src[r]] for r in order], axis=0)
 
@@ -116,91 +193,17 @@ class ServeEngine:
                failures: Optional[Dict[int, List[int]]] = None) -> np.ndarray:
         """Greedy-decode ``steps`` tokens for every request slot. Returns
         (n_comp * per_slice_batch, steps) generated ids."""
-        failures = dict(failures or {})
-        topo = self.world.topo
-        n_comp = topo.n_comp
+        n_comp = self.world.topo.n_comp
         if prompt_tokens is None:
             prompt_tokens = np.ones(
                 (n_comp, self.per_slice_batch, 1), dtype=np.int32
             )
-        cur = prompt_tokens[:, :, -1:]
-        out: List[np.ndarray] = []
-        t = 0
-        while t < steps:
-            if t in failures:
-                for v in failures.pop(t):
-                    if v in self.world.assignment:
-                        self.control.report_failure(v)
-            try:
-                self.control.check(self.generation)
-            except (CommunicatorRevoked, ProcessFailed):
-                self._failover(t)
-                topo = self.world.topo
-                n_comp = topo.n_comp
-                cur = cur[:n_comp]
-                continue
-
-            fed = self._mirror_tokens(cur)
-            t0 = time.perf_counter()
-            with jax.set_mesh(self.mesh):
-                next_fed, self.cache = self.step_fn(
-                    self.params, self.cache, jnp.asarray(fed), jnp.int32(self.pos)
-                )
-            next_fed = np.asarray(next_fed)
-            self.report.decode_seconds += time.perf_counter() - t0
-            # computational slices' outputs are authoritative
-            order = self.world.roles_in_mesh_order()
-            by_role = {
-                r: next_fed[i * self.per_slice_batch : (i + 1) * self.per_slice_batch]
-                for i, r in enumerate(order)
-            }
-            cmp_next = np.stack([by_role[c] for c in range(n_comp)])
-            out.append(cmp_next[..., 0])
-            cur = cmp_next
-            self.pos += 1
-            self.report.tokens_decoded += n_comp * self.per_slice_batch
-            t += 1
+        self._cur = prompt_tokens[:, :, -1:]
+        self._out = []
+        self.session.run(steps, FailureSchedule(failures))
+        out = self._out
         if not out:
             return np.zeros((n_comp, self.per_slice_batch, 0), np.int32)
         # elastic shrink mid-decode can reduce rows; align on the survivors
         rows = min(o.shape[0] for o in out)
         return np.stack([o[:rows] for o in out], axis=-1)
-
-    # ------------------------------------------------------------------
-    def _failover(self, t: int) -> None:
-        """Repair the serving world: promoted replicas keep their caches."""
-        t0 = time.perf_counter()
-        self.control.revoke()
-        failed = self.control.agree()
-        cache_host = jax.tree.map(np.asarray, self.cache)  # survivors' caches
-        old_world = self.world
-        new_world, rep = self.world.repair(sorted(failed))
-        self.report.promotes += len(rep["promoted"])
-        self.report.requeued_requests += len(rep["lost_cmp"]) * self.per_slice_batch
-
-        # re-pack cache rows: new mesh order draws each role's cache from the
-        # physical slice that now owns it (promoted replicas carry theirs)
-        old_pos = old_world.mesh_position()
-        new_order = new_world.roles_in_mesh_order()
-
-        def repack(arr):
-            # arr (..., B_old_total, ...) with batch at axis 1 (stacked caches)
-            b = self.per_slice_batch
-            rows = []
-            for r in new_order:
-                phys = new_world.assignment[r]
-                src_row = old_pos[phys]
-                rows.append(arr[:, src_row * b : (src_row + 1) * b])
-            return np.concatenate(rows, axis=1)
-
-        cache_host = jax.tree.map(repack, cache_host)
-        self.world = new_world
-        self.cache = cache_host
-        self._rebuild(fresh_cache=False)
-        self.control.shrink_complete(failed)
-        self.generation = new_world.generation
-        self.report.failover_seconds += time.perf_counter() - t0
-        self.report.events.append(
-            f"token {t}: failed={sorted(failed)} promoted={rep['promoted']} "
-            f"lost={rep['lost_cmp']}"
-        )

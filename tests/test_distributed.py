@@ -18,6 +18,7 @@ def test_collective_modes_agree():
     out = run_subprocess(
         """
         import jax, jax.numpy as jnp, numpy as np
+        from repro.compat import set_mesh
         from repro.configs.registry import smoke_config
         from repro.configs.base import ReplicationConfig, TrainConfig
         from repro.core.replication import WorldState
@@ -41,7 +42,7 @@ def test_collective_modes_agree():
             return {"tokens": jnp.asarray(full)}
 
         results = {}
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             pshard = param_shardings(params0, mesh, cfg)
             for mode in ["paper", "fused", "branch"]:
                 repl = ReplicationConfig(rdegree=1.0, collective_mode=mode,
@@ -146,20 +147,20 @@ def test_multi_pod_axes_and_groups():
     out = run_subprocess(
         """
         import jax, jax.numpy as jnp
-        from jax.sharding import PartitionSpec as P, AxisType
-        mesh = jax.make_mesh((2, 4, 1), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,)*3)
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, set_mesh, shard_map
+        mesh = make_mesh((2, 4, 1), ("pod", "data", "model"))
         cmp_groups = [list(range(6)), [6, 7]]
         pairs = [(0, 6), (1, 7)]
         def f(x):
             g = jax.lax.psum(x, ("pod", "data"), axis_index_groups=cmp_groups)
             gr = jax.lax.ppermute(g, ("pod", "data"), pairs)
             return g, gr
-        sm = jax.shard_map(f, mesh=mesh, in_specs=P(("pod", "data")),
-                           out_specs=(P(("pod", "data")),) * 2,
-                           axis_names={"pod", "data"}, check_vma=False)
+        sm = shard_map(f, mesh=mesh, in_specs=P(("pod", "data")),
+                       out_specs=(P(("pod", "data")),) * 2,
+                       axis_names={"pod", "data"}, check_vma=False)
         x = jnp.arange(8.0)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             g, gr = jax.jit(sm)(x)
         assert float(g[0]) == 15.0 and float(g[6]) == 13.0
         assert float(gr[6]) == 15.0 and float(gr[7]) == 15.0

@@ -1,0 +1,187 @@
+"""Unit suite for the repro.ft session API.
+
+Host-side behaviours (FailureSchedule, report adapters) run in-process;
+session lifecycle tests (generation bump on revoke, promote vs lost-cmp
+restore paths, multi-level restore ordering, replay bookkeeping) run a
+device-free fake program in a subprocess with fake devices (FTSession
+builds a real mesh even when the program never jits anything).
+
+The companion parity test - the refactored SimCluster reproducing the
+failure-free loss trajectory bit-for-bit through a promote-path recovery -
+is ``test_distributed.py::test_promote_recovery_bitwise_trajectory``.
+"""
+import pytest
+
+from conftest import run_subprocess
+
+from repro.ft import FailureSchedule, FTReport
+from repro.core.simulator import SimReport
+from repro.serving.engine import ServeReport
+
+
+# ---------------------------------------------------------------------------
+# FailureSchedule (host-only)
+# ---------------------------------------------------------------------------
+
+
+def test_failure_schedule_never_mutates_caller():
+    src = {3: [0, 1], 5: [2]}
+    sched = FailureSchedule(src)
+    assert sched.take(3) == [0, 1]
+    assert sched.take(3) == []  # consumed
+    assert src == {3: [0, 1], 5: [2]}  # caller's dict untouched
+    assert sched.pending() == 1
+    # a schedule can seed another schedule (copy, not view)
+    sched2 = FailureSchedule(sched)
+    assert sched2.take(5) == [2]
+    assert sched.take(5) == [2]
+
+
+def test_failure_schedule_parse():
+    sched = FailureSchedule.parse("5:0,5:1,9:3")
+    assert sched.take(5) == [0, 1]
+    assert sched.take(9) == [3]
+    assert not FailureSchedule.parse("")
+
+
+# ---------------------------------------------------------------------------
+# unified report adapters (host-only)
+# ---------------------------------------------------------------------------
+
+
+def test_reports_extend_ftreport():
+    sim, serve = SimReport(), ServeReport()
+    assert isinstance(sim, FTReport) and isinstance(serve, FTReport)
+    assert sim.losses == []
+    serve.app_seconds, serve.handler_seconds = 1.5, 0.25
+    assert serve.decode_seconds == 1.5  # serving names alias the unified split
+    assert serve.failover_seconds == 0.25
+
+
+# ---------------------------------------------------------------------------
+# session lifecycle (fake program, subprocess for the device pool)
+# ---------------------------------------------------------------------------
+
+_FAKE = """
+        import numpy as np
+        from repro.checkpoint.checkpointer import PartnerStore
+        from repro.ft import FailureSchedule, FTSession, ResilientProgram
+
+        class Fake(ResilientProgram):
+            def __init__(self):
+                self.value = np.zeros(2)
+                self.builds = 0
+                self.calls = []
+                self.restored_meta = None
+                self.fresh_inits = 0
+            def build_step(self, mesh, world):
+                self.builds += 1
+            def run_step(self, step):
+                self.calls.append(step)
+                self.value = self.value + 1
+            def sample_range(self, step, cmp_role):
+                return (step * 10, step * 10 + 10)
+            def snapshot(self):
+                return {"v": self.value}, {"tag": "fake"}
+            def restore(self, state, meta):
+                self.value = state["v"]
+                self.restored_meta = dict(meta)
+            def init_fresh(self):
+                self.value = np.zeros(2)
+                self.fresh_inits += 1
+"""
+
+
+@pytest.mark.slow
+def test_session_generation_bump_and_promote_path():
+    out = run_subprocess(
+        _FAKE
+        + """
+        prog = Fake()
+        s = FTSession(prog, n_slices=4, rdegree=1.0, replay="log")
+        assert s.generation == 0 and prog.builds == 1
+        rep = s.run(5, {2: [0]})
+        # revoke bumped the generation; shrink cleared the revocation
+        assert s.generation == 1, s.generation
+        s.control.check(s.generation)  # dispatches again at the new gen
+        assert rep.failures == 1 and rep.promotes == 1 and rep.restarts == 0
+        assert s.world.topo.n_comp == 2 and s.world.n_live == 3
+        assert prog.builds == 2  # re-lowered once after repair
+        # promote path: every survivor completed step 1, so the in-flight
+        # step 2 is dispatched exactly once after recovery - no duplicates
+        assert prog.calls == [0, 1, 2, 3, 4], prog.calls
+        assert rep.replayed_steps == 0 and rep.steps_completed == 5
+        # duplicate suppression bookkeeping: pre-recovery steps were marked
+        # applied in the re-keyed logs, replayed steps recorded on top
+        assert all(
+            log.has_applied(i) for log in s.logs.values() for i in range(5)
+        )
+        assert "promote" in rep.events[0]
+        print("PROMOTE-PATH-OK")
+        """
+    )
+    assert "PROMOTE-PATH-OK" in out
+
+
+@pytest.mark.slow
+def test_session_lost_cmp_restores_from_partner_then_replays():
+    out = run_subprocess(
+        _FAKE
+        + """
+        prog = Fake()
+        s = FTSession(prog, n_slices=4, rdegree=0.0, partner=PartnerStore(),
+                      checkpoint_every=3, replay="log")
+        rep = s.run(6, {5: [1]})
+        # unreplicated loss at step 5 -> restore from the step-3 partner
+        # checkpoint, replay step 4, then run 5
+        assert rep.restarts == 1 and rep.interruptions == [5]
+        assert prog.restored_meta == {"step": 3, "tag": "fake"}
+        assert prog.fresh_inits == 0
+        assert prog.calls == [0, 1, 2, 3, 4, 4, 5], prog.calls
+        assert rep.replayed_steps == 1
+        assert s.world.topo.n_comp == 3  # elastic shrink
+        print("PARTNER-RESTORE-OK")
+        """
+    )
+    assert "PARTNER-RESTORE-OK" in out
+
+
+@pytest.mark.slow
+def test_session_lost_cmp_fresh_init_when_no_checkpoint():
+    out = run_subprocess(
+        _FAKE
+        + """
+        prog = Fake()
+        s = FTSession(prog, n_slices=4, rdegree=0.0, replay="log")
+        rep = s.run(4, {2: [3]})
+        # nothing to restore from: restart from scratch and replay 0..1
+        assert prog.fresh_inits == 1 and prog.restored_meta is None
+        assert prog.calls == [0, 1, 0, 1, 2, 3], prog.calls
+        assert rep.replayed_steps == 2 and rep.restarts == 1
+        print("FRESH-INIT-OK")
+        """
+    )
+    assert "FRESH-INIT-OK" in out
+
+
+@pytest.mark.slow
+def test_session_resume_in_place_policy():
+    out = run_subprocess(
+        _FAKE
+        + """
+        repacks = []
+        class Server(Fake):
+            def repack_state(self, old_world, new_world):
+                repacks.append((old_world.topo.n_comp, new_world.topo.n_comp))
+        prog = Server()
+        s = FTSession(prog, n_slices=4, rdegree=1.0, replay="none")
+        rep = s.run(4, {1: [0]})
+        # replay='none': the interrupted unit reruns in place, nothing else
+        assert prog.calls == [0, 1, 2, 3], prog.calls
+        assert repacks == [(2, 2)]  # promote kept the role count
+        assert rep.replayed_steps == 0 and rep.promotes == 1
+        assert "resume in place" in rep.events[0]
+        print("RESUME-IN-PLACE-OK")
+        """
+    )
+    assert "RESUME-IN-PLACE-OK" in out

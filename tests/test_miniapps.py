@@ -13,6 +13,7 @@ def test_miniapps_verify_across_degrees():
     out = run_subprocess(
         """
         import jax, numpy as np, jax.numpy as jnp
+        from repro.compat import set_mesh
         from repro.configs.base import ReplicationConfig
         from repro.core.replication import WorldState
         from repro.launch.mesh import make_mesh
@@ -23,7 +24,7 @@ def test_miniapps_verify_across_degrees():
         for rdeg, mode in [(0.0, "paper"), (1.0, "paper"), (1.0, "fused")]:
             world = WorldState.create(8, rdeg)
             repl = ReplicationConfig(rdegree=rdeg, collective_mode=mode)
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 for name, make in MINIAPPS.items():
                     if name == "is" and world.topo.n_rep not in (0, world.topo.n_comp):
                         continue
@@ -45,10 +46,10 @@ def test_miniapps_verify_across_degrees():
         w0 = WorldState.create(4, 0.0)
         w1 = WorldState.create(8, 1.0)
         from repro.apps.miniapps import make_cg
-        with jax.set_mesh(make_mesh(4, 1)):
+        with set_mesh(make_mesh(4, 1)):
             fn0, b0, _ = make_cg(make_mesh(4, 1), w0, ReplicationConfig())
             r0 = np.asarray(fn0(jnp.asarray(b0))[1])[0]
-        with jax.set_mesh(make_mesh(8, 1)):
+        with set_mesh(make_mesh(8, 1)):
             repl = ReplicationConfig(rdegree=1.0, collective_mode="paper")
             fn1, b1, _ = make_cg(make_mesh(8, 1), w1, repl)
             r1 = np.asarray(fn1(jnp.asarray(b1))[1])[0]
