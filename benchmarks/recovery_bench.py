@@ -1,11 +1,19 @@
-"""Recovery-cost benchmark: promote vs checkpoint/restart (the paper's
+"""Recovery-cost benchmark over the ``repro.store`` ladder (the paper's
 core motivation - "replication allows for fast recovery ... by simply
 dropping the failed processes").
 
 Measures, with real state sizes on the simulated cluster:
-- promote path  : repair + communicator regen + re-lower (NO state motion)
-- restart path  : repair + restore from partner/durable checkpoint + replay
-- 3-phase clone : dynamic replica rebirth cost (state_transfer)
+
+- promote path   : repair + communicator regen + re-lower (NO state motion)
+- level-0 restore: LiveCloneStore submit + load (3-phase clone, O(memcpy))
+- level-1 restore: PartnerMemoryStore K-way sharded submit + load
+- level-2 restore: DurableStore async write + load (disk roundtrip)
+- pair-death     : BOTH members of a mirrored pair killed mid-run; recovery
+                   must come from the sharded level-1 redundancy (the
+                   scenario the old single-partner copy could not survive)
+
+Usage: ``python benchmarks/recovery_bench.py [--tiny]`` - ``--tiny`` runs
+the CI smoke shape (4 slices, fewer steps).
 """
 from __future__ import annotations
 
@@ -20,45 +28,74 @@ import json, time, tempfile
 import jax, numpy as np
 from repro.configs.registry import smoke_config
 from repro.core.simulator import SimCluster
-from repro.core.state_transfer import HostState, clone_state
+from repro.store import (DurableStore, LiveCloneStore, PartnerMemoryStore,
+                         RecoveryLadder)
 
+TINY = {tiny}
+N = 4 if TINY else 8
 results = []
 cfg = smoke_config("qwen2.5-3b")
 
-# promote path
-sim = SimCluster(cfg, n_slices=8, model_shards=1, rdegree=1.0, seq_len=32)
-sim.run(4, failures={2: [0]})
-results.append({"path": "promote", "handler_s": sim.report.handler_seconds,
-                "replayed": sim.report.replayed_steps})
+# promote path: replication masks the failure, no state motion
+sim = SimCluster(cfg, n_slices=N, model_shards=1, rdegree=1.0, seq_len=32)
+sim.run(4, failures={{2: [0]}})
+results.append({{"path": "promote", "restore_s": sim.report.handler_seconds,
+                "replayed": sim.report.replayed_steps}})
 
-# restart path (no replicas -> partner-memory restore + replay)
-sim2 = SimCluster(cfg, n_slices=8, model_shards=1, rdegree=0.0, seq_len=32,
+# ladder levels, timed on the trainer's real state pytree
+state = {{"params": sim.params_replica(),
+         "opt": jax.tree.map(np.asarray, sim.opt_state)}}
+template = jax.tree.map(np.zeros_like, state)
+stores = [
+    LiveCloneStore(),
+    PartnerMemoryStore(range(N), redundancy=2),
+    DurableStore(tempfile.mkdtemp()),
+]
+nbytes = int(sum(a.nbytes for a in jax.tree.leaves(state)))
+for s in stores:
+    t0 = time.perf_counter(); s.submit(4, state, {{"step": 4}}); s.wait()
+    submit_s = time.perf_counter() - t0
+    t0 = time.perf_counter(); got = s.load(template)
+    load_s = time.perf_counter() - t0
+    assert got is not None and got[0] == 4
+    results.append({{"path": f"level{{s.level}}/{{s.name}}",
+                    "restore_s": load_s, "submit_s": submit_s,
+                    "bytes": nbytes}})
+
+# restart path: unreplicated loss -> ladder restore + replay
+sim2 = SimCluster(cfg, n_slices=N, model_shards=1, rdegree=0.0, seq_len=32,
                   checkpoint_dir=tempfile.mkdtemp(), checkpoint_every=2)
-sim2.run(6, failures={5: [3]})
-results.append({"path": "restart", "handler_s": sim2.report.handler_seconds,
-                "replayed": sim2.report.replayed_steps})
+sim2.run(6, failures={{5: [N - 1]}})
+results.append({{"path": "restart", "restore_s": sim2.report.handler_seconds,
+                "replayed": sim2.report.replayed_steps,
+                "restored_from": sim2.report.restored_from}})
 
-# 3-phase clone (dynamic replica rebirth)
-p = sim.params_replica()
-o = jax.tree.map(np.asarray, sim.opt_state)
-host = HostState(step=4, rng_seed=0, data_cursor=4, collective_seq=4, generation=0)
-t0 = time.perf_counter()
-_, _, _, rep = clone_state(p, o, host)
-results.append({"path": "clone3phase", "handler_s": rep.total_seconds,
-                "bytes": rep.total_bytes, "verified": rep.verified,
-                "phases": rep.seconds_by_phase})
+# partner-pair double failure: cmp role 0 AND its replica die together;
+# the K-way sharded level-1 store must serve the restore
+sim3 = SimCluster(cfg, n_slices=N, model_shards=1, rdegree=1.0, seq_len=32,
+                  checkpoint_every=2)
+pair = [0, sim3.world.topo.n_comp]  # physicals of (cmp 0, its replica)
+rep3 = sim3.run(6, failures={{3: pair}})
+assert rep3.restarts == 1, "pair death must be unmaskable"
+assert rep3.restored_from and rep3.restored_from[0].startswith("L1:partner"), (
+    "pair death must restore from sharded partner redundancy: "
+    + str(rep3.restored_from))
+results.append({{"path": "pair-death", "restore_s": rep3.handler_seconds,
+                "replayed": rep3.replayed_steps,
+                "restored_from": rep3.restored_from}})
 print("RESULTS_JSON:" + json.dumps(results))
 """
 
 
-def run():
+def run(tiny: bool = False):
     env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    n = 4 if tiny else 8
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
     env["PYTHONPATH"] = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src")
     )
     proc = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(_CHILD)],
+        [sys.executable, "-c", textwrap.dedent(_CHILD.format(tiny=tiny))],
         capture_output=True, text=True, env=env, timeout=2000,
     )
     if proc.returncode != 0:
@@ -71,12 +108,15 @@ def rows(results):
     out = []
     for r in results:
         extra = f"replayed={r.get('replayed', 0)}"
-        if r["path"] == "clone3phase":
-            extra = f"bytes={r.get('bytes', 0)} verified={r.get('verified')}"
-        out.append((f"recovery/{r['path']}", r["handler_s"] * 1e6, extra))
+        if "restored_from" in r:
+            extra += " from=" + ",".join(r["restored_from"] or ["-"])
+        if "bytes" in r:
+            extra = f"bytes={r['bytes']} submit_us={r.get('submit_s', 0) * 1e6:.0f}"
+        out.append((f"recovery/{r['path']}", r["restore_s"] * 1e6, extra))
     return out
 
 
 if __name__ == "__main__":
-    for name, us, d in rows(run()):
+    tiny = "--tiny" in sys.argv
+    for name, us, d in rows(run(tiny=tiny)):
         print(f"{name},{us:.0f},{d}")

@@ -56,8 +56,14 @@ class StepLog:
         return step in self.applied
 
     def trim(self, upto_step: int) -> None:
-        """Garbage-collect records at or below a globally-complete step."""
+        """Garbage-collect records at or below a globally-complete step.
+        ``applied`` is trimmed alongside ``records`` - duplicate
+        suppression only ever consults steps at or after the replay start,
+        so entries at or below a globally-complete step can never be
+        queried again (they used to accumulate for the whole run, growing
+        memory linearly in steps across long multi-failure runs)."""
         self.records = [r for r in self.records if r.step > upto_step]
+        self.applied = {s for s in self.applied if s > upto_step}
 
 
 def min_completed_step(logs: Sequence[StepLog]) -> int:

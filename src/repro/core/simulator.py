@@ -31,7 +31,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.checkpointer import Checkpointer, PartnerStore
 from repro.compat import set_mesh
 from repro.configs.base import ModelConfig, ReplicationConfig, TrainConfig
 from repro.core import data_plane as DP
@@ -41,6 +40,7 @@ from repro.ft import FailureSchedule, FTReport, FTSession, ResilientProgram
 from repro.models import model as M
 from repro.optim.adamw import adamw
 from repro.optim.schedules import constant
+from repro.store import DurableStore, PartnerMemoryStore, RecoveryLadder
 
 
 @dataclass
@@ -65,6 +65,8 @@ class SimCluster(ResilientProgram):
         seed: int = 0,
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: int = 0,
+        partner_redundancy: int = 2,
+        stores: Optional[RecoveryLadder] = None,
         impl: str = "chunked",
         microbatches: int = 1,
     ):
@@ -82,6 +84,16 @@ class SimCluster(ResilientProgram):
         self.opt_state = self.optimizer.init(self.params)
         self.step_fn = None
 
+        # recovery-state plane: level-1 K-way partner memory over the slice
+        # hosts, plus level-2 durable when a directory is given
+        if stores is None:
+            levels = [
+                PartnerMemoryStore(range(n_slices), redundancy=partner_redundancy)
+            ]
+            if checkpoint_dir:
+                levels.append(DurableStore(checkpoint_dir))
+            stores = RecoveryLadder(levels)
+
         # the session owns the entire ULFM lifecycle; FTSession.__init__
         # builds the base mesh and calls build_step for the initial lowering
         self.session = FTSession(
@@ -90,8 +102,7 @@ class SimCluster(ResilientProgram):
             model_shards=model_shards,
             rdegree=rdegree,
             heartbeat_timeout=1e9,  # report-driven in sim
-            partner=PartnerStore(),
-            checkpointer=Checkpointer(checkpoint_dir) if checkpoint_dir else None,
+            stores=stores,
             checkpoint_every=checkpoint_every,
             replay="log",
             report=SimReport(),
@@ -116,12 +127,8 @@ class SimCluster(ResilientProgram):
         return self.session.generation
 
     @property
-    def partner(self) -> PartnerStore:
-        return self.session.partner
-
-    @property
-    def ckpt(self) -> Optional[Checkpointer]:
-        return self.session.checkpointer
+    def ladder(self) -> RecoveryLadder:
+        return self.session.ladder
 
     # ------------------------------------------------------------------
     # ResilientProgram hooks

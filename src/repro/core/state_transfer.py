@@ -14,8 +14,15 @@ copy, but the 3-phase ordering and integrity discipline carry over:
                              jmp_buf analogue - restored last so the clone
                              resumes exactly at the pre-transfer point)
 
-Used for dynamic replica (re)birth - the paper's future-work "dynamic
-replication" - and by the recovery benchmark to price promote vs restart.
+:func:`clone_pytree` is the generic engine (one phase per top-level key);
+:func:`clone_state` keeps the paper's named 3-phase layout on top of it.
+Verification is per phase: a cheap abs-sum checksum by default, optionally
+a per-leaf bit-exact comparison (``bit_exact=True``) - the checksum can
+pass on a corrupted clone (e.g. two leaves swapped, or compensating sign
+flips), so restore paths that must be provably faithful opt into the
+exact check. Used for dynamic replica (re)birth via
+:class:`repro.store.liveclone.LiveCloneStore` and by the recovery
+benchmark to price promote vs restart.
 """
 from __future__ import annotations
 
@@ -45,7 +52,13 @@ class HostState:
 class TransferReport:
     bytes_by_phase: Dict[str, int] = field(default_factory=dict)
     seconds_by_phase: Dict[str, float] = field(default_factory=dict)
-    verified: bool = False
+    #: phase -> verification outcome; empty when verify was skipped
+    verified_by_phase: Dict[str, bool] = field(default_factory=dict)
+    bit_exact: bool = False  # which check produced verified_by_phase
+
+    @property
+    def verified(self) -> bool:
+        return bool(self.verified_by_phase) and all(self.verified_by_phase.values())
 
     @property
     def total_bytes(self) -> int:
@@ -57,7 +70,9 @@ class TransferReport:
 
 
 def _tree_bytes(tree: PyTree) -> int:
-    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+    return sum(
+        x.size * x.dtype.itemsize for x in jax.tree.leaves(tree) if hasattr(x, "size")
+    )
 
 
 def _copy_tree(tree: PyTree, sharding=None) -> PyTree:
@@ -78,30 +93,94 @@ def _checksum(tree: PyTree) -> float:
     )
 
 
-def clone_state(params: PyTree, opt_state: PyTree, host: HostState, *,
-                sharding=None, verify: bool = True
-                ) -> Tuple[PyTree, PyTree, HostState, TransferReport]:
-    """3-phase live clone of a slice's training state."""
-    report = TransferReport()
+def verify_clone(src: PyTree, dst: PyTree, *, bit_exact: bool = False) -> bool:
+    """Integrity check for one transferred phase.
 
-    t0 = time.perf_counter()
-    params_c = _copy_tree(params, sharding)
-    report.seconds_by_phase["data_segment(params)"] = time.perf_counter() - t0
-    report.bytes_by_phase["data_segment(params)"] = _tree_bytes(params)
-
-    t0 = time.perf_counter()
-    opt_c = _copy_tree(opt_state, sharding)
-    report.seconds_by_phase["heap_segment(optimizer)"] = time.perf_counter() - t0
-    report.bytes_by_phase["heap_segment(optimizer)"] = _tree_bytes(opt_state)
-
-    t0 = time.perf_counter()
-    host_c = HostState(**vars(host)) if not isinstance(host, HostState) else host
-    report.seconds_by_phase["stack_segment(host)"] = time.perf_counter() - t0
-    report.bytes_by_phase["stack_segment(host)"] = 64  # O(1) control words
-
-    if verify:
-        report.verified = (
-            abs(_checksum(params_c) - _checksum(params)) < 1e-6 * max(1.0, _checksum(params))
-            and abs(_checksum(opt_c) - _checksum(opt_state)) < 1e-6 * max(1.0, _checksum(opt_state))
+    - default: relative abs-sum checksum (cheap, catches bulk corruption);
+    - ``bit_exact``: every leaf compared elementwise (catches swapped or
+      compensating corruptions the checksum is blind to).
+    """
+    if bit_exact:
+        a, b = jax.tree.leaves(src), jax.tree.leaves(dst)
+        return len(a) == len(b) and all(
+            np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(a, b)
         )
-    return params_c, opt_c, host_c, report
+    cs = _checksum(src)
+    return abs(_checksum(dst) - cs) < 1e-6 * max(1.0, cs)
+
+
+def clone_pytree(
+    state: PyTree,
+    *,
+    phases: Optional[Dict[str, PyTree]] = None,
+    sharding=None,
+    verify: bool = True,
+    bit_exact: bool = False,
+) -> Tuple[PyTree, TransferReport]:
+    """Phase-ordered clone of an arbitrary state pytree.
+
+    ``phases`` names sub-trees to transfer (and verify) independently; by
+    default each top-level key of a dict state is its own phase, and a
+    non-dict state is one ``state`` phase. Leaves that are not arrays
+    (host control scalars, dataclasses) are copied by construction and
+    verified by equality.
+    """
+    report = TransferReport(bit_exact=bit_exact)
+    # (phase name, output key, subtree): output keys keep the state's own
+    # (possibly non-string) keys; phase names label the report
+    if phases is not None:
+        items = [(name, name, sub) for name, sub in phases.items()]
+    elif isinstance(state, dict):
+        items = [(str(k), k, v) for k, v in state.items()]
+    else:
+        items = [("state", "state", state)]
+    out: Dict[Any, PyTree] = {}
+    for name, key, sub in items:
+        t0 = time.perf_counter()
+        arrays = all(hasattr(x, "dtype") for x in jax.tree.leaves(sub))
+        clone = _copy_tree(sub, sharding) if arrays else _host_copy(sub)
+        report.seconds_by_phase[name] = time.perf_counter() - t0
+        report.bytes_by_phase[name] = _tree_bytes(sub) or 64  # O(1) control words
+        if verify:
+            report.verified_by_phase[name] = (
+                verify_clone(sub, clone, bit_exact=bit_exact)
+                if arrays
+                else sub == clone
+            )
+        out[key] = clone
+    rebuilt = out if (phases is not None or isinstance(state, dict)) else out["state"]
+    return rebuilt, report
+
+
+def _host_copy(sub: PyTree) -> PyTree:
+    """Copy a host-control subtree: mutable ndarray leaves are copied (the
+    snapshot must not alias the caller's buffers), immutable leaves
+    (scalars, frozen dataclasses' fields) carry over by value."""
+    if isinstance(sub, HostState):
+        return HostState(**vars(sub))
+    return jax.tree.map(
+        lambda x: np.array(x) if isinstance(x, np.ndarray) else x, sub
+    )
+
+
+def clone_state(params: PyTree, opt_state: PyTree, host: HostState, *,
+                sharding=None, verify: bool = True, bit_exact: bool = False
+                ) -> Tuple[PyTree, PyTree, HostState, TransferReport]:
+    """3-phase live clone of a slice's training state (paper phase names)."""
+    cloned, report = clone_pytree(
+        {"params": params, "opt": opt_state, "host": host},
+        phases={
+            "data_segment(params)": params,
+            "heap_segment(optimizer)": opt_state,
+            "stack_segment(host)": host,
+        },
+        sharding=sharding,
+        verify=verify,
+        bit_exact=bit_exact,
+    )
+    return (
+        cloned["data_segment(params)"],
+        cloned["heap_segment(optimizer)"],
+        cloned["stack_segment(host)"],
+        report,
+    )

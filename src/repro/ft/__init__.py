@@ -13,8 +13,9 @@ JAX programs:
   :class:`~repro.core.replication.WorldState`, the
   :class:`~repro.core.control_plane.ControlPlane`, the generation guard,
   the full error handler (revoke -> agree -> repair -> shrink ->
-  re-lower -> replay), multi-level restore (partner memory -> durable
-  checkpoint -> fresh init), failure injection via
+  re-lower -> replay), restore through the pluggable
+  :class:`~repro.store.RecoveryLadder` (live clone -> K-way partner
+  memory -> durable -> fresh init), failure injection via
   :class:`FailureSchedule`, and the unified :class:`FTReport`.
 
 Paper mapping: FTSession.run is Fig. 7's dispatch loop, FTSession.recover

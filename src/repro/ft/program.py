@@ -12,9 +12,12 @@ hook                 who uses it
 ``build_step``       everyone: re-lowered on every communicator regen
 ``run_step``         everyone: the hot-path dispatch unit (step / token)
 ``sample_range``     trainers with a seekable pipeline (message logging)
-``snapshot``         trainers: state for partner/durable checkpoints
-``restore``          trainers: load a checkpoint after an unmasked failure
-``init_fresh``       trainers: restart from scratch (no checkpoint found)
+``snapshot``         trainers/servers: state submitted to the
+                     ``repro.store`` recovery ladder on the checkpoint
+                     cadence (doubles as the restore template)
+``restore``          trainers/servers: adopt a ladder snapshot after an
+                     unmasked failure
+``init_fresh``       trainers: restart from scratch (no level recoverable)
 ``repack_state``     servers: carry promoted replicas' live caches across
                      the shrink (paper: "the replica now becomes the
                      computational process")
@@ -65,10 +68,11 @@ class ResilientProgram:
         """Seek input state to ``plan.start_step`` (no-op for programs whose
         inputs are pure functions of the step index)."""
 
-    # ---- multi-level restore (trainers) ------------------------------------
+    # ---- recovery-ladder snapshots (trainers + servers) --------------------
     def snapshot(self) -> Optional[Tuple[PyTree, Dict]]:
-        """(state, meta) for checkpointing; the state pytree doubles as the
-        restore template. ``None`` => the program is not checkpointable."""
+        """(state, meta) submitted to the session's ``repro.store`` ladder;
+        the state pytree doubles as the restore template. ``None`` => the
+        program is not checkpointable."""
         return None
 
     def restore(self, state: PyTree, meta: Dict) -> None:

@@ -13,13 +13,17 @@ everything PartRePer-MPI layers around it:
 - the generation guard in the dispatch loop (Fig. 7's EMPI_Test
   interleave, host-side);
 - the error handler (Sec. VI): revoke -> agree -> ``WorldState.repair`` ->
-  multi-level restore when replication cannot mask the failure ->
+  recovery-ladder restore when replication cannot mask the failure ->
   ``shrink_mesh`` -> program re-lower -> replay plan from the survivors'
   step logs (Sec. VI-B message recovery, with duplicate suppression);
-- multi-level checkpointing (partner memory -> durable) on the trainer's
-  cadence;
+- snapshot submission to the :class:`~repro.store.RecoveryLadder` (live
+  clone / K-way partner memory / durable - whichever levels the caller
+  stacked) on the trainer's cadence;
 - deterministic failure injection via :class:`FailureSchedule`;
 - a unified :class:`FTReport` of app/handler seconds and recovery events.
+
+All recovery state flows through ``repro.store``'s ``StateStore``
+protocol; the session holds no backend-specific checkpoint code.
 """
 from __future__ import annotations
 
@@ -29,7 +33,6 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.checkpoint.checkpointer import Checkpointer, PartnerStore
 from repro.compat import mesh_from_devices
 from repro.core.control_plane import (
     CommunicatorRevoked,
@@ -39,6 +42,7 @@ from repro.core.control_plane import (
 from repro.core.elastic import shrink_mesh
 from repro.core.recovery import ReplayPlan, StepLog, StepRecord, replay_plan
 from repro.core.replication import WorldState
+from repro.store import RecoveryLadder, StateStore
 
 PyTree = Any
 
@@ -62,6 +66,8 @@ class FTReport:
     interruptions: List[int] = field(default_factory=list)
     replayed_steps: int = 0
     events: List[str] = field(default_factory=list)
+    #: one entry per ladder restore: "L<level>:<store>@step<step>"
+    restored_from: List[str] = field(default_factory=list)
 
 
 # ---------------------------------------------------------------------------
@@ -140,8 +146,7 @@ class FTSession:
         rdegree: float = 0.0,
         devices: Optional[Sequence] = None,
         heartbeat_timeout: float = 1e9,
-        partner: Optional[PartnerStore] = None,
-        checkpointer: Optional[Checkpointer] = None,
+        stores: Union[None, RecoveryLadder, StateStore, Sequence[StateStore]] = None,
         checkpoint_every: int = 0,
         replay: str = "log",
         report: Optional[FTReport] = None,
@@ -164,8 +169,14 @@ class FTSession:
         program.session = self
         self.world = WorldState.create(n_slices, rdegree)
         self.control = ControlPlane(heartbeat_timeout=heartbeat_timeout)
-        self.partner = partner
-        self.checkpointer = checkpointer
+        if stores is None:
+            self.ladder = RecoveryLadder([])
+        elif isinstance(stores, RecoveryLadder):
+            self.ladder = stores
+        elif isinstance(stores, StateStore):
+            self.ladder = RecoveryLadder([stores])
+        else:
+            self.ladder = RecoveryLadder(list(stores))
         self.checkpoint_every = checkpoint_every
         self.replay = replay
         self.report = report if report is not None else FTReport()
@@ -213,38 +224,26 @@ class FTSession:
 
     def _checkpoint(self, step: int) -> None:
         snap = self.program.snapshot()
-        if snap is None:
+        if snap is None or not self.ladder:
             return
         state, meta = snap
-        meta = {"step": step, **meta}
-        if self.partner is not None:
-            # level 1: partner memory (cheap, survives single-slice loss)
-            self.partner.save(0, step, state, meta)
-        if self.checkpointer is not None:
-            # level 2: durable
-            self.checkpointer.save(step, state, meta)
+        self.ladder.submit(step, state, {"step": step, **meta})
 
-    def _multilevel_restore(self) -> int:
-        """Partner memory -> durable checkpoint -> fresh init. Returns the
-        restored step (-1 = restarted from scratch)."""
+    def _restore(self) -> Optional[int]:
+        """Walk the recovery ladder (cheapest surviving level first).
+        Returns the restored step, or ``None`` when no level holds a
+        recoverable snapshot - the caller decides between fresh-init
+        (trainers) and resume-in-place (servers)."""
         snap = self.program.snapshot()
-        if snap is None:
-            self.program.init_fresh()
-            return -1
+        if snap is None or not self.ladder:
+            return None
         template, _ = snap
-        got = (
-            self.partner.restore(0, template)
-            if self.partner is not None
-            else None
-        )
-        if got is None and self.checkpointer is not None:
-            got = self.checkpointer.restore(template)
-        if got is not None:
-            restored_step, state, meta = got
-            self.program.restore(state, meta)
-            return restored_step
-        self.program.init_fresh()
-        return -1
+        got = self.ladder.restore(template)
+        if got is None:
+            return None
+        self.program.restore(got.state, got.meta)
+        self.report.restored_from.append(f"L{got.level}:{got.store}@step{got.step}")
+        return got.step
 
     # ------------------------------------------------------------------
     # the error handler (paper Sec. VI)
@@ -259,14 +258,21 @@ class FTSession:
         new_world, rep = old_world.repair(sorted(failed))
         restored_step: Optional[int] = None
 
+        # memory-resident store levels lose state that lived on the dead
+        # hosts - told BEFORE the restore walk consults them
+        self.ladder.on_failure(sorted(failed))
+
         self.report.promotes += len(rep["promoted"])
         if rep["lost_cmp"]:
-            # unrecoverable by replication: multi-level restore (trainers)
-            # or resume-in-place with the lost roles dropped (servers)
+            # unrecoverable by replication: walk the recovery ladder; the
+            # trainers' last resort is a fresh init, servers without a
+            # recoverable snapshot resume in place with the roles dropped
             self.report.restarts += 1
             self.report.interruptions.append(step)
-            if self.replay == "log":
-                restored_step = self._multilevel_restore()
+            restored_step = self._restore()
+            if restored_step is None and self.replay == "log":
+                self.program.init_fresh()
+                restored_step = -1
 
         # message recovery plan from the SURVIVORS' logs (paper Sec. VI-B:
         # "identify the collectives that every live process has completed")
@@ -279,6 +285,13 @@ class FTSession:
             ]
             live_logs = [self.logs[r] for r in survivor_roles if r in self.logs]
             plan = replay_plan(live_logs, step, restored_step=restored_step)
+        elif restored_step is not None:
+            # a server restored from the store plane: re-decode from the
+            # snapshot so its state and output stream stay consistent
+            plan = ReplayPlan(
+                start_step=min(restored_step + 1, step), skip={},
+                reason=f"store restore from step {restored_step}",
+            )
         else:
             plan = ReplayPlan(start_step=step, skip={}, reason="resume in place")
 
@@ -342,4 +355,7 @@ class FTSession:
             ):
                 self._checkpoint(step)
             step += 1
+        # drain background writers (durable level): the newest snapshots
+        # must not die with the process on a daemon thread
+        self.ladder.wait()
         return self.report

@@ -25,6 +25,13 @@ def main() -> None:
     ap.add_argument("--full", dest="smoke", action="store_false")
     ap.add_argument("--inject-failure", default="",
                     help="comma list of token:physical_slice injections")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="submit KV-cache snapshots to the K-way partner "
+                         "store every N tokens (0 = off); an unmirrored "
+                         "slice loss then re-decodes from the snapshot "
+                         "instead of cold-starting")
+    ap.add_argument("--redundancy", type=int, default=2,
+                    help="K-way shard redundancy of the snapshot store")
     args = ap.parse_args()
 
     if os.environ.get("_REPRO_REEXEC") != "1":
@@ -48,6 +55,8 @@ def main() -> None:
         per_slice_batch=args.per_slice_batch,
         max_len=args.max_len,
         seed=args.seed,
+        snapshot_every=args.snapshot_every,
+        partner_redundancy=args.redundancy,
     )
     print(
         f"serving {model.name}: {eng.world.topo.n_comp} cmp + "
@@ -61,6 +70,8 @@ def main() -> None:
           f"({r.tokens_decoded / max(r.decode_seconds, 1e-9):.1f} tok/s raw)")
     for ev in r.events:
         print("EVENT:", ev)
+    for src in r.restored_from:
+        print("RESTORED:", src)
     print(f"promotes={r.promotes} requeued={r.requeued_requests} "
           f"failover={r.failover_seconds:.2f}s")
     print("sample output ids:", toks[0, 0, :16].tolist())

@@ -34,6 +34,9 @@ def main() -> None:
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--redundancy", type=int, default=2,
+                    help="K-way shard redundancy of the level-1 partner-memory "
+                         "store (repro.store.PartnerMemoryStore)")
     ap.add_argument("--smoke", action="store_true", default=True,
                     help="reduced same-family config (CPU container default)")
     ap.add_argument("--full", dest="smoke", action="store_false",
@@ -72,6 +75,7 @@ def main() -> None:
         seed=args.seed,
         checkpoint_dir=args.checkpoint_dir or None,
         checkpoint_every=args.checkpoint_every,
+        partner_redundancy=args.redundancy,
         microbatches=args.microbatches,
     )
     print(
@@ -79,6 +83,8 @@ def main() -> None:
         f"replica slices x {args.model_shards} model shards "
         f"({model.name}, mode={args.mode})"
     )
+    print("recovery ladder:", " -> ".join(
+        f"L{s.level}:{s.name}" for s in sim.ladder) or "(none)")
     t0 = time.time()
     report = sim.run(args.steps, failures=failures)
     dt = time.time() - t0
@@ -87,6 +93,8 @@ def main() -> None:
             print(f"step {i:5d} loss {loss:.4f}")
     for ev in report.events:
         print("EVENT:", ev)
+    for src in report.restored_from:
+        print("RESTORED:", src)
     print(
         f"done: {report.steps_completed} steps in {dt:.1f}s "
         f"(app {report.app_seconds:.1f}s, error-handler {report.handler_seconds:.1f}s) "

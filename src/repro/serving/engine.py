@@ -10,9 +10,14 @@ failures re-queue their requests (prefill re-run after elastic shrink).
 The engine is a thin :class:`~repro.ft.program.ResilientProgram`: the
 detect/revoke/agree/repair lifecycle lives in FTSession (``replay='none'``
 - a server resumes in place); this module supplies only the decode data
-plane and the serving-specific hook - ``repack_state``, which re-packs
+plane and the serving-specific hooks - ``repack_state``, which re-packs
 cache rows so promoted replicas keep their mirrored caches across the
-elastic shrink.
+elastic shrink, and KV-cache ``snapshot``/``restore`` through the
+``repro.store`` plane (``snapshot_every`` submits the decode state to a
+K-way sharded partner-memory store, so an UNmirrored slice loss rewinds
+to the last snapshot and re-decodes instead of cold-starting decode
+state; the re-decoded tokens are bit-identical - greedy decode is
+deterministic).
 
 The decode step itself has no cross-slice collectives (the model axis is
 GSPMD-managed), so the data plane stays failure-oblivious, exactly like the
@@ -38,6 +43,7 @@ from repro.dist.sharding import (
 )
 from repro.ft import FailureSchedule, FTReport, FTSession, ResilientProgram
 from repro.models import model as M
+from repro.store import PartnerMemoryStore, RecoveryLadder
 
 
 @dataclass
@@ -69,6 +75,9 @@ class ServeEngine(ResilientProgram):
         max_len: int = 128,
         seed: int = 0,
         params=None,
+        snapshot_every: int = 0,
+        partner_redundancy: int = 2,
+        stores: Optional[RecoveryLadder] = None,
     ):
         self.model_cfg = model_cfg
         self.repl = ReplicationConfig(rdegree=rdegree)
@@ -79,16 +88,30 @@ class ServeEngine(ResilientProgram):
         self.pos = 0
         self._cur: Optional[np.ndarray] = None
         self._out: List[np.ndarray] = []
+        self._out_streams: List[List[int]] = []
+        self.snapshot_every = snapshot_every
+
+        # decode-state plane: K-way sharded partner memory, so a snapshot
+        # survives losses that take live caches with them
+        if stores is None and snapshot_every:
+            stores = RecoveryLadder(
+                [PartnerMemoryStore(range(n_slices), redundancy=partner_redundancy)]
+            )
 
         self.session = FTSession(
             self,
             n_slices=n_slices,
             model_shards=model_shards,
             rdegree=rdegree,
+            stores=stores,
+            checkpoint_every=snapshot_every,
             replay="none",
             report=ServeReport(),
             unit="token",
         )
+        # cmp role -> original request-stream id; shrinks with the world,
+        # letting decode() align outputs across elastic transitions
+        self._streams: List[int] = list(range(self.world.topo.n_comp))
 
     # ---- convenience views over the session --------------------------------
     @property
@@ -148,38 +171,82 @@ class ServeEngine(ResilientProgram):
         }
         cmp_next = np.stack([by_role[c] for c in range(n_comp)])
         self._out.append(cmp_next[..., 0])
+        self._out_streams.append(list(self._streams))
         self._cur = cmp_next
         self.pos += 1
         self.report.tokens_decoded += n_comp * self.per_slice_batch
 
+    # ---- decode-state snapshots (the repro.store plane) --------------------
+    def snapshot(self):
+        """KV cache + in-flight tokens, submitted to the recovery ladder on
+        the ``snapshot_every`` cadence and used as the restore template.
+        Leaves are handed over as-is (device arrays are immutable, ``_cur``
+        is rebound each step): the store's staging pass makes the one host
+        copy, not us."""
+        if self.cache is None:
+            return None
+        state = {"cache": self.cache}
+        if self._cur is not None:
+            state["cur"] = self._cur
+        return state, {"pos": self.pos}
+
+    def restore(self, state, meta) -> None:
+        """Adopt a snapshot (host arrays, pre-failure world layout); the
+        following ``repack_state``/``build_step`` re-pack and re-place it
+        onto the shrunk world."""
+        self.cache = state["cache"]
+        if "cur" in state:
+            self._cur = np.asarray(state["cur"])
+        self.pos = int(meta["pos"])
+
+    def replay_inputs(self, plan) -> None:
+        """Drop output tokens past the replay point - re-decode regenerates
+        them bit-identically (greedy, deterministic)."""
+        del self._out[plan.start_step:]
+        del self._out_streams[plan.start_step:]
+
     def repack_state(self, old_world, new_world) -> None:
         """Promoted replicas keep their caches: re-pack cache rows so the
         new mesh order draws each role's cache from the physical slice that
-        now owns it; unreplicated losses re-queue their requests."""
-        cache_host = jax.tree.map(np.asarray, self.cache)  # survivors' caches
+        now owns it; unreplicated losses without a restorable snapshot
+        re-queue their requests. ``self.cache`` is either the survivors'
+        live cache or a just-restored snapshot - both in old-world layout."""
+        cache_host = jax.tree.map(np.asarray, self.cache)
         old_pos = old_world.mesh_position()
         new_order = new_world.roles_in_mesh_order()
         b = self.per_slice_batch
 
-        def repack(path, arr):
-            axis = cache_batch_axis(path, arr.ndim)
+        def repack(kp, arr):
+            axis = cache_batch_axis(path_str(kp), arr.ndim)
             rows = []
             for r in new_order:
-                phys = new_world.assignment[r]
-                src_row = old_pos[phys]
+                src_row = old_pos[new_world.assignment[r]]
                 rows.append(
                     np.take(arr, range(src_row * b, (src_row + 1) * b), axis=axis)
                 )
             return np.concatenate(rows, axis=axis)
 
-        flat, treedef = jax.tree_util.tree_flatten_with_path(cache_host)
-        self.cache = jax.tree_util.tree_unflatten(
-            treedef, [repack(path_str(kp), leaf) for kp, leaf in flat]
-        )
+        self.cache = jax.tree_util.tree_map_with_path(repack, cache_host)
         lost_roles = old_world.topo.n_comp - new_world.topo.n_comp
         self.report.requeued_requests += lost_roles * b
+        # each surviving cmp role keeps ITS stream (the dead role's row is
+        # dropped wherever it sat, not always at the tail)
+        keep = [
+            self._old_cmp_role(old_world, new_world.assignment[r])
+            for r in range(new_world.topo.n_comp)
+        ]
+        self._streams = [self._streams[r] for r in keep]
         if self._cur is not None:
-            self._cur = self._cur[: new_world.topo.n_comp]
+            self._cur = np.stack([self._cur[r] for r in keep])
+
+    @staticmethod
+    def _old_cmp_role(old_world, phys: int) -> int:
+        """The old-world cmp role whose token stream physical ``phys``
+        carried (a promoted replica carried its mirrored partner's)."""
+        role = old_world.role_of_physical(phys)
+        if role >= old_world.topo.n_comp:
+            role = old_world.topo.replica_of(role)
+        return role
 
     # ------------------------------------------------------------------
     def _mirror_tokens(self, cmp_tokens: np.ndarray) -> np.ndarray:
@@ -200,10 +267,15 @@ class ServeEngine(ResilientProgram):
             )
         self._cur = prompt_tokens[:, :, -1:]
         self._out = []
+        self._out_streams = []
         self.session.run(steps, FailureSchedule(failures))
-        out = self._out
-        if not out:
+        if not self._out:
             return np.zeros((n_comp, self.per_slice_batch, 0), np.int32)
-        # elastic shrink mid-decode can reduce rows; align on the survivors
-        rows = min(o.shape[0] for o in out)
-        return np.stack([o[:rows] for o in out], axis=-1)
+        # elastic shrink mid-decode can drop streams anywhere in the batch;
+        # align every token column on the streams that finished the run
+        final = self._streams
+        cols = [
+            o[[streams.index(s) for s in final]]
+            for streams, o in zip(self._out_streams, self._out)
+        ]
+        return np.stack(cols, axis=-1)

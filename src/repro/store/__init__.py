@@ -1,0 +1,46 @@
+"""``repro.store`` - the recovery-state plane.
+
+One :class:`StateStore` protocol (``submit`` / ``load`` / ``steps`` /
+``drop`` / ``trim``), three backends ordered by restore cost, and a
+:class:`RecoveryLadder` policy that owns the source-selection ordering
+the session used to hand-roll:
+
+====== ======================== ============================================
+level  backend                  survives
+====== ======================== ============================================
+0      :class:`LiveCloneStore`  nothing beyond its host - O(memcpy) restore
+1      :class:`PartnerMemoryStore` any failure leaving >= 1 holder per shard
+                                (K-way ReStore-style redundancy)
+2      :class:`DurableStore`    job teardown (npz + manifest, atomic)
+====== ======================== ============================================
+
+Paper mapping: level 1 is Sec. III-A's partner replica memory generalized
+per ReStore (Huebner et al., 2022); level 2 is the classic multi-level
+durable tier; level 0 is the Sec. III-A process-image transfer
+(``core/state_transfer``) behind the same API for dynamic replica rebirth.
+"""
+from repro.store.base import (
+    PyTree,
+    Restored,
+    StateStore,
+    flatten_with_paths,
+    unflatten_like,
+)
+from repro.store.durable import DurableStore
+from repro.store.ladder import LadderRestore, RecoveryLadder, RestoreAttempt
+from repro.store.liveclone import LiveCloneStore
+from repro.store.partner import PartnerMemoryStore
+
+__all__ = [
+    "DurableStore",
+    "LadderRestore",
+    "LiveCloneStore",
+    "PartnerMemoryStore",
+    "PyTree",
+    "RecoveryLadder",
+    "Restored",
+    "RestoreAttempt",
+    "StateStore",
+    "flatten_with_paths",
+    "unflatten_like",
+]

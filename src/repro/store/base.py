@@ -1,0 +1,113 @@
+"""The ``StateStore`` protocol - one API for every recovery-state plane.
+
+ReStore (Huebner et al., 2022) argues that sub-second restore needs a
+dedicated storage layer with an explicit submit/load API rather than
+checkpoint logic scattered through the application. This module is that
+layer's contract; the three backends map to the multi-level scheme the
+paper's recovery model assumes (Sec. III-A / VI):
+
+- level 0 ``LiveCloneStore``    - device-resident 3-phase clone (the
+  process-image transfer, dynamic replica rebirth);
+- level 1 ``PartnerMemoryStore`` - host-memory snapshots sharded K-way
+  across surviving slices (ReStore-style redundancy);
+- level 2 ``DurableStore``      - serialized npz + manifest on disk,
+  double-buffered async writes, atomic publish.
+
+A store holds ``(step, state, meta)`` snapshots. ``state`` is any pytree;
+serializing backends flatten it with :func:`flatten_with_paths` and
+rebuild it against a template with :func:`unflatten_like` - the single
+flatten/unflatten implementation in the repo (the checkpointer, the
+serving cache repack and the clone verifier all used to hand-roll their
+own).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.dist.sharding import path_str
+
+PyTree = Any
+
+#: what ``load`` returns: (step, state pytree, meta dict)
+Restored = Tuple[int, PyTree, Dict]
+
+
+def flatten_with_paths(tree: PyTree) -> Dict[str, np.ndarray]:
+    """Flatten a pytree to ``{path: host ndarray}``. Every leaf is a fresh
+    host copy - device arrays via the device->host transfer, numpy leaves
+    via an explicit copy (``np.asarray`` alone would alias the caller's
+    buffer, breaking ``submit``'s capture-before-return contract for
+    programs that mutate state in place)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {
+        path_str(kp): (
+            np.array(leaf) if isinstance(leaf, np.ndarray) else np.asarray(leaf)
+        )
+        for kp, leaf in flat
+    }
+
+
+def unflatten_like(template: PyTree, arrays: Dict[str, np.ndarray]) -> PyTree:
+    """Rebuild ``template``'s structure from a path -> array mapping,
+    coercing each leaf to the template's dtype/shape."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for kp, leaf in flat:
+        arr = arrays[path_str(kp)]
+        leaves.append(np.asarray(arr, dtype=leaf.dtype).reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class StateStore:
+    """Base class / contract for recovery-state backends.
+
+    ``level`` orders backends in a :class:`~repro.store.ladder.RecoveryLadder`
+    (lower = faster restore, tried first); ``name`` labels restore events
+    and benchmark rows.
+    """
+
+    level: int = 99
+    name: str = "store"
+    #: True for backends whose submit only needs the flattened host blob;
+    #: the RecoveryLadder then stages the state to host ONCE and fans the
+    #: same blob out to every such level via :meth:`submit_blob`
+    consumes_blob: bool = False
+
+    # ---- writes ------------------------------------------------------------
+    def submit(self, step: int, state: PyTree, meta: Optional[Dict] = None) -> None:
+        """Snapshot ``state`` for ``step``. Must not mutate ``state`` and
+        must capture its value before returning (callers mutate in place)."""
+        raise NotImplementedError
+
+    def submit_blob(self, step: int, blob: Dict[str, np.ndarray],
+                    meta: Optional[Dict] = None) -> None:
+        """Snapshot an already-staged host blob (``consumes_blob`` backends
+        only). The blob's arrays are shared read-only with other levels."""
+        raise NotImplementedError
+
+    def wait(self) -> None:
+        """Block until every submitted snapshot is fully persisted."""
+
+    # ---- reads -------------------------------------------------------------
+    def load(self, template: PyTree, step: Optional[int] = None) -> Optional[Restored]:
+        """Newest (or requested) recoverable snapshot, or ``None``."""
+        raise NotImplementedError
+
+    def steps(self) -> List[int]:
+        """Steps with a (possibly partial) snapshot, ascending."""
+        raise NotImplementedError
+
+    # ---- space management --------------------------------------------------
+    def drop(self, step: int) -> None:
+        """Forget the snapshot at ``step`` (no-op if absent)."""
+
+    def trim(self, keep: int) -> None:
+        """Keep only the newest ``keep`` snapshots."""
+
+    # ---- failure plumbing --------------------------------------------------
+    def on_failure(self, dead_physicals) -> None:
+        """Failed physical slices were agreed dead; drop state that lived
+        on them (memory stores). Default: durable/local stores unaffected."""

@@ -1,0 +1,164 @@
+"""Level-2 durable snapshots: npz + json manifest, atomic publish.
+
+Absorbs the old ``Checkpointer`` with its two copy-pasted write bodies
+(``save`` / ``save_async``) collapsed into one, and the snapshot path made
+truly non-blocking: submits stage the state to host memory synchronously
+(mandatory - the caller mutates it next step) and hand the staged blob to
+a background writer, with up to ``buffers`` writes in flight. The old
+code joined the previous writer *before* staging, so a slow disk stalled
+the train loop for the full write; double buffering bounds the stall to
+the rare case of both buffers busy (thread-based-MPI checkpointing,
+Adam et al., 2019).
+
+Crash consistency: writers build ``.tmp-<step>`` and ``os.rename`` onto
+the final name (atomic on POSIX). A writer that dies mid-write leaks its
+tmp dir; construction garbage-collects any stale ``.tmp-*`` (they used to
+accumulate forever), and the post-publish GC sweeps tmp dirs that no
+in-flight writer owns.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.store.base import PyTree, Restored, StateStore, flatten_with_paths, unflatten_like
+
+
+class DurableStore(StateStore):
+    level = 2
+    name = "durable"
+    consumes_blob = True
+
+    def __init__(self, directory: str, *, keep: int = 2, buffers: int = 2):
+        assert buffers >= 1
+        self.directory = directory
+        self.keep = keep
+        self.buffers = buffers
+        self._inflight: List[Tuple[int, threading.Thread]] = []
+        self._lock = threading.Lock()  # serializes publish + GC
+        os.makedirs(directory, exist_ok=True)
+        self._gc_stale_tmp()
+
+    # ---- paths -------------------------------------------------------------
+    def _final(self, step: int) -> str:
+        return os.path.join(self.directory, f"step-{step:010d}")
+
+    def _tmp(self, step: int) -> str:
+        return os.path.join(self.directory, f".tmp-{step}")
+
+    # ---- writes ------------------------------------------------------------
+    def submit(self, step: int, state: PyTree, meta: Optional[Dict] = None) -> None:
+        """Stage to host now, write to disk in the background. Blocks only
+        when ``buffers`` writes are already in flight (double-buffered)."""
+        self.submit_blob(step, flatten_with_paths(state), meta)
+
+    def submit_blob(self, step: int, blob: Dict[str, np.ndarray],
+                    meta: Optional[Dict] = None) -> None:
+        # a still-running writer for the SAME step would share our
+        # .tmp-<step> dir (replay can recross a checkpoint step): join it
+        for s, t in list(self._inflight):
+            if s == step:
+                t.join()
+        self._reap()
+        while len(self._inflight) >= self.buffers:
+            self._drain_one()
+        t = threading.Thread(target=self._write, args=(step, blob, meta), daemon=True)
+        self._inflight.append((step, t))
+        t.start()
+
+    def submit_sync(self, step: int, state: PyTree, meta: Optional[Dict] = None) -> str:
+        """Synchronous submit (tests, final checkpoint at teardown)."""
+        self._write(step, flatten_with_paths(state), meta)
+        return self._final(step)
+
+    def _write(self, step: int, blob: Dict[str, np.ndarray], meta: Optional[Dict]) -> None:
+        tmp, final = self._tmp(step), self._final(step)
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "state.npz"), **blob)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "meta": meta or {},
+            "leaves": len(blob),
+            "bytes": int(sum(a.nbytes for a in blob.values())),
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with self._lock:
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # atomic publish
+            self._gc_locked()
+
+    def wait(self) -> None:
+        while self._inflight:
+            self._drain_one()
+
+    def _drain_one(self) -> None:
+        # join BEFORE removing: a live writer must stay visible in
+        # ``_inflight`` or a concurrent writer's GC mistakes its tmp dir
+        # for dead-writer debris and deletes it mid-write
+        self._inflight[0][1].join()
+        self._inflight.pop(0)
+
+    def _reap(self) -> None:
+        self._inflight = [(s, t) for s, t in self._inflight if t.is_alive()]
+
+    # ---- reads -------------------------------------------------------------
+    def steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step-"):
+                out.append(int(name.split("-")[1]))
+        return sorted(out)
+
+    def load(self, template: PyTree, step: Optional[int] = None) -> Optional[Restored]:
+        self.wait()
+        steps = self.steps()
+        if not steps:
+            return None
+        step = steps[-1] if step is None else step
+        path = self._final(step)
+        try:
+            with np.load(os.path.join(path, "state.npz")) as z:
+                blob = {k: z[k] for k in z.files}
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (FileNotFoundError, ValueError, json.JSONDecodeError):
+            return None  # torn snapshot (should not happen post-rename)
+        return step, unflatten_like(template, blob), manifest.get("meta", {})
+
+    # ---- space management --------------------------------------------------
+    def drop(self, step: int) -> None:
+        with self._lock:
+            shutil.rmtree(self._final(step), ignore_errors=True)
+
+    def trim(self, keep: int) -> None:
+        with self._lock:
+            for s in self.steps()[:-keep] if keep else []:
+                shutil.rmtree(self._final(s), ignore_errors=True)
+
+    def _gc_locked(self) -> None:
+        for s in self.steps()[: -self.keep]:
+            shutil.rmtree(self._final(s), ignore_errors=True)
+        # tmp dirs no live writer owns are debris from a dead writer
+        active = {s for s, t in list(self._inflight) if t.is_alive()}
+        self._gc_stale_tmp(skip=active)
+
+    def _gc_stale_tmp(self, skip=()) -> None:
+        for name in os.listdir(self.directory):
+            if not name.startswith(".tmp-"):
+                continue
+            try:
+                step = int(name.split("-", 1)[1])
+            except ValueError:
+                step = None
+            if step in skip:
+                continue
+            shutil.rmtree(os.path.join(self.directory, name), ignore_errors=True)

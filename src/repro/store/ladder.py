@@ -1,0 +1,124 @@
+"""RecoveryLadder: the ordered restore policy over a set of StateStores.
+
+``FTSession._restore`` used to hand-roll the partner -> durable -> fresh
+ladder (and the serving engine had no ladder at all); this object owns it:
+
+- ``submit`` fans a snapshot out to every level (each store captures the
+  state before returning, so one host staging pass feeds all of them);
+- ``restore`` walks the levels in ascending ``level`` order (cheapest
+  first), takes the first recoverable snapshot, optionally cross-verifies
+  it, and records a :class:`RestoreAttempt` per level so benchmarks and
+  reports can price each rung;
+- ``on_failure`` forwards the agreed-dead physical slices to every store
+  so memory-resident levels drop state that died with its host *before*
+  the restore walk consults them.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.store.base import PyTree, StateStore, flatten_with_paths
+
+
+@dataclass
+class RestoreAttempt:
+    level: int
+    store: str
+    ok: bool
+    step: Optional[int] = None
+    seconds: float = 0.0
+    error: str = ""
+
+
+@dataclass
+class LadderRestore:
+    """A successful restore: which rung served it, and the full walk."""
+
+    level: int
+    store: str
+    step: int
+    state: PyTree
+    meta: Dict
+    attempts: List[RestoreAttempt] = field(default_factory=list)
+
+
+class RecoveryLadder:
+    def __init__(self, stores: Sequence[StateStore]):
+        self.stores: List[StateStore] = sorted(stores, key=lambda s: s.level)
+        levels = [s.level for s in self.stores]
+        assert len(set(levels)) == len(levels), f"duplicate ladder levels: {levels}"
+        self.attempts: List[RestoreAttempt] = []  # last restore's walk
+
+    # ---- accessors ---------------------------------------------------------
+    def store(self, level: int) -> Optional[StateStore]:
+        return next((s for s in self.stores if s.level == level), None)
+
+    def levels(self) -> List[int]:
+        return [s.level for s in self.stores]
+
+    def __iter__(self):
+        return iter(self.stores)
+
+    def __bool__(self) -> bool:
+        return bool(self.stores)
+
+    # ---- writes ------------------------------------------------------------
+    def submit(self, step: int, state: PyTree, meta: Optional[Dict] = None,
+               levels: Optional[Sequence[int]] = None) -> None:
+        """Fan the snapshot out to every (selected) level. Blob-consuming
+        backends share ONE host staging pass: the state is flattened once
+        and the same read-only blob feeds them all."""
+        blob = None
+        for s in self.stores:
+            if levels is not None and s.level not in levels:
+                continue
+            if s.consumes_blob:
+                if blob is None:
+                    blob = flatten_with_paths(state)
+                s.submit_blob(step, blob, meta)
+            else:
+                s.submit(step, state, meta)
+
+    def wait(self) -> None:
+        for s in self.stores:
+            s.wait()
+
+    def trim(self, keep: int) -> None:
+        for s in self.stores:
+            s.trim(keep)
+
+    # ---- failure plumbing --------------------------------------------------
+    def on_failure(self, dead_physicals: Sequence[int]) -> None:
+        for s in self.stores:
+            s.on_failure(dead_physicals)
+
+    # ---- the ladder walk ---------------------------------------------------
+    def restore(self, template: PyTree, step: Optional[int] = None
+                ) -> Optional[LadderRestore]:
+        """First recoverable snapshot, cheapest level first. ``None`` means
+        every rung came up empty (the caller's fresh-init of last resort)."""
+        self.attempts = []
+        for s in self.stores:
+            t0 = time.perf_counter()
+            try:
+                got = s.load(template, step=step)
+                err = ""
+            except Exception as e:  # a torn rung must not mask deeper ones
+                got, err = None, f"{type(e).__name__}: {e}"
+            dt = time.perf_counter() - t0
+            if got is None:
+                self.attempts.append(RestoreAttempt(
+                    level=s.level, store=s.name, ok=False, seconds=dt, error=err
+                ))
+                continue
+            rstep, state, meta = got
+            self.attempts.append(RestoreAttempt(
+                level=s.level, store=s.name, ok=True, step=rstep, seconds=dt
+            ))
+            return LadderRestore(
+                level=s.level, store=s.name, step=rstep, state=state,
+                meta=meta, attempts=list(self.attempts),
+            )
+        return None

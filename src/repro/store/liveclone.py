@@ -1,0 +1,82 @@
+"""Level-0 live-clone snapshots: device-resident, O(memcpy) restore.
+
+Wraps :func:`repro.core.state_transfer.clone_pytree` (the 3-phase
+process-image transfer) behind the :class:`StateStore` protocol, so
+dynamic replica rebirth and warm-standby serving state go through the
+same submit/load API as the partner and durable levels. A clone lives in
+the memory of the slice that took it - fastest to restore, first to die
+with its host - which is exactly why it is level 0 in the ladder.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.state_transfer import TransferReport, clone_pytree
+from repro.store.base import PyTree, Restored, StateStore
+
+
+class LiveCloneStore(StateStore):
+    level = 0
+    name = "live-clone"
+
+    def __init__(self, *, sharding=None, verify: bool = True,
+                 bit_exact: bool = False, keep: int = 2, host: Optional[int] = None):
+        self.sharding = sharding
+        self.verify = verify
+        self.bit_exact = bit_exact
+        self.keep = keep
+        self.host = host  # physical slice whose memory holds the clones
+        self._clones: Dict[int, Tuple[PyTree, Dict, TransferReport]] = {}
+        self._lock = threading.Lock()
+        self.last_report: Optional[TransferReport] = None
+
+    # ---- writes ------------------------------------------------------------
+    def submit(self, step: int, state: PyTree, meta: Optional[Dict] = None) -> None:
+        clone, report = clone_pytree(
+            state, sharding=self.sharding, verify=self.verify,
+            bit_exact=self.bit_exact,
+        )
+        if self.verify and not report.verified:
+            raise RuntimeError(f"live clone of step {step} failed verification")
+        with self._lock:
+            self._clones[step] = (clone, dict(meta or {}), report)
+            self.last_report = report
+            for s in sorted(self._clones)[: -self.keep] if self.keep else []:
+                del self._clones[s]
+
+    # ---- reads -------------------------------------------------------------
+    def load(self, template: PyTree, step: Optional[int] = None) -> Optional[Restored]:
+        with self._lock:
+            if step is None:
+                step = max(self._clones, default=None)
+            if step is None or step not in self._clones:
+                return None
+            clone, meta, _ = self._clones[step]
+        return step, clone, dict(meta)
+
+    def steps(self) -> List[int]:
+        with self._lock:
+            return sorted(self._clones)
+
+    def report_for(self, step: int) -> Optional[TransferReport]:
+        with self._lock:
+            entry = self._clones.get(step)
+        return entry[2] if entry else None
+
+    # ---- space management --------------------------------------------------
+    def drop(self, step: int) -> None:
+        with self._lock:
+            self._clones.pop(step, None)
+
+    def trim(self, keep: int) -> None:
+        with self._lock:
+            for s in sorted(self._clones)[:-keep] if keep else []:
+                del self._clones[s]
+
+    # ---- failure plumbing --------------------------------------------------
+    def on_failure(self, dead_physicals: Sequence[int]) -> None:
+        """Clones live on one host; if that host died they are gone."""
+        if self.host is not None and self.host in set(dead_physicals):
+            with self._lock:
+                self._clones.clear()

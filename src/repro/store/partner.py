@@ -1,0 +1,137 @@
+"""Level-1 partner-memory snapshots with ReStore-style K-way sharding.
+
+The old ``PartnerStore`` held ONE full copy of the state on ONE partner
+host - if the computational slice and its partner failed together (a
+mirrored-pair loss, the paper's unmaskable case), level 1 was gone and
+recovery fell all the way to disk. ReStore's fix, adopted here: shard the
+snapshot across *all* surviving slices' host memories and replicate each
+shard onto ``redundancy`` distinct peers. A snapshot then survives any
+failure that leaves at least one holder of every shard alive - in
+particular the double failure of a mirrored pair, whose two physicals
+never co-hold a shard's only copies unless the world has shrunk to the
+pair itself.
+
+Placement: with live peers ``p_0 < ... < p_{n-1}``, shard ``s`` is held by
+``p_{(s+j) mod n}`` for ``j in 0..K-1`` (consecutive-ring placement, the
+ReStore default). Leaves are round-robined into ``n`` shards in sorted
+path order, so any submit is reconstructible from the manifest alone.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.store.base import PyTree, Restored, StateStore, flatten_with_paths, unflatten_like
+
+
+class PartnerMemoryStore(StateStore):
+    level = 1
+    consumes_blob = True
+
+    def __init__(self, peers: Iterable[int], *, redundancy: int = 2, keep: int = 2):
+        assert redundancy >= 1
+        self.redundancy = redundancy
+        self.keep = keep
+        self._live: List[int] = sorted(set(int(p) for p in peers))
+        assert self._live, "need at least one peer host"
+        # peer -> {(step, shard) -> {path: array}}
+        self._mem: Dict[int, Dict[Tuple[int, int], Dict[str, np.ndarray]]] = {
+            p: {} for p in self._live
+        }
+        # step -> {"n_shards": int, "meta": dict}
+        self._manifest: Dict[int, Dict] = {}
+        self._lock = threading.Lock()
+        self.name = f"partner[k{redundancy}]"
+
+    # ---- writes ------------------------------------------------------------
+    def submit(self, step: int, state: PyTree, meta: Optional[Dict] = None) -> None:
+        self.submit_blob(step, flatten_with_paths(state), meta)
+
+    def submit_blob(self, step: int, blob: Dict[str, np.ndarray],
+                    meta: Optional[Dict] = None) -> None:
+        with self._lock:
+            # replay can resubmit a step after the world shrank: purge the
+            # old placement or stale shards from the larger ring would be
+            # gathered alongside the new ones
+            self._drop_locked(step)
+            live = list(self._live)
+            n = len(live)
+            k = min(self.redundancy, n)
+            shards: List[Dict[str, np.ndarray]] = [{} for _ in range(n)]
+            for i, path in enumerate(sorted(blob)):
+                shards[i % n][path] = blob[path]
+            self._manifest[step] = {"n_shards": n, "meta": dict(meta or {})}
+            for s, shard in enumerate(shards):
+                for j in range(k):
+                    self._mem[live[(s + j) % n]][(step, s)] = shard
+            self._trim_locked(self.keep)
+
+    # ---- reads -------------------------------------------------------------
+    def load(self, template: PyTree, step: Optional[int] = None) -> Optional[Restored]:
+        with self._lock:
+            candidates = [step] if step is not None else sorted(self._manifest, reverse=True)
+            for cand in candidates:
+                if cand not in self._manifest:
+                    continue
+                blob = self._gather_locked(cand)
+                if blob is not None:
+                    meta = dict(self._manifest[cand]["meta"])
+                    return cand, unflatten_like(template, blob), meta
+        return None
+
+    def _gather_locked(self, step: int) -> Optional[Dict[str, np.ndarray]]:
+        """All shards of ``step`` from surviving holders, or None if any
+        shard lost every copy."""
+        n = self._manifest[step]["n_shards"]
+        blob: Dict[str, np.ndarray] = {}
+        for s in range(n):
+            part = next(
+                (m[(step, s)] for m in self._mem.values() if (step, s) in m), None
+            )
+            if part is None:
+                return None
+            blob.update(part)
+        return blob
+
+    def recoverable(self, step: int) -> bool:
+        """True if every shard of ``step`` still has a surviving holder."""
+        with self._lock:
+            return step in self._manifest and self._gather_locked(step) is not None
+
+    def steps(self) -> List[int]:
+        with self._lock:
+            return sorted(self._manifest)
+
+    def latest_step(self) -> int:
+        with self._lock:
+            return max(self._manifest, default=-1)
+
+    # ---- space management --------------------------------------------------
+    def drop(self, step: int) -> None:
+        with self._lock:
+            self._drop_locked(step)
+
+    def _drop_locked(self, step: int) -> None:
+        self._manifest.pop(step, None)
+        for m in self._mem.values():
+            for key in [k for k in m if k[0] == step]:
+                del m[key]
+
+    def trim(self, keep: int) -> None:
+        with self._lock:
+            self._trim_locked(keep)
+
+    def _trim_locked(self, keep: int) -> None:
+        for s in sorted(self._manifest)[:-keep] if keep else []:
+            self._drop_locked(s)
+
+    # ---- failure plumbing --------------------------------------------------
+    def on_failure(self, dead_physicals: Sequence[int]) -> None:
+        """Dead peers' host memories are gone: drop their shard copies and
+        stop placing new shards on them."""
+        with self._lock:
+            for p in dead_physicals:
+                self._mem.pop(p, None)
+            self._live = [p for p in self._live if p in self._mem]

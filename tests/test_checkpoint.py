@@ -1,12 +1,14 @@
-"""Checkpointing: durable roundtrip, async publish, GC, partner store."""
+"""DurableStore (level 2): roundtrip, double-buffered async publish,
+keep-based GC, atomicity, and crash consistency (stale ``.tmp-*`` debris
+from a writer that died mid-checkpoint)."""
+import json
 import os
-import time
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.checkpointer import Checkpointer, PartnerStore
+from repro.store import DurableStore
 
 
 def _state(v: float):
@@ -17,52 +19,95 @@ def _state(v: float):
 
 
 def test_roundtrip(tmp_path):
-    ck = Checkpointer(str(tmp_path))
-    ck.save(5, _state(1.5), meta={"n_comp": 4})
-    got = ck.restore(_state(0.0))
+    ds = DurableStore(str(tmp_path))
+    ds.submit_sync(5, _state(1.5), meta={"n_comp": 4})
+    got = ds.load(_state(0.0))
     assert got is not None
     step, state, meta = got
     assert step == 5 and meta["n_comp"] == 4
     assert float(state["params"]["w"][0, 0]) == 1.5
 
 
-def test_async_save_and_latest(tmp_path):
-    ck = Checkpointer(str(tmp_path))
-    ck.save_async(1, _state(1.0))
-    ck.save_async(2, _state(2.0))
-    ck.wait()
-    step, state, _ = ck.restore(_state(0.0))
+def test_async_submit_and_latest(tmp_path):
+    ds = DurableStore(str(tmp_path))
+    ds.submit(1, _state(1.0))
+    ds.submit(2, _state(2.0))
+    ds.wait()
+    step, state, _ = ds.load(_state(0.0))
     assert step == 2 and float(state["params"]["w"][0, 0]) == 2.0
 
 
-def test_gc_keeps_newest(tmp_path):
-    ck = Checkpointer(str(tmp_path), keep=2)
+def test_double_buffered_submits_overlap(tmp_path):
+    """Up to ``buffers`` submits proceed without joining the previous
+    write; load() drains them all."""
+    ds = DurableStore(str(tmp_path), keep=4, buffers=2)
     for s in (1, 2, 3, 4):
-        ck.save(s, _state(float(s)))
-    assert ck.list_steps() == [3, 4]
+        ds.submit(s, _state(float(s)))
+    step, state, _ = ds.load(_state(0.0))
+    assert step == 4 and float(state["params"]["w"][0, 0]) == 4.0
+    assert ds.steps() == [1, 2, 3, 4]
+
+
+def test_gc_keeps_newest(tmp_path):
+    ds = DurableStore(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ds.submit_sync(s, _state(float(s)))
+    assert ds.steps() == [3, 4]
+
+
+def test_trim_and_drop(tmp_path):
+    ds = DurableStore(str(tmp_path), keep=5)
+    for s in (1, 2, 3):
+        ds.submit_sync(s, _state(float(s)))
+    ds.drop(2)
+    assert ds.steps() == [1, 3]
+    ds.trim(1)
+    assert ds.steps() == [3]
 
 
 def test_restore_specific_step(tmp_path):
-    ck = Checkpointer(str(tmp_path), keep=5)
+    ds = DurableStore(str(tmp_path), keep=5)
     for s in (1, 2, 3):
-        ck.save(s, _state(float(s)))
-    step, state, _ = ck.restore(_state(0.0), step=2)
+        ds.submit_sync(s, _state(float(s)))
+    step, state, _ = ds.load(_state(0.0), step=2)
     assert step == 2 and float(state["params"]["w"][0, 0]) == 2.0
 
 
 def test_atomic_publish_no_partial(tmp_path):
-    ck = Checkpointer(str(tmp_path))
-    ck.save(1, _state(1.0))
+    ds = DurableStore(str(tmp_path))
+    ds.submit_sync(1, _state(1.0))
     names = os.listdir(str(tmp_path))
     assert all(not n.startswith(".tmp") for n in names)
 
 
-def test_partner_store():
-    ps = PartnerStore()
-    ps.save(0, 7, _state(3.0), {"k": 1})
-    got = ps.restore(0, _state(0.0))
-    assert got is not None and got[0] == 7
-    assert float(got[1]["params"]["w"][0, 0]) == 3.0
-    assert ps.latest_step() == 7
-    ps.drop(0)
-    assert ps.restore(0, _state(0.0)) is None
+def test_stale_tmp_gc_on_startup(tmp_path):
+    """A writer that died between makedirs and rename leaves ``.tmp-<s>``;
+    a fresh store GCs the debris and restores the newest VALID step."""
+    ds = DurableStore(str(tmp_path))
+    ds.submit_sync(3, _state(3.0))
+    # simulate the mid-write crash: a half-written tmp dir for step 4
+    crashed = os.path.join(str(tmp_path), ".tmp-4")
+    os.makedirs(crashed)
+    with open(os.path.join(crashed, "state.npz"), "w") as f:
+        f.write("torn bytes")
+    ds2 = DurableStore(str(tmp_path))  # the restart
+    assert not any(n.startswith(".tmp") for n in os.listdir(str(tmp_path)))
+    step, state, _ = ds2.load(_state(0.0))
+    assert step == 3 and float(state["params"]["w"][0, 0]) == 3.0
+
+
+def test_stale_tmp_gc_after_publish(tmp_path):
+    """Debris is also swept by the post-publish GC, not only at startup."""
+    ds = DurableStore(str(tmp_path))
+    os.makedirs(os.path.join(str(tmp_path), ".tmp-9"))
+    ds.submit_sync(10, _state(1.0))
+    assert not any(n.startswith(".tmp") for n in os.listdir(str(tmp_path)))
+
+
+def test_manifest_contents(tmp_path):
+    ds = DurableStore(str(tmp_path))
+    ds.submit_sync(7, _state(1.0), meta={"n_comp": 2})
+    with open(os.path.join(str(tmp_path), "step-0000000007", "manifest.json")) as f:
+        man = json.load(f)
+    assert man["step"] == 7 and man["meta"] == {"n_comp": 2}
+    assert man["leaves"] == 3 and man["bytes"] > 0

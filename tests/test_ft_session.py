@@ -64,8 +64,8 @@ def test_reports_extend_ftreport():
 
 _FAKE = """
         import numpy as np
-        from repro.checkpoint.checkpointer import PartnerStore
         from repro.ft import FailureSchedule, FTSession, ResilientProgram
+        from repro.store import PartnerMemoryStore, RecoveryLadder
 
         class Fake(ResilientProgram):
             def __init__(self):
@@ -129,16 +129,19 @@ def test_session_lost_cmp_restores_from_partner_then_replays():
         _FAKE
         + """
         prog = Fake()
-        s = FTSession(prog, n_slices=4, rdegree=0.0, partner=PartnerStore(),
+        s = FTSession(prog, n_slices=4, rdegree=0.0,
+                      stores=[PartnerMemoryStore(range(4), redundancy=2)],
                       checkpoint_every=3, replay="log")
         rep = s.run(6, {5: [1]})
         # unreplicated loss at step 5 -> restore from the step-3 partner
-        # checkpoint, replay step 4, then run 5
+        # snapshot (K-way sharded: peer 1's shards die with it, the
+        # redundant copies serve the load), replay step 4, then run 5
         assert rep.restarts == 1 and rep.interruptions == [5]
         assert prog.restored_meta == {"step": 3, "tag": "fake"}
         assert prog.fresh_inits == 0
         assert prog.calls == [0, 1, 2, 3, 4, 4, 5], prog.calls
         assert rep.replayed_steps == 1
+        assert rep.restored_from == ["L1:partner[k2]@step3"], rep.restored_from
         assert s.world.topo.n_comp == 3  # elastic shrink
         print("PARTNER-RESTORE-OK")
         """
