@@ -4,6 +4,12 @@ SimCluster runs REAL train steps with Weibull-scheduled failure injections
 at several replication degrees, splitting total time into app time vs
 error-handler time (repair + mesh rebuild + re-lower + replay) - the
 paper's "most of the overheads ... are due to the error handler".
+
+Uses the post-PR-2 store plane exclusively: SimCluster stacks the K-way
+partner-memory level + durable level from ``checkpoint_dir`` /
+``checkpoint_every`` (the old ``partner=`` / ``checkpointer=`` kwargs are
+gone). ``--tiny`` runs the CI smoke shape (4 slices, one rdegree, one
+trial).
 """
 from __future__ import annotations
 
@@ -19,39 +25,49 @@ from repro.configs.registry import smoke_config
 from repro.core.fault_injector import FaultInjector
 from repro.core.simulator import SimCluster
 
-STEPS = 14
+TINY = {tiny}
+N = 4 if TINY else 8
+STEPS = 8 if TINY else 14
+RDEGREES = [1.0] if TINY else [0.5, 1.0]
+TRIALS = 1 if TINY else 2
 results = []
-for rdeg in [0.5, 1.0]:
-    for trial in range(2):
+for rdeg in RDEGREES:
+    for trial in range(TRIALS):
         cfg = smoke_config("qwen2.5-3b")
-        sim = SimCluster(cfg, n_slices=8, model_shards=1, rdegree=rdeg,
-                         seq_len=32, checkpoint_dir=f"/tmp/ckpt_f{rdeg}_{trial}",
+        sim = SimCluster(cfg, n_slices=N, model_shards=1, rdegree=rdeg,
+                         seq_len=32, checkpoint_dir=f"/tmp/ckpt_f{{rdeg}}_{{trial}}",
                          checkpoint_every=4)
-        inj = FaultInjector(8, scale=6.0, shape=0.7, seed=trial)
-        events = inj.schedule(STEPS - 2, list(range(8)))
-        failures = {}
-        for t, victim in events[:3]:
-            failures.setdefault(int(t) + 1, []).append(victim)
+        if TINY:
+            # deterministic single promote-path failure: the smoke must
+            # exercise the error handler, not depend on the Weibull draw
+            failures = {{3: [0]}}
+        else:
+            inj = FaultInjector(N, scale=6.0, shape=0.7, seed=trial)
+            events = inj.schedule(STEPS - 2, list(range(N)))
+            failures = {{}}
+            for t, victim in events[:3]:
+                failures.setdefault(int(t) + 1, []).append(victim)
         rep = sim.run(STEPS, failures=failures)
-        results.append({
+        results.append({{
             "rdegree": rdeg, "trial": trial,
             "app_s": rep.app_seconds, "handler_s": rep.handler_seconds,
             "failures": rep.failures, "promotes": rep.promotes,
             "restarts": rep.restarts, "steps": rep.steps_completed,
             "final_loss": rep.losses[-1] if rep.losses else float("nan"),
-        })
+        }})
 print("RESULTS_JSON:" + json.dumps(results))
 """
 
 
-def run():
+def run(tiny: bool = False):
     env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    n = 4 if tiny else 8
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
     env["PYTHONPATH"] = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src")
     )
     proc = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(_CHILD)],
+        [sys.executable, "-c", textwrap.dedent(_CHILD.format(tiny=tiny))],
         capture_output=True, text=True, env=env, timeout=3000,
     )
     if proc.returncode != 0:
@@ -76,5 +92,5 @@ def rows(results):
 
 
 if __name__ == "__main__":
-    for name, us, d in rows(run()):
+    for name, us, d in rows(run(tiny="--tiny" in sys.argv)):
         print(f"{name},{us:.0f},{d}")

@@ -1,52 +1,151 @@
-"""Fig. 9(b) analogue: MTTI vs replication degree.
+"""Fig. 9(b) analogue: MTTI vs replication degree - plus the repro.heal
+restored-replication view.
 
-Pure-host Monte-Carlo over the replica topology (no devices): Weibull
-inter-failure times, uniform victim choice - the paper's injector. Run at
-the paper's scale (256 computational slices) plus the production mesh
-scale, and report the Daly-optimal checkpoint interval stretch.
+Two host-only (no devices) studies:
+
+1. ``run``: the paper's Monte-Carlo MTTI table (Weibull inter-failure
+   times, uniform victim choice) over the paper's rdegrees, with the
+   Daly-optimal checkpoint-interval stretch - now with an extra column:
+   the same topology given a spare pool + eager healing
+   (``mtti_montecarlo_healed`` runs the real ``repair``/``heal`` algebra).
+
+2. ``heal_trajectory``: the erosion picture the heal plane exists to fix.
+   A deterministic schedule kills the current replica slices one at a
+   time (the worst case for redundancy); after each repair the effective
+   rdegree is recorded. With ``--heal none`` it decays monotonically to 0
+   (PartRePer's Sec. VI shrink semantics); with ``--heal eager`` each
+   kill is healed from the spare pool and rdegree returns to target until
+   spares run out. ``time_at_risk`` integrates the replica deficit over
+   events - the exposure a week-long job would accumulate.
+
+Usage: ``python benchmarks/mtti_bench.py [--tiny] [--heal POLICY]``
+(``--tiny`` is the CI smoke shape).
 """
 from __future__ import annotations
 
-from repro.core.mtti import daly_interval, mtti_montecarlo
-from repro.core.replication import ReplicaTopology
+import sys
+
+from repro.core.mtti import daly_interval, mtti_montecarlo, mtti_montecarlo_healed
+from repro.core.replication import ReplicaTopology, WorldState
+from repro.heal.policy import HealPolicy
 
 PAPER_RDEGREES = [0.0, 0.0625, 0.125, 0.25, 0.5, 1.0]
 
 
 def run(n_comp: int = 256, system_scale: float = 10.0, shape: float = 0.7,
-        trials: int = 800, checkpoint_cost: float = 1.0):
+        trials: int = 800, checkpoint_cost: float = 1.0, n_spares: int = 0):
     """Holds nComp fixed and ADDS replicas (the paper's setup: 256 cmp +
-    rDegree*256 replicas)."""
+    rDegree*256 replicas). With ``n_spares`` > 0 an extra ``mtti_healed``
+    column prices eager re-replication from the spare pool."""
     results = []
     for r in PAPER_RDEGREES:
         n_rep = round(n_comp * r)
         topo = ReplicaTopology(n_comp=n_comp, replica_map=tuple(range(n_rep)))
         m = mtti_montecarlo(topo, system_scale, shape, trials=trials)
-        results.append(
-            {
-                "rdegree": r,
-                "n_slices": topo.n_slices,
-                "mtti": m,
-                "tau_opt": daly_interval(m, checkpoint_cost),
-            }
-        )
+        rec = {
+            "rdegree": r,
+            "n_slices": topo.n_slices,
+            "mtti": m,
+            "tau_opt": daly_interval(m, checkpoint_cost),
+        }
+        if n_spares:
+            rec["mtti_healed"] = mtti_montecarlo_healed(
+                topo.n_slices + n_spares, r, n_spares=n_spares,
+                policy="eager", system_scale=system_scale, shape=shape,
+                trials=max(trials // 2, 100),
+            )
+        results.append(rec)
     base = results[0]["mtti"]
     for rec in results:
         rec["mtti_gain"] = rec["mtti"] / base
     return results
 
 
+def heal_trajectory(n_slices: int = 8, rdegree: float = 1.0, n_spares: int = 2,
+                    policy: str = "eager", events: int = 0):
+    """Kill the replica slices one at a time; record the effective-rdegree
+    trajectory and the accumulated time-at-risk (replica deficit summed
+    over events). ``events`` defaults to nRep + spares (enough to drain
+    redundancy AND the pool)."""
+    pol = HealPolicy.parse(policy)
+    world = WorldState.create(n_slices, rdegree, n_spares=n_spares)
+    target = world.target_n_rep
+    if not events:
+        events = world.topo.n_rep + len(world.spares)
+    traj = [{
+        "event": 0, "victim": None, "rdegree": world.topo.rdegree,
+        "n_rep": world.topo.n_rep, "deficit": world.replica_deficit(),
+        "spares": len(world.spares), "healed": 0, "at_target": True,
+    }]
+    time_at_risk = 0
+    for k in range(1, events + 1):
+        reps = [world.assignment[r] for r in world.topo.rep_roles()]
+        if not reps and world.topo.n_comp <= 1:
+            break
+        # kill the highest replica physical; once redundancy is gone, a
+        # computational slice (the paper's interruption case)
+        victim = max(reps) if reps else world.assignment[world.topo.n_comp - 1]
+        world, rep = world.repair([victim], use_spares=pol.enabled)
+        healed = 0
+        if pol.wants_heal(world.replica_deficit()):
+            world, plan = world.heal()
+            healed = len(plan.actions)
+        time_at_risk += world.replica_deficit()
+        traj.append({
+            "event": k, "victim": victim, "rdegree": world.topo.rdegree,
+            "n_rep": world.topo.n_rep, "deficit": world.replica_deficit(),
+            "spares": len(world.spares), "healed": healed,
+            "at_target": world.topo.n_rep >= min(target, world.target_n_rep),
+        })
+    return {"policy": str(pol), "target_n_rep": target, "trajectory": traj,
+            "time_at_risk": time_at_risk}
+
+
 def rows(results):
-    return [
-        (
-            f"mtti/r{r['rdegree']:g}",
-            r["mtti"] * 1e6,
-            f"gain={r['mtti_gain']:.2f}x tau={r['tau_opt']:.1f}",
-        )
-        for r in results
-    ]
+    out = []
+    for r in results:
+        extra = f"gain={r['mtti_gain']:.2f}x tau={r['tau_opt']:.1f}"
+        if "mtti_healed" in r:
+            extra += f" healed_mtti={r['mtti_healed'] * 1e6:.0f}"
+        out.append((f"mtti/r{r['rdegree']:g}", r["mtti"] * 1e6, extra))
+    return out
+
+
+def trajectory_rows(result):
+    pol = result["policy"]
+    out = []
+    for t in result["trajectory"]:
+        out.append((
+            f"heal/{pol}/event{t['event']}",
+            t["rdegree"] * 100,
+            f"n_rep={t['n_rep']} deficit={t['deficit']} spares={t['spares']}"
+            + (f" healed={t['healed']}" if t["healed"] else "")
+            + (" AT-TARGET" if t["at_target"] else " BELOW-TARGET"),
+        ))
+    out.append((f"heal/{pol}/time_at_risk", result["time_at_risk"], "sum(deficit) over events"))
+    return out
 
 
 if __name__ == "__main__":
-    for name, us, d in rows(run()):
-        print(f"{name},{us:.0f},{d}")
+    tiny = "--tiny" in sys.argv
+    policy = "eager"
+    if "--heal" in sys.argv:
+        i = sys.argv.index("--heal")
+        if i + 1 >= len(sys.argv):
+            sys.exit("--heal requires a value: none | eager | deferred:K")
+        policy = sys.argv[i + 1]
+        HealPolicy.parse(policy)  # fail fast on a bad spec
+    if tiny:
+        traj = heal_trajectory(n_slices=6, rdegree=1.0, n_spares=2, policy=policy)
+        for name, v, d in trajectory_rows(traj):
+            print(f"{name},{v:.0f},{d}")
+        for name, us, d in rows(run(n_comp=16, trials=60, n_spares=4)):
+            print(f"{name},{us:.0f},{d}")
+    else:
+        for name, us, d in rows(run(n_spares=32)):
+            print(f"{name},{us:.0f},{d}")
+        for pol in ("none", "eager", "deferred:2"):
+            for name, v, d in trajectory_rows(
+                heal_trajectory(n_slices=16, rdegree=1.0, n_spares=4, policy=pol)
+            ):
+                print(f"{name},{v:.0f},{d}")

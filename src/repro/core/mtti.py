@@ -14,7 +14,11 @@ failures. This module provides:
   checkpoint intervals");
 - ``efficiency``: end-to-end useful-work fraction combining replica
   resource cost, rework, and checkpoint overhead - quantifies when partial
-  replication pays off (Stearley et al.'s question).
+  replication pays off (Stearley et al.'s question);
+- ``mtti_montecarlo_healed``: MTTI when a ``repro.heal`` spare pool
+  re-establishes lost mirrors online - runs the REAL
+  ``WorldState.repair`` + ``heal`` algebra per failure, so the model and
+  the system cannot drift apart.
 """
 from __future__ import annotations
 
@@ -23,7 +27,8 @@ from typing import Dict, Tuple
 
 import numpy as np
 
-from repro.core.replication import ReplicaTopology
+from repro.core.replication import ReplicaTopology, WorldState
+from repro.heal.policy import HealPolicy
 
 
 def _interrupted(topo: ReplicaTopology, dead_roles: set) -> bool:
@@ -75,6 +80,54 @@ def mtti_montecarlo(topo: ReplicaTopology, system_scale: float,
             if _interrupted(topo, dead):
                 times.append(t)
                 break
+    return float(np.mean(times))
+
+
+def mtti_montecarlo_healed(
+    n_slices: int,
+    rdegree: float,
+    *,
+    n_spares: int = 0,
+    policy: str = "none",
+    system_scale: float = 10.0,
+    shape: float = 0.7,
+    trials: int = 500,
+    seed: int = 0,
+) -> float:
+    """MTTI with online re-replication from a spare pool.
+
+    Each Weibull-spaced failure kills a uniformly-random live physical
+    (role-holding or spare); the world runs the real
+    ``WorldState.repair``/``heal`` transitions. The application is
+    interrupted at the first failure replication cannot mask (a lost
+    computational role - spare *backfill* still restores state, so it
+    counts as the interruption it is; only re-established *mirrors*
+    stretch MTTI).
+
+    Fairness vs :func:`mtti_montecarlo`: ``system_scale`` there prices a
+    system of ``n_slices - n_spares`` role-holding nodes. Adding spares
+    adds hardware that also fails, so the whole-system inter-failure
+    scale shrinks proportionally (per-node MTBF held constant) - else a
+    failure landing harmlessly on a spare would be credited to healing.
+    """
+    pol = HealPolicy.parse(policy)
+    rng = np.random.default_rng(seed)
+    scale_eff = system_scale * (n_slices - n_spares) / n_slices
+    times = []
+    for _ in range(trials):
+        world = WorldState.create(n_slices, rdegree, n_spares=n_spares)
+        t = 0.0
+        while True:
+            t += scale_eff * rng.weibull(shape)
+            alive = list(world.assignment) + list(world.spares)
+            victim = int(alive[rng.integers(len(alive))])
+            # use_spares=False: a backfill is an interruption, not a mask
+            world, rep = world.repair([victim], use_spares=False)
+            if rep["lost_cmp"] or world.topo.n_comp == 0:
+                times.append(t)
+                break
+            if pol.wants_heal(world.replica_deficit()):
+                world, _ = world.heal()
     return float(np.mean(times))
 
 

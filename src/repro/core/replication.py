@@ -26,6 +26,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
+from repro.heal.plan import HealAction, HealPlan
+
 
 def split_comp_rep(n_slices: int, rdegree: float) -> Tuple[int, int]:
     """Partition a fixed pool of slices into computational + replicas.
@@ -145,6 +147,23 @@ class WorldState:
 
     ``generation`` is the ULFM-revocation analogue: every repair bumps it,
     and hosts abort dispatch loops whose generation is stale.
+
+    Beyond the role-holding slices, the world tracks two re-replication
+    bookkeeping sets (the ``repro.heal`` plane):
+
+    - ``spares``: live physical slices holding NO cmp/rep role - the warm
+      standby pool (reserved at job launch via ``n_spares``, FTHP-MPI's
+      spare processes; repair may also orphan a replica into it). Spares
+      sit outside the shrunk mesh until a heal converts them.
+    - ``exposed``: ``(cmp_role, generation)`` pairs recording when a role
+      LOST its mirror (promote consumed it, or the replica died) - the
+      most-exposed-first ordering key for :meth:`heal`. Roles unmirrored
+      by the initial rdegree split are not exposure-eroded and are healed
+      last.
+
+    ``target_rdegree`` is the configured replication degree the heal plane
+    restores toward; healing never pushes ``n_rep`` above
+    ``target_n_rep``.
     """
 
     n_physical: int
@@ -152,19 +171,38 @@ class WorldState:
     assignment: Tuple[int, ...]
     dead: FrozenSet[int] = frozenset()
     generation: int = 0
+    spares: Tuple[int, ...] = ()
+    exposed: Tuple[Tuple[int, int], ...] = ()
+    target_rdegree: float = 0.0
 
     @classmethod
-    def create(cls, n_slices: int, rdegree: float) -> "WorldState":
-        topo = ReplicaTopology.create(n_slices, rdegree)
+    def create(cls, n_slices: int, rdegree: float, *, n_spares: int = 0) -> "WorldState":
+        assert 0 <= n_spares < n_slices, (n_slices, n_spares)
+        topo = ReplicaTopology.create(n_slices - n_spares, rdegree)
+        # store the ACHIEVED split ratio, so target_n_rep == n_rep exactly
+        # at creation (the requested rdegree may not be integer-realizable)
         return cls(
             n_physical=n_slices,
             topo=topo,
             assignment=tuple(range(topo.n_slices)),
+            spares=tuple(range(topo.n_slices, n_slices)),
+            target_rdegree=topo.rdegree,
         )
 
     @property
     def n_live(self) -> int:
         return len(self.assignment)
+
+    @property
+    def target_n_rep(self) -> int:
+        """Replica count the configured rdegree implies for the CURRENT
+        computational width (shrinks with the world after lost roles)."""
+        return min(self.topo.n_comp, int(round(self.target_rdegree * self.topo.n_comp)))
+
+    def replica_deficit(self) -> int:
+        """How many mirrors below target the world is running (the
+        time-at-risk unit: deficit x steps = exposure)."""
+        return max(0, self.target_n_rep - self.topo.n_rep)
 
     def physical_of(self, role: int) -> int:
         return self.assignment[role]
@@ -175,18 +213,39 @@ class WorldState:
         except ValueError:
             return None
 
-    def repair(self, failed_physical: Sequence[int]) -> Tuple["WorldState", Dict]:
-        """Shrink + promote. Returns (new_world, report).
+    def repair(self, failed_physical: Sequence[int], *,
+               use_spares: bool = True) -> Tuple["WorldState", Dict]:
+        """Shrink + promote (+ spare backfill). Returns (new_world, report).
 
-        - failed replica                  -> dropped
+        - failed replica                  -> dropped (its cmp role is now
+          *exposed*: recorded for most-exposed-first healing)
         - failed cmp with live replica    -> replica promoted into the role
-        - failed cmp without replica      -> ``lost_cmp`` (checkpoint/restart
-          + elastic shrink are the caller's job; the role is removed here)
+          (the promoted role is exposed too - its mirror was consumed)
+        - failed cmp without replica      -> with ``use_spares`` and a spare
+          available, the spare *backfills* the role (``backfilled``): role
+          ids and the computational width are preserved, so a ladder
+          restore + replay reproduces the failure-free trajectory; without
+          a spare it is ``lost_cmp`` (checkpoint/restart + elastic shrink
+          are the caller's job; the role is removed here)
+        - failed spare                    -> removed from the pool
+        - a live replica whose target role vanished is orphaned back into
+          the spare pool rather than dropped from the world
+
+        ``report["role_map"]`` maps new cmp role ids -> old cmp role ids
+        (identity unless a lost role forced renumbering) - consumers that
+        carry per-role state across the shrink (e.g. the serving cache
+        repack) use it to find each surviving role's old rows.
         """
         topo = self.topo
         dead = set(self.dead) | set(failed_physical)
         report: Dict = {"promoted": [], "dropped_reps": [], "lost_cmp": [],
+                        "backfilled": [], "dead_spares": [], "orphaned": [],
                         "generation": self.generation + 1}
+        gen = self.generation + 1
+        exposed: Dict[int, int] = dict(self.exposed)
+
+        spares = [s for s in self.spares if s not in dead]
+        report["dead_spares"] = sorted(set(self.spares) - set(spares))
 
         # cmp role -> physical ; cmp role -> its replica's physical
         cmp_phys: Dict[int, int] = {
@@ -201,6 +260,7 @@ class WorldState:
         for c in list(rep_phys):
             if rep_phys[c] in dead:
                 report["dropped_reps"].append(c)
+                exposed.setdefault(c, gen)
                 del rep_phys[c]
 
         # handle dead computational roles
@@ -209,6 +269,13 @@ class WorldState:
                 if c in rep_phys:
                     cmp_phys[c] = rep_phys.pop(c)  # promote
                     report["promoted"].append((c, cmp_phys[c]))
+                    exposed.setdefault(c, gen)
+                elif use_spares and spares:
+                    # spare backfill: the role survives on a standby slice;
+                    # its state is the caller's restore walk (like lost_cmp)
+                    # but the computational width never shrinks
+                    cmp_phys[c] = spares.pop(0)
+                    report["backfilled"].append((c, cmp_phys[c]))
                 else:
                     report["lost_cmp"].append(c)
                     del cmp_phys[c]
@@ -216,10 +283,19 @@ class WorldState:
         # renumber surviving cmp roles densely, preserving order
         survivors = sorted(cmp_phys)
         renumber = {old: new for new, old in enumerate(survivors)}
+        report["role_map"] = {new: old for old, new in renumber.items()}
+        report["backfilled"] = [
+            (renumber[c], p) for c, p in report["backfilled"]
+        ]
         new_cmp_assign = [cmp_phys[c] for c in survivors]
-        new_pairs = sorted(
-            (renumber[c], p) for c, p in rep_phys.items() if c in renumber
-        )
+        new_pairs = []
+        for c, p in rep_phys.items():
+            if c in renumber:
+                new_pairs.append((renumber[c], p))
+            else:  # its cmp role was lost: the live replica becomes a spare
+                report["orphaned"].append(p)
+                spares.append(p)
+        new_pairs.sort()
         new_topo = ReplicaTopology(
             n_comp=len(new_cmp_assign),
             replica_map=tuple(c for c, _ in new_pairs),
@@ -229,9 +305,92 @@ class WorldState:
             topo=new_topo,
             assignment=tuple(new_cmp_assign + [p for _, p in new_pairs]),
             dead=frozenset(dead),
-            generation=self.generation + 1,
+            generation=gen,
+            spares=tuple(sorted(spares)),
+            exposed=tuple(sorted(
+                (renumber[c], g) for c, g in exposed.items() if c in renumber
+            )),
+            target_rdegree=self.target_rdegree,
         )
         return new_world, report
+
+    # ---- re-replication (the repro.heal plane) -----------------------------
+    def unmirrored_cmp_roles(self) -> List[int]:
+        """Cmp roles without a replica, most-exposed-first: roles that LOST
+        a mirror come first (earliest exposure generation wins, role id
+        tie-breaks - stable under repeated failures), then roles unmirrored
+        by the initial split, in role order."""
+        mirrored = set(self.topo.replica_map)
+        since = dict(self.exposed)
+        bare = [c for c in self.topo.cmp_roles() if c not in mirrored]
+        return sorted(bare, key=lambda c: (since.get(c, 1 << 30), c))
+
+    def heal(self, max_new: Optional[int] = None) -> Tuple["WorldState", HealPlan]:
+        """Convert spares into replicas of unmirrored computational roles,
+        most-exposed-first, until the configured target rdegree is met (or
+        spares run out). Pure topology transition - the state motion (the
+        3-phase live clone) and store re-registration are the Healer's job.
+
+        The generation is NOT bumped: heals execute inside a recovery
+        window whose repair already revoked + bumped, and the single
+        re-lower that follows compiles the healed topology.
+        """
+        deficit = self.replica_deficit()
+        plan = HealPlan(generation=self.generation, deficit_before=deficit,
+                        deficit_after=deficit)
+        budget = min(len(self.spares), deficit)
+        if max_new is not None:
+            budget = min(budget, max_new)
+        if budget <= 0:
+            return self, plan
+
+        since = dict(self.exposed)
+        targets = self.unmirrored_cmp_roles()[:budget]
+        spares = list(self.spares)  # sorted ascending: lowest spare first
+        plan.actions = [
+            HealAction(cmp_role=c, spare=spares.pop(0),
+                       exposed_since=since.get(c, -1))
+            for c in targets
+        ]
+
+        n_comp = self.topo.n_comp
+        pairs = [
+            (self.topo.replica_map[j], self.assignment[n_comp + j])
+            for j in range(self.topo.n_rep)
+        ] + [(a.cmp_role, a.spare) for a in plan.actions]
+        pairs.sort()
+        healed = WorldState(
+            n_physical=self.n_physical,
+            topo=ReplicaTopology(
+                n_comp=n_comp, replica_map=tuple(c for c, _ in pairs)
+            ),
+            assignment=tuple(list(self.assignment[:n_comp])
+                             + [p for _, p in pairs]),
+            dead=self.dead,
+            generation=self.generation,
+            spares=tuple(sorted(spares)),
+            exposed=tuple(sorted(
+                (c, g) for c, g in self.exposed if c not in set(targets)
+            )),
+            target_rdegree=self.target_rdegree,
+        )
+        plan.deficit_after = healed.replica_deficit()
+        return healed, plan
+
+    def validate(self) -> None:
+        """World-level invariants (topology invariants via topo.validate):
+        role<->physical stays a bijection, spares/dead/assignment are
+        pairwise disjoint, and healing never overshot the target."""
+        self.topo.validate()
+        assert len(set(self.assignment)) == len(self.assignment)
+        live = set(self.assignment)
+        assert not live & set(self.dead), "dead physical still holds a role"
+        assert not live & set(self.spares), "spare physical holds a role"
+        assert not set(self.spares) & set(self.dead), "dead spare retained"
+        assert len(set(self.spares)) == len(self.spares)
+        mirrored = set(self.topo.replica_map)
+        for c, g in self.exposed:
+            assert 0 <= c < self.topo.n_comp and c not in mirrored
 
     # ---- mesh-space group translation -------------------------------------
     def live_physicals(self) -> List[int]:

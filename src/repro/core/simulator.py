@@ -58,6 +58,8 @@ class SimCluster(ResilientProgram):
         n_slices: int,
         model_shards: int = 1,
         rdegree: float = 0.0,
+        spares: int = 0,
+        heal: str = "none",
         collective_mode: str = "paper",
         per_slice_batch: int = 2,
         seq_len: int = 32,
@@ -101,6 +103,8 @@ class SimCluster(ResilientProgram):
             n_slices=n_slices,
             model_shards=model_shards,
             rdegree=rdegree,
+            n_spares=spares,
+            heal=heal,
             heartbeat_timeout=1e9,  # report-driven in sim
             stores=stores,
             checkpoint_every=checkpoint_every,

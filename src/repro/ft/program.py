@@ -89,4 +89,9 @@ class ResilientProgram:
     def repack_state(self, old_world: WorldState, new_world: WorldState) -> None:
         """Carry live state across the shrink, BEFORE ``build_step`` runs on
         the new world (e.g. re-pack per-slice KV-cache rows so promoted
-        replicas keep their mirrored caches)."""
+        replicas keep their mirrored caches). ``new_world`` may contain
+        physicals that were NOT in the old world: replicas the heal plane
+        just re-established on spares (warm their mirrored state from the
+        partner) and spare-backfilled computational roles (their state is
+        the just-restored snapshot; ``session.last_repair['role_map']``
+        maps new role ids back to old ones)."""

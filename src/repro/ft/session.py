@@ -19,8 +19,15 @@ everything PartRePer-MPI layers around it:
 - snapshot submission to the :class:`~repro.store.RecoveryLadder` (live
   clone / K-way partner memory / durable - whichever levels the caller
   stacked) on the trainer's cadence;
+- re-replication through the ``repro.heal`` plane (``heal=`` policy +
+  ``n_spares=`` warm standbys): after each repair the
+  :class:`~repro.heal.Healer` converts spares back into replicas of the
+  most-exposed roles (3-phase live clone, partner pair re-registration,
+  shard re-placement), and spare *backfill* inside ``WorldState.repair``
+  keeps lost computational roles - and the bitwise trajectory - alive;
 - deterministic failure injection via :class:`FailureSchedule`;
-- a unified :class:`FTReport` of app/handler seconds and recovery events.
+- a unified :class:`FTReport` of app/handler seconds, recovery events,
+  heals, and time-at-risk (``exposure_steps``).
 
 All recovery state flows through ``repro.store``'s ``StateStore``
 protocol; the session holds no backend-specific checkpoint code.
@@ -42,6 +49,7 @@ from repro.core.control_plane import (
 from repro.core.elastic import shrink_mesh
 from repro.core.recovery import ReplayPlan, StepLog, StepRecord, replay_plan
 from repro.core.replication import WorldState
+from repro.heal import Healer, HealPolicy
 from repro.store import RecoveryLadder, StateStore
 
 PyTree = Any
@@ -68,6 +76,15 @@ class FTReport:
     events: List[str] = field(default_factory=list)
     #: one entry per ladder restore: "L<level>:<store>@step<step>"
     restored_from: List[str] = field(default_factory=list)
+    #: one entry per executed HealPlan (repro.heal): which roles were
+    #: re-mirrored onto which spares, and the clone accounting
+    heals: List[str] = field(default_factory=list)
+    #: replicas re-established by the heal plane (sum over plans)
+    healed_replicas: int = 0
+    #: time-at-risk accumulator: per completed dispatch unit, how many
+    #: mirrors the world ran below its configured target (0 under healing
+    #: that keeps up; grows linearly once redundancy erodes un-healed)
+    exposure_steps: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -79,7 +96,9 @@ class FailureSchedule:
     """Deterministic injection plan: dispatch step -> physical slices to
     kill at that step's boundary. Always copies its input, so consuming the
     schedule never mutates a caller-owned dict (the old ``failures.pop``
-    bug), and one dict can seed several runs."""
+    bug), and one dict can seed several runs. A victim repeated within one
+    step is deduplicated (killing a slice twice is one failure, not two -
+    repeats used to inflate ``FTReport.failures``)."""
 
     def __init__(
         self,
@@ -90,14 +109,16 @@ class FailureSchedule:
         else:
             src = failures or {}
         self._by_step: Dict[int, List[int]] = {
-            int(s): list(v) for s, v in dict(src).items() if v
+            int(s): list(dict.fromkeys(v)) for s, v in dict(src).items() if v
         }
 
     @classmethod
     def parse(cls, spec: str) -> "FailureSchedule":
-        """CLI syntax: comma list of ``step:physical_slice`` pairs."""
+        """CLI syntax: comma list of ``step:physical_slice`` pairs.
+        Whitespace around items or fields is tolerated; empty items
+        (trailing/double commas) are skipped."""
         out: Dict[int, List[int]] = {}
-        for item in filter(None, (spec or "").split(",")):
+        for item in filter(None, (s.strip() for s in (spec or "").split(","))):
             try:
                 s, v = item.split(":")
                 out.setdefault(int(s), []).append(int(v))
@@ -144,6 +165,8 @@ class FTSession:
         n_slices: int,
         model_shards: int = 1,
         rdegree: float = 0.0,
+        n_spares: int = 0,
+        heal: Union[str, HealPolicy] = "none",
         devices: Optional[Sequence] = None,
         heartbeat_timeout: float = 1e9,
         stores: Union[None, RecoveryLadder, StateStore, Sequence[StateStore]] = None,
@@ -167,7 +190,13 @@ class FTSession:
         )
         self.program = program
         program.session = self
-        self.world = WorldState.create(n_slices, rdegree)
+        # n_spares slices are reserved as warm standbys: they hold devices
+        # on the base mesh but no cmp/rep role (and sit outside the shrunk
+        # mesh) until the heal plane converts them
+        self.world = WorldState.create(n_slices, rdegree, n_spares=n_spares)
+        self.healer = Healer(heal)
+        self.last_repair: Dict = {}
+        self.last_heal = None
         self.control = ControlPlane(heartbeat_timeout=heartbeat_timeout)
         if stores is None:
             self.ladder = RecoveryLadder([])
@@ -205,9 +234,10 @@ class FTSession:
 
     def inject(self, victims: Sequence[int]) -> None:
         """Report failed physical slices to the control plane (the fault
-        injector / SIGCHLD path)."""
+        injector / SIGCHLD path). Spares are killable too - a standby
+        host dies like any other."""
         for victim in victims:
-            if victim in self.world.assignment:
+            if victim in self.world.assignment or victim in self.world.spares:
                 self.control.report_failure(victim)
                 self.report.failures += 1
 
@@ -249,13 +279,21 @@ class FTSession:
     # the error handler (paper Sec. VI)
     # ------------------------------------------------------------------
     def recover(self, step: int) -> Tuple[Dict, ReplayPlan]:
-        """revoke -> agree -> repair -> (restore) -> repack -> regenerate ->
-        message recovery. Returns (repair report, replay plan)."""
+        """revoke -> agree -> repair -> (restore) -> heal -> repack ->
+        regenerate -> message recovery. Returns (repair report, replay
+        plan)."""
         t0 = time.perf_counter()
         self.control.revoke()
         failed = self.control.agree()
         old_world = self.world
-        new_world, rep = old_world.repair(sorted(failed))
+        # spare backfill preserves a lost role only if its state can be
+        # re-established: trainers replay deterministically even from a
+        # fresh init, servers need a recoverable snapshot in the ladder
+        use_spares = self.healer.enabled and (
+            self.replay == "log" or bool(self.ladder)
+        )
+        new_world, rep = old_world.repair(sorted(failed), use_spares=use_spares)
+        self.last_repair = rep
         restored_step: Optional[int] = None
 
         # memory-resident store levels lose state that lived on the dead
@@ -263,16 +301,38 @@ class FTSession:
         self.ladder.on_failure(sorted(failed))
 
         self.report.promotes += len(rep["promoted"])
-        if rep["lost_cmp"]:
+        if rep["lost_cmp"] or rep["backfilled"]:
             # unrecoverable by replication: walk the recovery ladder; the
             # trainers' last resort is a fresh init, servers without a
-            # recoverable snapshot resume in place with the roles dropped
+            # recoverable snapshot resume in place with the roles dropped.
+            # (A backfilled role kept its id on a spare, but its state is
+            # equally gone - same restore walk, no elastic shrink.)
             self.report.restarts += 1
             self.report.interruptions.append(step)
             restored_step = self._restore()
             if restored_step is None and self.replay == "log":
                 self.program.init_fresh()
                 restored_step = -1
+
+        # re-replication (repro.heal): convert spares into replicas of the
+        # most-exposed roles, so the next re-lower compiles the healed
+        # topology; the clone source is the (possibly just-restored) state.
+        # Backfilled spares ride the same partner-ring registration +
+        # shard re-placement pass (AFTER the restore walk - the walk needs
+        # the pre-heal placement; ONE rebalance per recovery window)
+        self.last_heal = None
+        if self.healer.enabled:
+            new_world, hplan = self.healer.maybe_heal(
+                new_world,
+                snapshot=self.program.snapshot(),
+                stores=self.ladder,
+                step=step,
+                extra_peers=[p for _, p in rep["backfilled"]],
+            )
+            if hplan:
+                self.last_heal = hplan
+                self.report.healed_replicas += len(hplan.actions)
+                self.report.heals.append(f"{self.unit} {step}: {hplan.describe()}")
 
         # message recovery plan from the SURVIVORS' logs (paper Sec. VI-B:
         # "identify the collectives that every live process has completed")
@@ -308,6 +368,9 @@ class FTSession:
         self.report.events.append(
             f"{self.unit} {step}: failed={sorted(failed)} "
             f"promoted={rep['promoted']} lost={rep['lost_cmp']} "
+            f"backfilled={rep['backfilled']} "
+            f"healed={[(a.cmp_role, a.spare) for a in self.last_heal.actions] if self.last_heal else []} "
+            f"rdegree={self.world.topo.rdegree:.2f} "
             f"plan={plan.reason}@{plan.start_step}"
         )
         return rep, plan
@@ -346,6 +409,9 @@ class FTSession:
             self.program.run_step(step)
             self.report.app_seconds += time.perf_counter() - t0
             self.report.steps_completed += 1
+            # time-at-risk: every unit dispatched below the configured
+            # replication target accrues its mirror deficit
+            self.report.exposure_steps += self.world.replica_deficit()
             if self.replay == "log":
                 self._record(step)
             if (

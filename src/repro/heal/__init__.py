@@ -1,0 +1,27 @@
+"""``repro.heal`` - elastic re-replication (restoring rdegree online).
+
+PartRePer-MPI's shrink semantics (paper Sec. VI) erode redundancy
+monotonically: every masked failure consumes a replica, and after ``nRep``
+failures the job runs checkpoint-only until restart. FTHP-MPI makes
+*restoring* replication a first-class recovery step, and ReStore shows
+surviving-node memory is fast enough to rebuild redundancy online. This
+package is that capability:
+
+- :class:`HealPolicy` - ``none`` (paper baseline) | ``eager`` | ``deferred(k)``;
+- :class:`HealPlan` / :class:`HealAction` - what ``WorldState.heal`` emits:
+  spare -> replica conversions, most-exposed-first;
+- :class:`Healer` - executes a plan: 3-phase live clone through the
+  ``state_transfer``/``LiveCloneStore`` machinery, partner-store pair
+  re-registration, and shard re-placement, inside the recovery window so
+  the next re-lowered step compiles with the healed topology.
+
+The spare pool itself lives on :class:`~repro.core.replication.WorldState`
+(``spares``/``exposed``/``target_rdegree``); ``FTSession`` wires the
+policy via its ``heal=`` / ``n_spares=`` knobs and accounts heals and
+time-at-risk in :class:`~repro.ft.FTReport`.
+"""
+from repro.heal.healer import Healer
+from repro.heal.plan import HealAction, HealPlan
+from repro.heal.policy import HealPolicy
+
+__all__ = ["HealAction", "HealPlan", "HealPolicy", "Healer"]

@@ -1,0 +1,109 @@
+"""Healer - executes :class:`~repro.heal.plan.HealPlan` transitions.
+
+``WorldState.heal`` decides *which* spares re-mirror *which* exposed
+computational roles; the Healer performs the three side effects that make
+the new pair real:
+
+1. **3-phase live clone** (paper Sec. III-A process-image transfer): the
+   program's snapshot is staged through a :class:`LiveCloneStore` -
+   data/heap/stack phase ordering, per-phase verification - so the spare
+   adopts a provably faithful copy of its partner's state before the pair
+   goes live. The staged clone is what the re-lowered step places onto the
+   spare's devices.
+2. **Pair re-registration**: the spare's host memory joins every
+   partner-memory store's peer ring (``register_peers``) so future
+   snapshot shards land on it.
+3. **Shard re-placement** (``rebalance``): existing snapshots are re-
+   placed onto the healed ring, restoring K-way redundancy that the
+   failure eroded (ReStore's re-distribution step).
+
+The Healer runs inside ``FTSession.recover``'s window, after the restore
+walk (so a backfilled partner is cloned from its *restored* state) and
+before the communicator re-derivation, so the next re-lowered step
+compiles with the healed topology.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Any, Dict, Iterable, List, Optional, Tuple, Union
+
+from repro.heal.plan import HealPlan
+from repro.heal.policy import HealPolicy
+from repro.store.liveclone import LiveCloneStore
+
+if TYPE_CHECKING:  # import-time cycle: replication emits the plans we run
+    from repro.core.replication import WorldState
+
+PyTree = Any
+
+
+class Healer:
+    def __init__(self, policy: Union[str, HealPolicy] = "none", *,
+                 bit_exact: bool = False):
+        self.policy = HealPolicy.parse(policy)
+        # the rebirth staging buffer: one slot, always the newest clone
+        self.stage = LiveCloneStore(verify=True, bit_exact=bit_exact, keep=1)
+        self.plans: List[HealPlan] = []
+
+    @property
+    def enabled(self) -> bool:
+        return self.policy.enabled
+
+    def maybe_heal(
+        self,
+        world: "WorldState",
+        *,
+        snapshot: Optional[Tuple[PyTree, Dict]] = None,
+        stores: Iterable = (),
+        step: int = 0,
+        extra_peers: Iterable[int] = (),
+    ) -> Tuple["WorldState", Optional[HealPlan]]:
+        """Heal ``world`` if the policy wants it. Returns the (possibly)
+        healed world and the executed plan (``None`` when nothing healed).
+
+        ``snapshot`` is the program's ``(state, meta)`` - the mirrored
+        state the new replicas adopt; ``stores`` is walked for partner-
+        memory levels to re-register the new pairs with. ``extra_peers``
+        are other physicals that entered the world this recovery (spare
+        backfills): they join the SAME registration + shard re-placement
+        pass, so the manifest is re-gathered and re-spread once per
+        recovery window, not once per cause.
+        """
+        healed, plan = world, None
+        if self.policy.wants_heal(world.replica_deficit()) and world.spares:
+            healed, plan = world.heal()
+            if not plan:
+                healed, plan = world, None
+
+        # 1) 3-phase live clone of the partner state (verified per phase)
+        if plan and snapshot is not None:
+            state, meta = snapshot
+            self.stage.submit(step, state, dict(meta))
+            plan.transfer = self.stage.last_report
+
+        # 2) + 3) pair re-registration and shard re-placement - one pass
+        # for backfilled AND healed physicals
+        fresh = list(extra_peers) + ([a.spare for a in plan.actions] if plan else [])
+        replaced = self.register_spares(fresh, stores)
+        if plan:
+            plan.replaced_steps = replaced
+            self.plans.append(plan)
+        return healed, plan
+
+    @staticmethod
+    def register_spares(physicals: Iterable[int], stores: Iterable) -> List[int]:
+        """Add newly-active physicals (healed replicas or backfilled roles)
+        to every peer-ring store and re-place existing shards onto the new
+        ring. Returns the snapshot steps whose shards were re-placed."""
+        physicals = list(physicals)
+        replaced: List[int] = []
+        if not physicals:
+            return replaced
+        for s in stores:
+            register = getattr(s, "register_peers", None)
+            if register is None:
+                continue
+            register(physicals)
+            rebalance = getattr(s, "rebalance", None)
+            if rebalance is not None:
+                replaced.extend(rebalance())
+        return sorted(set(replaced))

@@ -1,0 +1,61 @@
+"""HealPlan - the re-replication transition record.
+
+``WorldState.heal`` is a pure topology transition (spares -> replica
+roles); what it emits is a :class:`HealPlan`: which computational role
+gets re-mirrored onto which spare physical slice, in which order, and why
+that order (the exposure generation - how long the role has been running
+unprotected). The :class:`~repro.heal.healer.Healer` then *executes* the
+plan - 3-phase live clone, partner-store pair re-registration, shard
+re-placement - and annotates it with the transfer accounting.
+
+Kept dependency-free (no jax, no stores) so ``core/replication.py`` can
+emit plans without pulling the execution machinery into the topology
+algebra.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, List, Optional
+
+
+@dataclass(frozen=True)
+class HealAction:
+    """Re-establish the mirror of ``cmp_role`` on physical slice ``spare``.
+
+    ``exposed_since`` is the world generation at which the role lost its
+    replica (-1: the role was unmirrored by the initial rdegree split, not
+    by erosion) - the sort key that makes healing most-exposed-first.
+    """
+
+    cmp_role: int
+    spare: int
+    exposed_since: int = -1
+
+
+@dataclass
+class HealPlan:
+    """One heal transition: the actions plus execution accounting."""
+
+    generation: int  #: world generation the plan was computed at
+    actions: List[HealAction] = field(default_factory=list)
+    deficit_before: int = 0  #: target_n_rep - n_rep before healing
+    deficit_after: int = 0
+    #: 3-phase live-clone accounting (a ``TransferReport``), filled by the
+    #: Healer when the program exposes a snapshot to clone
+    transfer: Optional[Any] = None
+    #: snapshot steps whose partner shards were re-placed onto the new ring
+    replaced_steps: List[int] = field(default_factory=list)
+
+    def __bool__(self) -> bool:
+        return bool(self.actions)
+
+    def describe(self) -> str:
+        pairs = " ".join(
+            f"role{a.cmp_role}<-spare{a.spare}"
+            + (f"(exposed@g{a.exposed_since})" if a.exposed_since >= 0 else "")
+            for a in self.actions
+        )
+        return (
+            f"healed {len(self.actions)} mirror(s): {pairs} "
+            f"deficit {self.deficit_before}->{self.deficit_after}"
+        )

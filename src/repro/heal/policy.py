@@ -1,0 +1,65 @@
+"""Healing policies - when to convert spares back into replicas.
+
+FTHP-MPI makes restoring replication a first-class recovery step; the
+policy knob here decides *when* that step runs, because re-establishing a
+mirror is not free: it costs a 3-phase live clone plus a communicator
+re-derivation and step re-lower (the same compile the error handler
+already pays once per repair).
+
+- ``none``     - PartRePer baseline: replication erodes monotonically;
+                 spares are never consumed (Sec. VI shrink semantics).
+- ``eager``    - heal inside every recovery window that leaves a replica
+                 deficit: the re-lower is already being paid, so the extra
+                 cost is just the clone.
+- ``deferred(k)`` - batch heals: only convert spares once the replica
+                 deficit reaches ``k``, amortizing the clone+re-lower over
+                 several failures (a cluster that fails in bursts heals
+                 once per burst, not once per death).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Union
+
+
+@dataclass(frozen=True)
+class HealPolicy:
+    kind: str  # "none" | "eager" | "deferred"
+    threshold: int = 1
+
+    _SPEC = re.compile(r"^deferred[:(](\d+)\)?$")
+
+    def __post_init__(self):
+        assert self.kind in ("none", "eager", "deferred"), self.kind
+        assert self.threshold >= 1, self.threshold
+
+    @classmethod
+    def parse(cls, spec: Union[str, "HealPolicy"]) -> "HealPolicy":
+        """CLI syntax: ``none`` | ``eager`` | ``deferred:K`` / ``deferred(K)``."""
+        if isinstance(spec, HealPolicy):
+            return spec
+        s = (spec or "none").strip().lower()
+        if s in ("none", "eager"):
+            return cls(s)
+        m = cls._SPEC.match(s)
+        if m:
+            return cls("deferred", threshold=int(m.group(1)))
+        raise ValueError(
+            f"bad heal policy {spec!r}: expected none | eager | deferred:K"
+        )
+
+    @property
+    def enabled(self) -> bool:
+        return self.kind != "none"
+
+    def wants_heal(self, deficit: int) -> bool:
+        """Should a recovery window with ``deficit`` missing replicas heal?"""
+        if self.kind == "none" or deficit <= 0:
+            return False
+        if self.kind == "eager":
+            return True
+        return deficit >= self.threshold
+
+    def __str__(self) -> str:
+        return self.kind if self.kind != "deferred" else f"deferred:{self.threshold}"

@@ -32,6 +32,12 @@ def main() -> None:
                          "instead of cold-starting")
     ap.add_argument("--redundancy", type=int, default=2,
                     help="K-way shard redundancy of the snapshot store")
+    ap.add_argument("--heal", default="none",
+                    help="re-replication policy (repro.heal): none | eager | "
+                         "deferred:K")
+    ap.add_argument("--spares", type=int, default=0,
+                    help="warm-standby slices the heal plane converts back "
+                         "into replicas (their caches warm from the partner)")
     args = ap.parse_args()
 
     if os.environ.get("_REPRO_REEXEC") != "1":
@@ -52,6 +58,8 @@ def main() -> None:
         n_slices=args.slices,
         model_shards=args.model_shards,
         rdegree=args.rdegree,
+        spares=args.spares,
+        heal=args.heal,
         per_slice_batch=args.per_slice_batch,
         max_len=args.max_len,
         seed=args.seed,
@@ -60,7 +68,8 @@ def main() -> None:
     )
     print(
         f"serving {model.name}: {eng.world.topo.n_comp} cmp + "
-        f"{eng.world.topo.n_rep} rep slices, batch/slice={args.per_slice_batch}"
+        f"{eng.world.topo.n_rep} rep slices + {len(eng.world.spares)} spares, "
+        f"batch/slice={args.per_slice_batch}, heal={args.heal}"
     )
     t0 = time.time()
     toks = eng.decode(args.tokens, failures=failures)
@@ -72,8 +81,10 @@ def main() -> None:
         print("EVENT:", ev)
     for src in r.restored_from:
         print("RESTORED:", src)
+    for h in r.heals:
+        print("HEALED:", h)
     print(f"promotes={r.promotes} requeued={r.requeued_requests} "
-          f"failover={r.failover_seconds:.2f}s")
+          f"healed={r.healed_replicas} failover={r.failover_seconds:.2f}s")
     print("sample output ids:", toks[0, 0, :16].tolist())
 
 

@@ -37,6 +37,14 @@ def main() -> None:
     ap.add_argument("--redundancy", type=int, default=2,
                     help="K-way shard redundancy of the level-1 partner-memory "
                          "store (repro.store.PartnerMemoryStore)")
+    ap.add_argument("--heal", default="none",
+                    help="re-replication policy (repro.heal): none | eager | "
+                         "deferred:K - converts spares back into replicas of "
+                         "the most-exposed roles after failures")
+    ap.add_argument("--spares", type=int, default=0,
+                    help="warm-standby slices reserved outside the cmp/rep "
+                         "split; the heal plane consumes them to restore "
+                         "rdegree (and to backfill lost roles)")
     ap.add_argument("--smoke", action="store_true", default=True,
                     help="reduced same-family config (CPU container default)")
     ap.add_argument("--full", dest="smoke", action="store_false",
@@ -68,6 +76,8 @@ def main() -> None:
         n_slices=args.slices,
         model_shards=args.model_shards,
         rdegree=args.rdegree,
+        spares=args.spares,
+        heal=args.heal,
         collective_mode=args.mode,
         per_slice_batch=args.per_slice_batch,
         seq_len=args.seq_len,
@@ -81,7 +91,8 @@ def main() -> None:
     print(
         f"world: {sim.world.topo.n_comp} computational + {sim.world.topo.n_rep} "
         f"replica slices x {args.model_shards} model shards "
-        f"({model.name}, mode={args.mode})"
+        f"+ {len(sim.world.spares)} spares "
+        f"({model.name}, mode={args.mode}, heal={args.heal})"
     )
     print("recovery ladder:", " -> ".join(
         f"L{s.level}:{s.name}" for s in sim.ladder) or "(none)")
@@ -95,11 +106,15 @@ def main() -> None:
         print("EVENT:", ev)
     for src in report.restored_from:
         print("RESTORED:", src)
+    for h in report.heals:
+        print("HEALED:", h)
     print(
         f"done: {report.steps_completed} steps in {dt:.1f}s "
         f"(app {report.app_seconds:.1f}s, error-handler {report.handler_seconds:.1f}s) "
         f"failures={report.failures} promotes={report.promotes} "
-        f"restarts={report.restarts} replayed={report.replayed_steps}"
+        f"restarts={report.restarts} replayed={report.replayed_steps} "
+        f"healed={report.healed_replicas} exposure={report.exposure_steps} "
+        f"final_rdegree={sim.world.topo.rdegree:.2f}"
     )
 
 

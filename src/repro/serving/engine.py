@@ -71,6 +71,8 @@ class ServeEngine(ResilientProgram):
         n_slices: int,
         model_shards: int = 1,
         rdegree: float = 0.0,
+        spares: int = 0,
+        heal: str = "none",
         per_slice_batch: int = 2,
         max_len: int = 128,
         seed: int = 0,
@@ -103,6 +105,8 @@ class ServeEngine(ResilientProgram):
             n_slices=n_slices,
             model_shards=model_shards,
             rdegree=rdegree,
+            n_spares=spares,
+            heal=heal,
             stores=stores,
             checkpoint_every=snapshot_every,
             replay="none",
@@ -210,29 +214,50 @@ class ServeEngine(ResilientProgram):
         new mesh order draws each role's cache from the physical slice that
         now owns it; unreplicated losses without a restorable snapshot
         re-queue their requests. ``self.cache`` is either the survivors'
-        live cache or a just-restored snapshot - both in old-world layout."""
+        live cache or a just-restored snapshot - both in old-world layout.
+
+        Spares that entered the world this recovery have no old rows:
+
+        - a HEALED replica warms its mirrored KV cache from its partner's
+          rows (the partner's snapshot is exactly what a mirror holds);
+        - a BACKFILLED cmp role takes the restored snapshot's rows for the
+          old role it continues (the dead physical's rows are still present
+          in the old-layout snapshot).
+        """
         cache_host = jax.tree.map(np.asarray, self.cache)
         old_pos = old_world.mesh_position()
         new_order = new_world.roles_in_mesh_order()
+        # new cmp role -> old cmp role (identity unless a lost role forced
+        # renumbering); backfilled roles resolve through it
+        role_map = self.session.last_repair.get("role_map", {})
         b = self.per_slice_batch
+
+        def src_row(r: int) -> int:
+            phys = new_world.assignment[r]
+            if phys in old_pos:
+                return old_pos[phys]
+            topo = new_world.topo
+            if r >= topo.n_comp:  # healed replica: its partner's rows
+                return src_row(topo.replica_of(r))
+            # backfilled cmp: the restored snapshot's rows for the old role
+            return old_pos[old_world.assignment[role_map[r]]]
 
         def repack(kp, arr):
             axis = cache_batch_axis(path_str(kp), arr.ndim)
-            rows = []
-            for r in new_order:
-                src_row = old_pos[new_world.assignment[r]]
-                rows.append(
-                    np.take(arr, range(src_row * b, (src_row + 1) * b), axis=axis)
-                )
+            rows = [
+                np.take(arr, range(src_row(r) * b, (src_row(r) + 1) * b), axis=axis)
+                for r in new_order
+            ]
             return np.concatenate(rows, axis=axis)
 
         self.cache = jax.tree_util.tree_map_with_path(repack, cache_host)
         lost_roles = old_world.topo.n_comp - new_world.topo.n_comp
         self.report.requeued_requests += lost_roles * b
         # each surviving cmp role keeps ITS stream (the dead role's row is
-        # dropped wherever it sat, not always at the tail)
+        # dropped wherever it sat, not always at the tail; a backfilled
+        # role continues the old role's stream from the restored snapshot)
         keep = [
-            self._old_cmp_role(old_world, new_world.assignment[r])
+            self._old_cmp_role(old_world, new_world.assignment[r], role_map.get(r))
             for r in range(new_world.topo.n_comp)
         ]
         self._streams = [self._streams[r] for r in keep]
@@ -240,10 +265,13 @@ class ServeEngine(ResilientProgram):
             self._cur = np.stack([self._cur[r] for r in keep])
 
     @staticmethod
-    def _old_cmp_role(old_world, phys: int) -> int:
+    def _old_cmp_role(old_world, phys: int, backfilled_from=None) -> int:
         """The old-world cmp role whose token stream physical ``phys``
-        carried (a promoted replica carried its mirrored partner's)."""
+        carried (a promoted replica carried its mirrored partner's; a
+        backfilled spare carries the lost role's)."""
         role = old_world.role_of_physical(phys)
+        if role is None:
+            return backfilled_from
         if role >= old_world.topo.n_comp:
             role = old_world.topo.replica_of(role)
         return role

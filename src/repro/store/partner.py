@@ -52,21 +52,26 @@ class PartnerMemoryStore(StateStore):
     def submit_blob(self, step: int, blob: Dict[str, np.ndarray],
                     meta: Optional[Dict] = None) -> None:
         with self._lock:
-            # replay can resubmit a step after the world shrank: purge the
-            # old placement or stale shards from the larger ring would be
-            # gathered alongside the new ones
-            self._drop_locked(step)
-            live = list(self._live)
-            n = len(live)
-            k = min(self.redundancy, n)
-            shards: List[Dict[str, np.ndarray]] = [{} for _ in range(n)]
-            for i, path in enumerate(sorted(blob)):
-                shards[i % n][path] = blob[path]
-            self._manifest[step] = {"n_shards": n, "meta": dict(meta or {})}
-            for s, shard in enumerate(shards):
-                for j in range(k):
-                    self._mem[live[(s + j) % n]][(step, s)] = shard
+            self._place_locked(step, blob, dict(meta or {}))
             self._trim_locked(self.keep)
+
+    def _place_locked(self, step: int, blob: Dict[str, np.ndarray],
+                      meta: Dict) -> None:
+        """Shard ``blob`` over the CURRENT ring. Any prior placement of the
+        step is purged first: replay can resubmit a step after the world
+        shrank (and rebalance re-places after it grew) - stale shards from
+        the old ring must not be gathered alongside the new ones."""
+        self._drop_locked(step)
+        live = list(self._live)
+        n = len(live)
+        k = min(self.redundancy, n)
+        shards: List[Dict[str, np.ndarray]] = [{} for _ in range(n)]
+        for i, path in enumerate(sorted(blob)):
+            shards[i % n][path] = blob[path]
+        self._manifest[step] = {"n_shards": n, "meta": meta}
+        for s, shard in enumerate(shards):
+            for j in range(k):
+                self._mem[live[(s + j) % n]][(step, s)] = shard
 
     # ---- reads -------------------------------------------------------------
     def load(self, template: PyTree, step: Optional[int] = None) -> Optional[Restored]:
@@ -135,3 +140,33 @@ class PartnerMemoryStore(StateStore):
             for p in dead_physicals:
                 self._mem.pop(p, None)
             self._live = [p for p in self._live if p in self._mem]
+
+    # ---- heal plumbing (repro.heal pair re-registration) --------------------
+    def register_peers(self, peers: Iterable[int]) -> None:
+        """Admit peers into the ring (idempotent): a healed replica or a
+        backfilled spare brings fresh host memory that new shard placements
+        should use. Existing snapshots keep their recorded placement until
+        :meth:`rebalance` re-places them."""
+        with self._lock:
+            for p in peers:
+                p = int(p)
+                if p not in self._mem:
+                    self._mem[p] = {}
+            self._live = sorted(self._mem)
+
+    def rebalance(self) -> List[int]:
+        """Re-place every still-recoverable snapshot onto the CURRENT ring,
+        restoring the K-way redundancy that deaths eroded (ReStore's
+        re-distribution step after the ring changes). Snapshots that
+        already lost a shard entirely are left as-is (nothing to gather).
+        Returns the re-placed steps."""
+        with self._lock:
+            replaced = []
+            for step in sorted(self._manifest):
+                blob = self._gather_locked(step)
+                if blob is None:
+                    continue
+                meta = self._manifest[step]["meta"]
+                self._place_locked(step, blob, meta)
+                replaced.append(step)
+            return replaced

@@ -44,6 +44,39 @@ def test_failure_schedule_parse():
     assert not FailureSchedule.parse("")
 
 
+def test_failure_schedule_parse_empty_and_blank_items():
+    """Empty specs and blank items (trailing / doubled commas, pure
+    whitespace between commas) are no failures, not errors."""
+    assert not FailureSchedule.parse("")
+    assert not FailureSchedule.parse("   ")
+    sched = FailureSchedule.parse("5:0,,9:1,")
+    assert sched.take(5) == [0] and sched.take(9) == [1]
+
+
+def test_failure_schedule_parse_whitespace_tolerant():
+    sched = FailureSchedule.parse(" 5:0 , 9 : 1 ")
+    assert sched.take(5) == [0]
+    assert sched.take(9) == [1]
+
+
+def test_failure_schedule_duplicate_steps_merge_and_victims_dedupe():
+    """Duplicate step entries merge into one kill list; a victim repeated
+    within a step is ONE failure (repeats used to double-count in
+    FTReport.failures)."""
+    sched = FailureSchedule.parse("3:0,3:1,3:0")
+    assert sched.take(3) == [0, 1]
+    # same dedupe through the dict constructor
+    sched2 = FailureSchedule({4: [2, 2, 2, 5]})
+    assert sched2.take(4) == [2, 5]
+    assert sched2.pending() == 0
+
+
+def test_failure_schedule_parse_rejects_malformed_items():
+    for bad in ("5", "5:", ":1", "a:1", "5:b", "5:0:1"):
+        with pytest.raises(ValueError, match="bad failure injection"):
+            FailureSchedule.parse(bad)
+
+
 # ---------------------------------------------------------------------------
 # unified report adapters (host-only)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,552 @@
+"""The repro.heal plane - elastic re-replication after failures.
+
+Host-only units: spare-pool topology algebra (spare-aware repair, the
+``heal`` transition, most-exposed-first ordering, target capping, spare
+backfill), the HealPolicy grammar, Healer execution (3-phase clone +
+partner pair re-registration + shard re-placement), and the
+property-based invariant suite over arbitrary failure/heal sequences.
+
+Subprocess integration (slow): the fault-scenario matrix - a grid of
+(rdegree, heal policy, failure schedule incl. back-to-back and
+mirrored-pair kills, store stack) cells each asserting the final state is
+bit-identical to the failure-free run - plus the flagship post-heal
+mirrored-pair kill and the serving engine warming a healed replica's KV
+cache from its partner.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import run_subprocess
+
+from repro.core.replication import ReplicaTopology, WorldState
+from repro.heal import HealPolicy, Healer
+from repro.store import PartnerMemoryStore
+
+
+# ---------------------------------------------------------------------------
+# HealPolicy grammar
+# ---------------------------------------------------------------------------
+
+
+def test_policy_parse_grammar():
+    assert HealPolicy.parse("none") == HealPolicy("none")
+    assert HealPolicy.parse("eager").enabled
+    assert not HealPolicy.parse("none").enabled
+    assert HealPolicy.parse("deferred:3") == HealPolicy("deferred", 3)
+    assert HealPolicy.parse("deferred(2)") == HealPolicy("deferred", 2)
+    assert HealPolicy.parse(" Eager ") == HealPolicy("eager")
+    assert HealPolicy.parse(HealPolicy("eager")) == HealPolicy("eager")
+    assert HealPolicy.parse("") == HealPolicy("none")  # default
+    with pytest.raises(ValueError):
+        HealPolicy.parse("sometimes")
+    with pytest.raises(ValueError):
+        HealPolicy.parse("deferred:x")
+
+
+def test_policy_wants_heal():
+    assert not HealPolicy("none").wants_heal(5)
+    assert HealPolicy("eager").wants_heal(1)
+    assert not HealPolicy("eager").wants_heal(0)
+    d2 = HealPolicy("deferred", 2)
+    assert not d2.wants_heal(1) and d2.wants_heal(2) and d2.wants_heal(3)
+
+
+# ---------------------------------------------------------------------------
+# spare-pool topology algebra
+# ---------------------------------------------------------------------------
+
+
+def test_create_with_spares():
+    w = WorldState.create(6, 1.0, n_spares=2)
+    assert w.topo.n_comp == 2 and w.topo.n_rep == 2
+    assert w.spares == (4, 5) and w.target_n_rep == 2
+    assert w.replica_deficit() == 0
+    w.validate()
+    # spares sit OUTSIDE the shrunk mesh until healed
+    assert w.live_physicals() == [0, 1, 2, 3]
+
+
+def test_replica_death_exposes_then_eager_heal_restores():
+    w = WorldState.create(6, 1.0, n_spares=2)
+    w1, rep = w.repair([3])  # replica of cmp role 1
+    assert rep["dropped_reps"] == [1] and not rep["promoted"]
+    assert w1.replica_deficit() == 1 and w1.exposed == ((1, 1),)
+    healed, plan = w1.heal()
+    healed.validate()
+    assert [(a.cmp_role, a.spare) for a in plan.actions] == [(1, 4)]
+    assert plan.actions[0].exposed_since == 1
+    assert healed.topo.replica_map == (0, 1) and healed.replica_deficit() == 0
+    assert healed.spares == (5,) and healed.exposed == ()
+    # heal does NOT bump the generation (it runs inside the repair window)
+    assert healed.generation == w1.generation
+    # the healed groups still partition the live mesh
+    flat = sorted(
+        i for g in healed.physical_groups(healed.topo.comm_cmp_groups()) for i in g
+    )
+    assert flat == list(range(healed.n_live))
+
+
+def test_promote_consumes_mirror_then_heal_re_mirrors():
+    w = WorldState.create(6, 1.0, n_spares=2)
+    w1, rep = w.repair([0])  # cmp role 0 dies, replica promoted
+    assert rep["promoted"] == [(0, 2)]
+    assert w1.unmirrored_cmp_roles() == [0]
+    healed, plan = w1.heal()
+    assert [(a.cmp_role, a.spare) for a in plan.actions] == [(0, 4)]
+    assert healed.topo.replica_map == (0, 1)
+    assert healed.assignment[healed.topo.partner_of(0)] == 4
+    healed.validate()
+
+
+def test_heal_most_exposed_first_and_stable():
+    """Roles that lost mirrors earliest heal first; ties break by role id;
+    the order is stable across repeated failures with no spare available."""
+    w = WorldState.create(10, 1.0, n_spares=2)  # 4 cmp, 4 rep, 2 spares
+    w1, _ = w.repair([w.assignment[w.topo.n_comp + 2]])  # rep of cmp 2 @g1
+    w2, _ = w1.repair([w1.assignment[w1.topo.n_comp]])  # rep of cmp 0 @g2
+    assert w2.unmirrored_cmp_roles() == [2, 0]  # exposure age, not role id
+    healed, plan = w2.heal(max_new=1)
+    assert plan.actions[0].cmp_role == 2  # most-exposed wins the only slot
+    assert healed.unmirrored_cmp_roles() == [0]
+    # stability: a LATER failure queues behind the older exposure
+    w3, _ = healed.repair([healed.assignment[healed.topo.n_comp + 1]])
+    assert w3.unmirrored_cmp_roles() == [0, 2]  # role 2 re-exposed @g3
+
+
+def test_heal_tie_breaks_by_role_id():
+    w = WorldState.create(10, 1.0, n_spares=1)  # 5 cmp, 4 rep: role 4 bare
+    # both replicas of cmp 1 and cmp 3 die in the SAME repair (same gen)
+    reps = {w.topo.replica_map[j]: w.assignment[w.topo.n_comp + j]
+            for j in range(w.topo.n_rep)}
+    w1, _ = w.repair([reps[3], reps[1]])
+    # same gen -> role id order; the never-mirrored-by-design role trails
+    assert w1.unmirrored_cmp_roles() == [1, 3, 4]
+    healed, plan = w1.heal()
+    assert [a.cmp_role for a in plan.actions] == [1]  # one spare only
+
+
+def test_heal_caps_at_target_rdegree():
+    """A 0.5-split world never heals past its achieved split ratio, even
+    with spares to burn; never-mirrored-by-design roles are not eroded."""
+    w = WorldState.create(8, 0.5, n_spares=2)  # 4 cmp, 2 rep (.5 achieved)
+    assert w.target_n_rep == 2
+    same, plan = w.heal()
+    assert not plan and same is w  # deficit 0: spares stay spares
+    # lose a replica -> deficit 1 -> exactly ONE spare converts
+    w1, _ = w.repair([w.assignment[w.topo.n_comp]])
+    healed, plan = w1.heal()
+    assert len(plan.actions) == 1 and healed.topo.n_rep == 2
+    assert healed.replica_deficit() == 0 and len(healed.spares) == 1
+    healed.validate()
+
+
+def test_backfill_preserves_role_ids_and_width():
+    """A lost computational role backfills from a spare: role ids and the
+    computational width survive, so a restore + replay reproduces the
+    failure-free trajectory (no elastic shrink)."""
+    w = WorldState.create(5, 0.0, n_spares=2)  # 3 cmp, spares {3, 4}
+    w1, rep = w.repair([1])
+    assert rep["backfilled"] == [(1, 3)] and not rep["lost_cmp"]
+    assert rep["role_map"] == {0: 0, 1: 1, 2: 2}  # identity: no renumbering
+    assert w1.topo.n_comp == 3 and w1.assignment == (0, 3, 2)
+    assert w1.spares == (4,)
+    w1.validate()
+
+
+def test_backfill_disabled_without_spares_or_flag():
+    w = WorldState.create(5, 0.0, n_spares=2)
+    w1, rep = w.repair([1], use_spares=False)
+    assert rep["lost_cmp"] == [1] and not rep["backfilled"]
+    assert w1.topo.n_comp == 2 and w1.spares == (3, 4)
+    no_spares = WorldState.create(3, 0.0)
+    w2, rep2 = no_spares.repair([1])
+    assert rep2["lost_cmp"] == [1] and rep2["role_map"] == {0: 0, 1: 2}
+
+
+def test_dead_spare_is_removed_from_pool():
+    w = WorldState.create(6, 1.0, n_spares=2)
+    w1, rep = w.repair([5])
+    assert rep["dead_spares"] == [5] and w1.spares == (4,)
+    assert w1.topo == w.topo  # no role was touched
+    w1.validate()
+
+
+def test_heal_exhausts_spares_gracefully():
+    w = WorldState.create(8, 1.0, n_spares=1)  # 4 cmp, 3 rep, spare {7}
+    w1, _ = w.repair([4])  # rep of cmp 0 dies
+    healed, plan = w1.heal()
+    assert len(plan.actions) == 1 and not healed.spares  # pool drained
+    w2, _ = healed.repair([5])  # rep of cmp 1 dies: nothing left to heal
+    again, plan2 = w2.heal()
+    assert not plan2 and again is w2  # pool empty: no-op, no crash
+    assert again.replica_deficit() == 1 and plan2.deficit_after == 1
+
+
+# ---------------------------------------------------------------------------
+# property-based: repair . heal invariants under arbitrary sequences
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.integers(3, 20),
+    r=st.sampled_from([0.0, 0.5, 1.0]),
+    n_spares=st.integers(0, 3),
+    kills=st.lists(st.integers(0, 19), min_size=1, max_size=8),
+    heal_each=st.booleans(),
+)
+def test_repair_heal_invariants(n, r, n_spares, kills, heal_each):
+    """After ANY interleaving of failures and heals: role<->physical stays
+    a bijection disjoint from spares and dead, every replica_map target is
+    a live cmp role, mirror groups are disjoint partitions, and healing
+    never pushes n_rep above the configured target."""
+    n_spares = min(n_spares, n - 2)
+    world = WorldState.create(n, r, n_spares=n_spares)
+    target = world.target_n_rep
+    for k in kills:
+        victim = k % world.n_physical
+        world, rep = world.repair([victim])
+        if world.topo.n_comp == 0:
+            return  # whole computational capacity lost - nothing to check
+        world.validate()
+        pre_rep = world.topo.n_rep
+        if heal_each:
+            world, plan = world.heal()
+            world.validate()
+            # healing only ever closes the deficit toward target
+            assert world.topo.n_rep <= max(pre_rep, world.target_n_rep)
+            assert world.topo.n_rep >= pre_rep
+            assert world.generation == plan.generation
+        # bijection + disjointness (validate asserts too; be explicit)
+        assert len(set(world.assignment)) == len(world.assignment)
+        assert not set(world.assignment) & set(world.spares)
+        assert not set(world.assignment) & set(world.dead)
+        # mirror groups disjoint and partition the live mesh
+        groups = world.physical_groups(world.topo.comm_cmp_groups())
+        flat = sorted(i for g in groups for i in g)
+        assert flat == list(range(world.n_live))
+        pairs = world.topo.pair_groups()
+        seen = [i for g in pairs for i in g]
+        assert len(seen) == len(set(seen)), "mirror groups overlap"
+        # every replica target is a live cmp role
+        assert all(0 <= c < world.topo.n_comp for c in world.topo.replica_map)
+        # exposure bookkeeping never references mirrored or out-of-range roles
+        mirrored = set(world.topo.replica_map)
+        assert all(
+            0 <= c < world.topo.n_comp and c not in mirrored
+            for c, _ in world.exposed
+        )
+
+
+# ---------------------------------------------------------------------------
+# Healer execution: clone + pair re-registration + shard re-placement
+# ---------------------------------------------------------------------------
+
+
+def _state(v: float):
+    return {"params": {"w": np.full((8, 8), v)}, "opt": {"mu": np.full((4,), v / 2)}}
+
+
+def test_healer_executes_clone_and_reregisters_pairs():
+    w = WorldState.create(6, 1.0, n_spares=2)
+    w1, _ = w.repair([3])
+    # ring deliberately excludes the spares: re-registration must admit them
+    ps = PartnerMemoryStore(range(4), redundancy=2)
+    ps.submit(2, _state(2.0), {"step": 2})
+    ps.on_failure([3])
+    healer = Healer("eager", bit_exact=True)
+    healed, plan = healer.maybe_heal(
+        w1, snapshot=(_state(7.0), {"step": 3}), stores=[ps], step=3
+    )
+    assert plan and healed.topo.n_rep == 2
+    # 3-phase clone executed and verified per phase
+    assert plan.transfer is not None and plan.transfer.verified
+    assert plan.transfer.bit_exact
+    # the new pair's host joined the ring and shards were re-placed
+    assert 4 in ps._live
+    assert plan.replaced_steps == [2]
+    assert ps.recoverable(2)
+
+
+def test_healer_respects_policy_and_empty_pool():
+    w = WorldState.create(6, 1.0, n_spares=2)
+    w1, _ = w.repair([3])
+    none = Healer("none")
+    assert none.maybe_heal(w1) == (w1, None)
+    deferred = Healer("deferred:2")
+    assert deferred.maybe_heal(w1) == (w1, None)  # deficit 1 < 2
+    w2, _ = w1.repair([2])  # second replica dies -> deficit 2
+    healed, plan = deferred.maybe_heal(w2)
+    assert plan and len(plan.actions) == 2  # batched heal
+    assert healed.replica_deficit() == 0
+
+
+def test_partner_register_peers_idempotent_and_rebalance_skips_torn():
+    ps = PartnerMemoryStore(range(4), redundancy=3)
+    ps.submit(1, _state(1.0))
+    ps.on_failure([0, 1, 2])  # shard 0 lived on 0/1/2 only: step 1 torn
+    ps.submit(2, _state(2.0))  # placed on the single-survivor ring {3}
+    ps.register_peers([4, 5])
+    ps.register_peers([4])  # idempotent
+    assert ps._live == [3, 4, 5]
+    replaced = ps.rebalance()
+    assert replaced == [2]  # torn step 1 has nothing to gather: skipped
+    # step 2's shards were re-spread K=3 over {3,4,5}: losing its ORIGINAL
+    # sole holder no longer loses the snapshot
+    ps.on_failure([3])
+    assert ps.recoverable(2)
+    assert not ps.recoverable(1)
+
+
+# ---------------------------------------------------------------------------
+# fault-scenario matrix (slow): every cell bit-identical to failure-free
+# ---------------------------------------------------------------------------
+
+_MATRIX_CHILD = """
+        import jax, numpy as np, tempfile
+        from repro.configs.registry import smoke_config
+        from repro.core.simulator import SimCluster
+        from repro.store import (DurableStore, LiveCloneStore,
+                                 PartnerMemoryStore, RecoveryLadder)
+
+        CFG = smoke_config("qwen2.5-3b")
+        STEPS = 6
+
+        def stack(spec, n):
+            if spec == "none":
+                return None
+            levels = []
+            if "L0" in spec:
+                levels.append(LiveCloneStore(host=SAFE_HOST))
+            if "L1" in spec:
+                levels.append(PartnerMemoryStore(range(n), redundancy=2))
+            if "L2" in spec:
+                levels.append(DurableStore(tempfile.mkdtemp()))
+            return RecoveryLadder(levels)
+
+        def cluster(heal, stores):
+            return SimCluster(
+                CFG, n_slices=N_SLICES, model_shards=1, rdegree=RDEGREE,
+                spares=SPARES, heal=heal, seq_len=32, stores=stores,
+                checkpoint_every=0 if stores is None else 2,
+            )
+
+        ref = cluster("eager", None)
+        ref_rep = ref.run(STEPS)
+        ref_leaves = jax.tree.leaves(ref.params_replica())
+
+        for heal, schedule, spec, expect in CELLS:
+            sim = cluster(heal, stack(spec, N_SLICES))
+            rep = sim.run(STEPS, failures=schedule)
+            diff = max(
+                float(np.max(np.abs(a - b)))
+                for a, b in zip(ref_leaves, jax.tree.leaves(sim.params_replica()))
+            )
+            cell = f"cell(heal={heal}, schedule={schedule}, stores={spec})"
+            if expect == "bitwise":
+                assert diff == 0.0, f"{cell}: diverged by {diff}"
+                # replay re-runs steps (losses get replayed entries); the
+                # FINAL loss and the full parameter state must match bitwise
+                assert rep.losses[-1] == ref_rep.losses[-1], f"{cell}: loss"
+                assert sim.world.topo.n_comp == ref.world.topo.n_comp, cell
+            else:  # the un-healed decay contrast cell: the world shrank
+                # (exposure_steps tracks REPLICA deficit, which is 0 by
+                # definition at rdegree=0 - width loss is the decay there)
+                assert sim.world.topo.n_comp < ref.world.topo.n_comp, cell
+                assert rep.restarts >= 1, cell
+            print("CELL-OK", cell, f"heals={len(rep.heals)}",
+                  f"restored={rep.restored_from}")
+        print("MATRIX-OK")
+"""
+
+
+def _matrix_test(preamble: str):
+    out = run_subprocess(preamble + _MATRIX_CHILD)
+    assert "MATRIX-OK" in out
+    return out
+
+
+@pytest.mark.slow
+def test_fault_matrix_rdegree_one():
+    """rdegree=1.0 (2 cmp + 2 rep + 2 spares): replica kill + heal,
+    back-to-back kill of a healed pair's cmp, simultaneous mirrored-pair
+    kill (backfill + restore), deferred batching, and the heal=none
+    promote baseline - all bit-identical to failure-free."""
+    out = _matrix_test(
+        """
+        N_SLICES, SPARES, RDEGREE, SAFE_HOST = 6, 2, 1.0, 0
+        CELLS = [
+            ("eager", {2: [3]}, "L1", "bitwise"),
+            ("eager", {2: [3], 4: [1]}, "L1", "bitwise"),
+            ("eager", {3: [1, 3]}, "L1+L2", "bitwise"),
+            ("deferred:2", {2: [2], 3: [3]}, "L1", "bitwise"),
+            ("none", {2: [0]}, "L1", "bitwise"),
+        ]
+        """
+    )
+    assert out.count("CELL-OK") == 5
+
+
+@pytest.mark.slow
+def test_fault_matrix_rdegree_half():
+    """rdegree=0.5 (2 cmp + 1 rep + 1 spare): heal of the only mirror,
+    unmirrored-cmp backfill through a partner restore, mirrored-pair kill
+    restoring through the L0 live-clone rung, and the promote baseline.
+
+    Matrix worlds use n_comp=2: two-summand gradient reductions are
+    order-insensitive, so bit-identity is well-defined across the mesh
+    permutation a repair induces. Wider reductions re-associate fp sums
+    when roles land on different devices - true of real meshes too, and
+    orthogonal to the heal plane."""
+    out = _matrix_test(
+        """
+        N_SLICES, SPARES, RDEGREE, SAFE_HOST = 4, 1, 0.5, 1
+        CELLS = [
+            ("eager", {2: [2]}, "L1", "bitwise"),
+            ("eager", {3: [1]}, "L1", "bitwise"),
+            ("eager", {3: [0, 2]}, "L0+L1", "bitwise"),
+            ("none", {2: [0]}, "L1", "bitwise"),
+        ]
+        """
+    )
+    assert out.count("CELL-OK") == 4
+
+
+@pytest.mark.slow
+def test_fault_matrix_rdegree_zero():
+    """rdegree=0 (2 cmp + 2 spares): every failure is unmaskable - spare
+    backfill + ladder restore (or fresh-init full replay) keeps the
+    trajectory bit-identical; without healing the world decays (the
+    contrast cell documents the erosion the heal plane removes)."""
+    out = _matrix_test(
+        """
+        N_SLICES, SPARES, RDEGREE, SAFE_HOST = 4, 2, 0.0, 0
+        CELLS = [
+            ("eager", {3: [1]}, "L1", "bitwise"),
+            ("eager", {2: [1]}, "none", "bitwise"),
+            ("eager", {2: [0], 4: [1]}, "L1+L2", "bitwise"),
+            ("none", {2: [1]}, "L1", "decay"),
+        ]
+        """
+    )
+    assert out.count("CELL-OK") == 4
+
+
+# ---------------------------------------------------------------------------
+# flagship (slow): post-heal mirrored-pair kill survives re-replication
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_post_heal_pair_kill_survives_via_reestablished_replica():
+    """Acceptance scenario: a replica dies and is re-established from a
+    spare; then the ORIGINAL pair's other member dies. With healing the
+    re-established replica masks it (promote, no restart) and the final
+    state is bit-identical; a simultaneous kill of the HEALED pair
+    backfills + restores, still bit-identical. Without healing the same
+    schedule decays to a shrunk, checkpoint-only world."""
+    out = run_subprocess(
+        """
+        import jax, numpy as np
+        from repro.configs.registry import smoke_config
+        from repro.core.simulator import SimCluster
+
+        cfg = smoke_config("qwen2.5-3b")
+        def mk(heal):
+            return SimCluster(cfg, n_slices=6, model_shards=1, rdegree=1.0,
+                              spares=2, heal=heal, seq_len=32,
+                              checkpoint_every=2)
+        def leaves(s):
+            return jax.tree.leaves(s.params_replica())
+
+        ref = mk("eager"); ref_rep = ref.run(6)
+
+        # replica of cmp1 (phys 3) dies @2 -> healed from spare 4;
+        # cmp1 itself (phys 1) dies @4 -> MASKED by the re-established replica
+        a = mk("eager"); ra = a.run(6, failures={2: [3], 4: [1]})
+        assert ra.healed_replicas == 2 and ra.promotes == 1, ra.heals
+        assert ra.restarts == 0, "the healed replica must mask the kill"
+        assert ra.exposure_steps == 0  # never ran below target
+        diff = max(float(np.max(np.abs(x - y)))
+                   for x, y in zip(leaves(ref), leaves(a)))
+        assert diff == 0.0 and ref_rep.losses == ra.losses
+
+        # the HEALED pair dies simultaneously @4 -> spare 5 backfills the
+        # role + partner-memory restore: width preserved, still bitwise
+        b = mk("eager"); rb = b.run(6, failures={2: [3], 4: [1, 4]})
+        assert rb.restarts == 1 and b.world.topo.n_comp == 2
+        assert rb.restored_from and rb.restored_from[0].startswith("L1:")
+        diffb = max(float(np.max(np.abs(x - y)))
+                    for x, y in zip(leaves(ref), leaves(b)))
+        assert diffb == 0.0 and rb.losses[-1] == ref_rep.losses[-1]
+
+        # baseline: same schedule, heal=none -> monotone decay
+        c = mk("none"); rc = c.run(6, failures={2: [3], 4: [1]})
+        assert rc.restarts == 1 and c.world.topo.n_comp == 1
+        assert rc.exposure_steps > 0
+        print("POST-HEAL-PAIR-OK")
+        """
+    )
+    assert "POST-HEAL-PAIR-OK" in out
+
+
+@pytest.mark.slow
+def test_serving_healed_replica_warms_cache_from_partner():
+    """A healed replica joins mid-decode with its KV cache warmed from its
+    partner's rows; when the partner later dies, the promoted healed
+    replica continues the stream bit-identically (a cold cache would
+    diverge instantly)."""
+    out = run_subprocess(
+        """
+        import numpy as np
+        from repro.configs.registry import smoke_config
+        from repro.serving.engine import ServeEngine
+
+        cfg = smoke_config("qwen2.5-3b")
+        def mk(heal="eager"):
+            return ServeEngine(cfg, n_slices=6, model_shards=1, rdegree=1.0,
+                               spares=2, heal=heal, max_len=64)
+
+        ta = mk().decode(12)
+        b = mk()
+        # rep of cmp0 (phys 2) dies @4 -> healed from spare 4 (cache warmed
+        # from cmp0's rows); cmp0 (phys 0) dies @8 -> promote the healed one
+        tb = b.decode(12, failures={4: [2], 8: [0]})
+        r = b.report
+        assert r.healed_replicas >= 1 and r.promotes == 1, r.heals
+        assert r.restarts == 0 and r.requeued_requests == 0
+        assert np.array_equal(ta, tb), "healed replica's cache was cold"
+        print("SERVE-HEAL-OK")
+        """
+    )
+    assert "SERVE-HEAL-OK" in out
+
+
+@pytest.mark.slow
+def test_serving_backfill_keeps_all_streams():
+    """rdegree=0 + spares + snapshots: an unmirrored slice loss used to
+    drop its request streams; now the spare backfills the role and the
+    re-decode from the snapshot keeps EVERY stream, bit-identical."""
+    out = run_subprocess(
+        """
+        import numpy as np
+        from repro.configs.registry import smoke_config
+        from repro.serving.engine import ServeEngine
+
+        cfg = smoke_config("qwen2.5-3b")
+        a = ServeEngine(cfg, n_slices=5, model_shards=1, rdegree=0.0,
+                        spares=1, max_len=64)
+        ta = a.decode(12)
+        b = ServeEngine(cfg, n_slices=5, model_shards=1, rdegree=0.0,
+                        spares=1, heal="eager", max_len=64, snapshot_every=4)
+        tb = b.decode(12, failures={9: [2]})
+        r = b.report
+        assert r.restarts == 1 and r.restored_from, r.restored_from
+        assert r.requeued_requests == 0, "backfill must keep the stream"
+        assert tb.shape == ta.shape  # all 4 streams survive
+        assert np.array_equal(tb, ta), "re-decode diverged"
+        print("SERVE-BACKFILL-OK")
+        """
+    )
+    assert "SERVE-BACKFILL-OK" in out

@@ -100,3 +100,32 @@ def test_paper_rdegree_split(n, r):
     n_comp, n_rep = split_comp_rep(n, r)
     assert n_comp + n_rep == n
     assert abs(n_rep / n_comp - r) < 0.25  # integer rounding tolerance
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 7, 16])
+@pytest.mark.parametrize("r", [1.5, 2.0, 10.0, 1e9])
+def test_split_comp_rep_rdegree_above_one_caps_at_dual(n, r):
+    """rdegree > 1 cannot be realized (at most one replica per cmp role):
+    the split caps at dual redundancy and still covers the whole pool."""
+    n_comp, n_rep = split_comp_rep(n, r)
+    assert n_comp + n_rep == n
+    assert 0 <= n_rep <= n_comp  # never more replicas than cmp roles
+    topo = ReplicaTopology.create(n, r)
+    topo.validate()
+    assert topo.n_slices == n
+
+
+@pytest.mark.parametrize("r", [0.0, 0.5, 1.0, 3.0])
+def test_split_comp_rep_single_slice(r):
+    """n_slices=1 always yields one unreplicated computational slice (a
+    replica would leave zero compute)."""
+    assert split_comp_rep(1, r) == (1, 0)
+    topo = ReplicaTopology.create(1, r)
+    topo.validate()
+    assert topo.n_comp == 1 and topo.n_rep == 0
+    assert topo.comm_cmp_groups() == [[0]]
+
+
+def test_split_comp_rep_negative_and_zero_rdegree():
+    assert split_comp_rep(8, 0.0) == (8, 0)
+    assert split_comp_rep(8, -1.0) == (8, 0)  # clamped, not an error
