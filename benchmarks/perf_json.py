@@ -1,0 +1,39 @@
+"""BENCH_perf.json - the repo-root perf-trajectory file.
+
+Every benchmark suite merges its section here (atomic replace), so the
+failure-free overhead per rdegree and the submit/restore/heal timings are
+tracked across PRs: CI uploads the file as an artifact and a reviewer can
+diff two runs without re-parsing CSV stdout.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+PATH = os.path.join(ROOT, "BENCH_perf.json")
+
+
+def update_perf_json(section: str, payload: Any, path: str = PATH) -> str:
+    """Merge ``payload`` under ``suites[section]`` (atomic rename)."""
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            data = {}
+    data.setdefault("suites", {})[section] = payload
+    data["updated"] = time.strftime("%Y-%m-%dT%H:%M:%S")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+    return path
+
+
+def rows_payload(rows) -> list:
+    """The common ``(name, us, derived)`` row triple as JSON records."""
+    return [{"name": n, "us": round(us, 1), "derived": d} for n, us, d in rows]

@@ -1,10 +1,18 @@
 """Benchmark harness - one suite per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV:
-- failure_free : Fig. 8  (replication overheads, NAS mini-apps + LM)
+Prints ``name,us_per_call,derived`` CSV and merges every suite's raw
+results into the repo-root ``BENCH_perf.json`` (the cross-PR perf
+trajectory: failure-free overhead per rdegree, submit/restore/heal
+timings, xfer contention/delta stats):
+
+- failure_free : Fig. 8  (replication overheads, NAS mini-apps + LM,
+                 plus the snapshot-path overhead at rdegree=0.5)
 - mtti         : Fig. 9b (MTTI vs replication degree)
 - failures     : Fig. 9a (overheads under Weibull failures)
-- recovery     : Sec. I/VI claims (promote vs restart vs 3-phase clone)
+- recovery     : Sec. I/VI claims (promote vs restart vs 3-phase clone,
+                 whole-blob vs striped+pipelined L1 submit, heal window)
+- xfer         : repro.xfer microbenchmarks (lock contention, pipelined
+                 submit latency, delta bytes moved)
 - roofline     : dry-run derived three-term roofline per (arch x shape)
 
 ``python -m benchmarks.run [suite ...]`` - default: all.
@@ -14,28 +22,42 @@ from __future__ import annotations
 import sys
 import traceback
 
+from benchmarks.perf_json import rows_payload, update_perf_json
+
 
 def main() -> None:
-    wanted = sys.argv[1:] or ["mtti", "recovery", "failure_free", "failures", "roofline"]
+    wanted = sys.argv[1:] or [
+        "mtti", "recovery", "xfer", "failure_free", "failures", "roofline"
+    ]
     failures = 0
     for suite in wanted:
         try:
+            results = None
             if suite == "failure_free":
                 from benchmarks import failure_free as m
 
-                rows = m.rows(m.run(reps=3))
+                results = m.run(reps=3)
+                rows = m.rows(results)
             elif suite == "mtti":
                 from benchmarks import mtti_bench as m
 
-                rows = m.rows(m.run(trials=400))
+                results = m.run(trials=400)
+                rows = m.rows(results)
             elif suite == "failures":
                 from benchmarks import failures_bench as m
 
-                rows = m.rows(m.run())
+                results = m.run()
+                rows = m.rows(results)
             elif suite == "recovery":
                 from benchmarks import recovery_bench as m
 
-                rows = m.rows(m.run())
+                results = m.run()
+                rows = m.rows(results)
+            elif suite == "xfer":
+                from benchmarks import xfer_bench as m
+
+                results = m.run()
+                rows = m.rows(results)
             elif suite == "roofline":
                 from benchmarks import roofline as m
 
@@ -44,6 +66,9 @@ def main() -> None:
                 print(f"unknown suite {suite}", file=sys.stderr)
                 failures += 1
                 continue
+            update_perf_json(
+                suite, results if results is not None else rows_payload(rows)
+            )
             for name, us, derived in rows:
                 print(f"{name},{us:.0f},{derived}")
         except Exception as e:  # noqa: BLE001

@@ -41,6 +41,7 @@ from repro.models import model as M
 from repro.optim.adamw import adamw
 from repro.optim.schedules import constant
 from repro.store import DurableStore, PartnerMemoryStore, RecoveryLadder
+from repro.xfer import TransferPlane
 
 
 @dataclass
@@ -71,6 +72,9 @@ class SimCluster(ResilientProgram):
         stores: Optional[RecoveryLadder] = None,
         impl: str = "chunked",
         microbatches: int = 1,
+        delta: str = "none",
+        chunk_bytes: int = 0,
+        pipeline: bool = True,
     ):
         self.model_cfg = model_cfg
         self.repl = ReplicationConfig(rdegree=rdegree, collective_mode=collective_mode)
@@ -87,14 +91,27 @@ class SimCluster(ResilientProgram):
         self.step_fn = None
 
         # recovery-state plane: level-1 K-way partner memory over the slice
-        # hosts, plus level-2 durable when a directory is given
+        # hosts, plus level-2 durable when a directory is given; all levels
+        # share one repro.xfer transfer plane (striping / pipelined async
+        # submit / optional verified-exact delta encoding)
+        if stores is not None:
+            assert delta == "none" and not chunk_bytes and pipeline, (
+                "delta/chunk_bytes/pipeline configure the default ladder's "
+                "TransferPlane; an explicit stores= ladder carries its own - "
+                "pass RecoveryLadder(..., xfer=TransferPlane(...)) instead"
+            )
         if stores is None:
+            xfer = TransferPlane(
+                **({"chunk_bytes": chunk_bytes} if chunk_bytes else {}),
+                delta=delta,
+                pipeline=pipeline,
+            )
             levels = [
                 PartnerMemoryStore(range(n_slices), redundancy=partner_redundancy)
             ]
             if checkpoint_dir:
                 levels.append(DurableStore(checkpoint_dir))
-            stores = RecoveryLadder(levels)
+            stores = RecoveryLadder(levels, xfer=xfer)
 
         # the session owns the entire ULFM lifecycle; FTSession.__init__
         # builds the base mesh and calls build_step for the initial lowering

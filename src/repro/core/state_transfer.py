@@ -16,11 +16,15 @@ copy, but the 3-phase ordering and integrity discipline carry over:
 
 :func:`clone_pytree` is the generic engine (one phase per top-level key);
 :func:`clone_state` keeps the paper's named 3-phase layout on top of it.
-Verification is per phase: a cheap abs-sum checksum by default, optionally
-a per-leaf bit-exact comparison (``bit_exact=True``) - the checksum can
-pass on a corrupted clone (e.g. two leaves swapped, or compensating sign
-flips), so restore paths that must be provably faithful opt into the
-exact check. Used for dynamic replica (re)birth via
+Verification is per phase: by default per-chunk [abs-sum, sum] digests
+computed on-device in ONE fused pass through the Pallas checksum kernel
+(``repro.xfer.digest`` - the old implementation looped a host-side
+Python checksum over every leaf), optionally a per-leaf bit-exact
+comparison (``bit_exact=True``). The digest catches chunk-local and
+sign-compensating corruption, but remains blind to permutations that
+preserve each chunk's value multiset (e.g. two identical-sum leaves
+swapped within one chunk) - restore paths that must be provably faithful
+opt into the exact check. Used for dynamic replica (re)birth via
 :class:`repro.store.liveclone.LiveCloneStore` and by the recovery
 benchmark to price promote vs restart.
 """
@@ -87,26 +91,23 @@ def _copy_tree(tree: PyTree, sharding=None) -> PyTree:
     return out
 
 
-def _checksum(tree: PyTree) -> float:
-    return float(
-        sum(jnp.sum(jnp.abs(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
-    )
-
-
 def verify_clone(src: PyTree, dst: PyTree, *, bit_exact: bool = False) -> bool:
     """Integrity check for one transferred phase.
 
-    - default: relative abs-sum checksum (cheap, catches bulk corruption);
-    - ``bit_exact``: every leaf compared elementwise (catches swapped or
-      compensating corruptions the checksum is blind to).
+    - default: per-chunk [abs-sum, sum] digests, one fused on-device pass
+      per tree (the Pallas checksum kernel) compared chunk-wise - cheap,
+      catches bulk, chunk-local and sign-compensating corruption;
+    - ``bit_exact``: every leaf compared elementwise (catches value-
+      multiset-preserving permutations the digest is blind to).
     """
     if bit_exact:
         a, b = jax.tree.leaves(src), jax.tree.leaves(dst)
         return len(a) == len(b) and all(
             np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(a, b)
         )
-    cs = _checksum(src)
-    return abs(_checksum(dst) - cs) < 1e-6 * max(1.0, cs)
+    from repro.xfer.digest import verify_tree  # deferred: keeps core light
+
+    return verify_tree(src, dst)
 
 
 def clone_pytree(

@@ -257,7 +257,10 @@ class FTSession:
         if snap is None or not self.ladder:
             return
         state, meta = snap
-        self.ladder.submit(step, state, {"step": step, **meta})
+        # pipelined: mutable leaves are captured synchronously, the
+        # staging + store placement overlap the next dispatch unit on the
+        # ladder's transfer plane (drained by recover() and run())
+        self.ladder.submit_async(step, state, {"step": step, **meta})
 
     def _restore(self) -> Optional[int]:
         """Walk the recovery ladder (cheapest surviving level first).
@@ -283,6 +286,11 @@ class FTSession:
         regenerate -> message recovery. Returns (repair report, replay
         plan)."""
         t0 = time.perf_counter()
+        # the recovery window reuses the transfer plane's barrier: any
+        # pipelined submit still in flight lands BEFORE on_failure drops
+        # dead holders and the restore walk consults the levels (the same
+        # ordering the old synchronous submit gave for free)
+        self.ladder.drain()
         self.control.revoke()
         failed = self.control.agree()
         old_world = self.world
@@ -421,7 +429,7 @@ class FTSession:
             ):
                 self._checkpoint(step)
             step += 1
-        # drain background writers (durable level): the newest snapshots
-        # must not die with the process on a daemon thread
-        self.ladder.wait()
+        # drain the transfer plane + background writers: the newest
+        # snapshots must not die with the process on a daemon thread
+        self.ladder.drain()
         return self.report

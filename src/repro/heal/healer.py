@@ -17,10 +17,14 @@ the new pair real:
    placed onto the healed ring, restoring K-way redundancy that the
    failure eroded (ReStore's re-distribution step).
 
-The Healer runs inside ``FTSession.recover``'s window, after the restore
-walk (so a backfilled partner is cloned from its *restored* state) and
-before the communicator re-derivation, so the next re-lowered step
-compiles with the healed topology.
+The Healer runs inside ``FTSession.recover``'s window, after the
+session's ``ladder.drain()`` barrier (any pipelined submit still in
+flight has landed) and after the restore walk (so a backfilled partner is
+cloned from its *restored* state), and before the communicator
+re-derivation, so the next re-lowered step compiles with the healed
+topology. Per-phase clone verification goes through the ``repro.xfer``
+digest path (the fused Pallas checksum kernel, one on-device pass per
+phase).
 """
 from __future__ import annotations
 

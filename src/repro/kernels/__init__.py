@@ -1,3 +1,8 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# checksum{,_ref,_ops}.py: fused per-chunk digest kernel backing the
+# repro.xfer transfer plane's clone/heal verification (the paper's
+# integrity check over the process-image transfer, Sec. III-A, done
+# on-device in one pass instead of a per-leaf host loop).

@@ -1,0 +1,44 @@
+"""Fused per-chunk checksum/digest Pallas TPU kernel.
+
+One pass over a ``(n_chunks, chunk_elems)`` fp32 view of a flattened state
+computes TWO reduction columns per chunk - ``abs``-sum and plain sum - so
+clone/heal verification prices one HBM read instead of the old per-leaf
+host loop (``core/state_transfer._checksum`` round-tripped every leaf
+through a Python ``sum``). The chunk axis is the sublane tile (grid-
+blocked); ``chunk_elems`` is the lane dim and should be a 128-multiple for
+full VPU lanes. The plain-sum column adds sign sensitivity (compensating
+sign flips now change the digest); a permutation that preserves each
+chunk's value multiset remains invisible - callers needing that guarantee
+use the per-leaf ``bit_exact`` path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _checksum_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.stack(
+        [jnp.sum(jnp.abs(x), axis=-1), jnp.sum(x, axis=-1)], axis=-1
+    )
+
+
+def checksum_kernel(x2d, *, block_chunks: int = 8, interpret: bool = True):
+    """x2d (n_chunks, chunk_elems) -> (n_chunks, 2) fp32 digests."""
+    n, c = x2d.shape
+    block_chunks = min(block_chunks, n)
+    pad = (-n) % block_chunks
+    if pad:
+        x2d = jnp.pad(x2d, ((0, pad), (0, 0)))
+    grid = (x2d.shape[0] // block_chunks,)
+    out = pl.pallas_call(
+        _checksum_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_chunks, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_chunks, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x2d.shape[0], 2), jnp.float32),
+        interpret=interpret,
+    )(x2d)
+    return out[:n] if pad else out

@@ -1,0 +1,32 @@
+"""jit'd public wrapper for the fused per-chunk checksum kernel.
+
+``chunk_digests`` takes the flattened fp32 view of a state (1-D), pads it
+to a whole number of ``chunk_elems``-wide chunks and returns the
+``(n_chunks, 2)`` digest matrix in one fused pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.checksum import checksum_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_elems",))
+def chunk_digests(x, *, chunk_elems: int):
+    """x: 1-D array (any real dtype) -> (ceil(n/chunk_elems), 2) fp32."""
+    x = x.astype(jnp.float32)
+    n = x.shape[0]
+    if n == 0:  # all-empty-leaf stream: no chunks, no kernel launch
+        return jnp.zeros((0, 2), jnp.float32)
+    pad = (-n) % chunk_elems
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    x2d = x.reshape(-1, chunk_elems)
+    return checksum_kernel(x2d, interpret=not _on_tpu())

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the fused per-chunk checksum kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def checksum_ref(x2d):
+    """x2d (n_chunks, chunk_elems) -> (n_chunks, 2): [abs-sum, sum], fp32."""
+    xf = x2d.astype(jnp.float32)
+    return jnp.stack([jnp.sum(jnp.abs(xf), axis=-1), jnp.sum(xf, axis=-1)], axis=-1)

@@ -32,6 +32,10 @@ def main() -> None:
                          "instead of cold-starting")
     ap.add_argument("--redundancy", type=int, default=2,
                     help="K-way shard redundancy of the snapshot store")
+    ap.add_argument("--delta", default="none", choices=["none", "bf16", "int8"],
+                    help="delta-encode KV snapshot chunks against the previous "
+                         "submit (repro.xfer; a mostly-append cache then ships "
+                         "mostly zero chunks)")
     ap.add_argument("--heal", default="none",
                     help="re-replication policy (repro.heal): none | eager | "
                          "deferred:K")
@@ -65,6 +69,7 @@ def main() -> None:
         seed=args.seed,
         snapshot_every=args.snapshot_every,
         partner_redundancy=args.redundancy,
+        delta=args.delta,
     )
     print(
         f"serving {model.name}: {eng.world.topo.n_comp} cmp + "

@@ -37,6 +37,15 @@ def main() -> None:
     ap.add_argument("--redundancy", type=int, default=2,
                     help="K-way shard redundancy of the level-1 partner-memory "
                          "store (repro.store.PartnerMemoryStore)")
+    ap.add_argument("--delta", default="none", choices=["none", "bf16", "int8"],
+                    help="delta-encode snapshot chunks against the previous "
+                         "submit (repro.xfer; verified byte-exact per chunk, "
+                         "restores stay bit-identical)")
+    ap.add_argument("--chunk-kib", type=int, default=0,
+                    help="transfer-plane stripe size in KiB (0 = default 1024)")
+    ap.add_argument("--no-pipeline", dest="pipeline", action="store_false",
+                    help="submit snapshots synchronously instead of on the "
+                         "transfer plane's double-buffered stager")
     ap.add_argument("--heal", default="none",
                     help="re-replication policy (repro.heal): none | eager | "
                          "deferred:K - converts spares back into replicas of "
@@ -87,6 +96,9 @@ def main() -> None:
         checkpoint_every=args.checkpoint_every,
         partner_redundancy=args.redundancy,
         microbatches=args.microbatches,
+        delta=args.delta,
+        chunk_bytes=args.chunk_kib * 1024,
+        pipeline=args.pipeline,
     )
     print(
         f"world: {sim.world.topo.n_comp} computational + {sim.world.topo.n_rep} "

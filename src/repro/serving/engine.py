@@ -44,6 +44,7 @@ from repro.dist.sharding import (
 from repro.ft import FailureSchedule, FTReport, FTSession, ResilientProgram
 from repro.models import model as M
 from repro.store import PartnerMemoryStore, RecoveryLadder
+from repro.xfer import TransferPlane
 
 
 @dataclass
@@ -80,6 +81,7 @@ class ServeEngine(ResilientProgram):
         snapshot_every: int = 0,
         partner_redundancy: int = 2,
         stores: Optional[RecoveryLadder] = None,
+        delta: str = "none",
     ):
         self.model_cfg = model_cfg
         self.repl = ReplicationConfig(rdegree=rdegree)
@@ -93,11 +95,20 @@ class ServeEngine(ResilientProgram):
         self._out_streams: List[List[int]] = []
         self.snapshot_every = snapshot_every
 
-        # decode-state plane: K-way sharded partner memory, so a snapshot
-        # survives losses that take live caches with them
+        # decode-state plane: K-way striped partner memory on the shared
+        # repro.xfer plane, so a snapshot survives losses that take live
+        # caches with them; KV snapshots pipeline behind decode steps, and
+        # ``delta`` encodes a mostly-append cache cheaply (rows past the
+        # decode position never change -> zero chunks)
+        assert delta == "none" or (stores is None and snapshot_every), (
+            "delta configures the default snapshot ladder's TransferPlane: "
+            "it needs snapshot_every > 0, and an explicit stores= ladder "
+            "carries its own plane (RecoveryLadder(..., xfer=...))"
+        )
         if stores is None and snapshot_every:
             stores = RecoveryLadder(
-                [PartnerMemoryStore(range(n_slices), redundancy=partner_redundancy)]
+                [PartnerMemoryStore(range(n_slices), redundancy=partner_redundancy)],
+                xfer=TransferPlane(delta=delta),
             )
 
         self.session = FTSession(

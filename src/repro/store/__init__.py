@@ -18,6 +18,11 @@ Paper mapping: level 1 is Sec. III-A's partner replica memory generalized
 per ReStore (Huebner et al., 2022); level 2 is the classic multi-level
 durable tier; level 0 is the Sec. III-A process-image transfer
 (``core/state_transfer``) behind the same API for dynamic replica rebirth.
+
+State movement (staging, striping, pipelined async submit, delta
+encoding, digest verification) is owned by the ``repro.xfer`` transfer
+plane; every ladder carries one (``RecoveryLadder(stores, xfer=...)``)
+and its chunk-consuming levels adopt it.
 """
 from repro.store.base import (
     PyTree,

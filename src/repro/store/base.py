@@ -28,6 +28,7 @@ import jax
 import numpy as np
 
 from repro.dist.sharding import path_str
+from repro.xfer.plane import stage_tree
 
 PyTree = Any
 
@@ -36,18 +37,10 @@ Restored = Tuple[int, PyTree, Dict]
 
 
 def flatten_with_paths(tree: PyTree) -> Dict[str, np.ndarray]:
-    """Flatten a pytree to ``{path: host ndarray}``. Every leaf is a fresh
-    host copy - device arrays via the device->host transfer, numpy leaves
-    via an explicit copy (``np.asarray`` alone would alias the caller's
-    buffer, breaking ``submit``'s capture-before-return contract for
-    programs that mutate state in place)."""
-    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
-    return {
-        path_str(kp): (
-            np.array(leaf) if isinstance(leaf, np.ndarray) else np.asarray(leaf)
-        )
-        for kp, leaf in flat
-    }
+    """Flatten a pytree to ``{path: host ndarray}`` - the transfer plane's
+    staging pass (:func:`repro.xfer.plane.stage_tree`), re-exported here
+    because it is the ``StateStore`` serialization contract."""
+    return stage_tree(tree)
 
 
 def unflatten_like(template: PyTree, arrays: Dict[str, np.ndarray]) -> PyTree:

@@ -10,6 +10,12 @@ the train loop for the full write; double buffering bounds the stall to
 the rare case of both buffers busy (thread-based-MPI checkpointing,
 Adam et al., 2019).
 
+Snapshots on disk are always full and self-contained: the transfer
+plane's delta encoding applies to memory levels only (a delta chain on
+disk would couple GC to reference liveness; deferred - see ROADMAP open
+items), so any published ``step-*`` dir restores alone after process
+death, whatever was trimmed around it.
+
 Crash consistency: writers build ``.tmp-<step>`` and ``os.rename`` onto
 the final name (atomic on POSIX). A writer that dies mid-write leaks its
 tmp dir; construction garbage-collects any stale ``.tmp-*`` (they used to

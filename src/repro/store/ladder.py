@@ -5,6 +5,11 @@ ladder (and the serving engine had no ladder at all); this object owns it:
 
 - ``submit`` fans a snapshot out to every level (each store captures the
   state before returning, so one host staging pass feeds all of them);
+- ``submit_async`` is the pipelined fast path: mutable leaves are captured
+  synchronously, then staging + placement run on the ladder's
+  :class:`~repro.xfer.TransferPlane` stager, overlapping the next train
+  step; ``drain`` is the barrier (reused by ``FTSession.run``'s teardown
+  and the recovery window before the restore walk);
 - ``restore`` walks the levels in ascending ``level`` order (cheapest
   first), takes the first recoverable snapshot, optionally cross-verifies
   it, and records a :class:`RestoreAttempt` per level so benchmarks and
@@ -19,7 +24,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.store.base import PyTree, StateStore, flatten_with_paths
+from repro.store.base import PyTree, StateStore
+from repro.xfer.plane import TransferPlane, capture_tree, stage_tree
 
 
 @dataclass
@@ -45,11 +51,19 @@ class LadderRestore:
 
 
 class RecoveryLadder:
-    def __init__(self, stores: Sequence[StateStore]):
+    def __init__(self, stores: Sequence[StateStore],
+                 *, xfer: Optional[TransferPlane] = None):
         self.stores: List[StateStore] = sorted(stores, key=lambda s: s.level)
         levels = [s.level for s in self.stores]
         assert len(set(levels)) == len(levels), f"duplicate ladder levels: {levels}"
         self.attempts: List[RestoreAttempt] = []  # last restore's walk
+        # ONE transfer plane per ladder: chunk-consuming levels adopt it so
+        # a submit's striping/delta/pipelining config is set in one place
+        self.xfer = xfer if xfer is not None else TransferPlane()
+        for s in self.stores:
+            adopt = getattr(s, "adopt_plane", None)
+            if adopt is not None:
+                adopt(self.xfer)
 
     # ---- accessors ---------------------------------------------------------
     def store(self, level: int) -> Optional[StateStore]:
@@ -66,24 +80,52 @@ class RecoveryLadder:
 
     # ---- writes ------------------------------------------------------------
     def submit(self, step: int, state: PyTree, meta: Optional[Dict] = None,
-               levels: Optional[Sequence[int]] = None) -> None:
+               levels: Optional[Sequence[int]] = None,
+               _private: bool = False) -> None:
         """Fan the snapshot out to every (selected) level. Blob-consuming
         backends share ONE host staging pass: the state is flattened once
-        and the same read-only blob feeds them all."""
+        and the same read-only blob feeds them all. ``_private`` marks a
+        tree the ladder already owns (a capture_tree result staged by
+        submit_async) whose mutable leaves need no second copy."""
         blob = None
         for s in self.stores:
             if levels is not None and s.level not in levels:
                 continue
             if s.consumes_blob:
                 if blob is None:
-                    blob = flatten_with_paths(state)
+                    blob = stage_tree(state, copy=not _private)
                 s.submit_blob(step, blob, meta)
             else:
                 s.submit(step, state, meta)
 
-    def wait(self) -> None:
+    def submit_async(self, step: int, state: PyTree, meta: Optional[Dict] = None,
+                     levels: Optional[Sequence[int]] = None) -> None:
+        """Pipelined submit: capture the mutable leaves NOW (the
+        capture-before-return contract), then stage + place on the
+        background stager so the caller's next step overlaps the state
+        movement. Falls back to the synchronous path when the plane's
+        pipelining is off (e.g. programs that donate step buffers)."""
+        if not self.stores:
+            return
+        if not self.xfer.pipeline:
+            self.submit(step, state, meta, levels)
+            return
+        captured = capture_tree(state)
+        self.xfer.submit_async(
+            lambda: self.submit(step, captured, meta, levels, _private=True)
+        )
+
+    def drain(self) -> None:
+        """Barrier: every pipelined submit has executed and every store
+        has persisted what it was handed. Reused by ``FTSession.run``'s
+        teardown and by the recovery window BEFORE ``on_failure``/restore
+        consult the stores."""
+        self.xfer.drain()
         for s in self.stores:
             s.wait()
+
+    def wait(self) -> None:
+        self.drain()
 
     def trim(self, keep: int) -> None:
         for s in self.stores:

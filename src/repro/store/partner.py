@@ -1,20 +1,30 @@
-"""Level-1 partner-memory snapshots with ReStore-style K-way sharding.
+"""Level-1 partner-memory snapshots: striped chunks, K-way redundancy.
 
 The old ``PartnerStore`` held ONE full copy of the state on ONE partner
-host - if the computational slice and its partner failed together (a
-mirrored-pair loss, the paper's unmaskable case), level 1 was gone and
-recovery fell all the way to disk. ReStore's fix, adopted here: shard the
-snapshot across *all* surviving slices' host memories and replicate each
-shard onto ``redundancy`` distinct peers. A snapshot then survives any
-failure that leaves at least one holder of every shard alive - in
-particular the double failure of a mirrored pair, whose two physicals
-never co-hold a shard's only copies unless the world has shrunk to the
-pair itself.
+host; PR 2 sharded it ReStore-style but still placed whole per-leaf
+shards under one global lock - a submit blocked every concurrent ``load``
+for the full blob copy, and one shard could be as large as the biggest
+leaf. This version moves placement to the ``repro.xfer`` plane:
 
-Placement: with live peers ``p_0 < ... < p_{n-1}``, shard ``s`` is held by
-``p_{(s+j) mod n}`` for ``j in 0..K-1`` (consecutive-ring placement, the
-ReStore default). Leaves are round-robined into ``n`` shards in sorted
-path order, so any submit is reconstructible from the manifest alone.
+- the staged blob is cut into fixed-size chunks and **striped**
+  round-robin across the live ring (the paper's Sec. V message splitting:
+  every partner receives its part in parallel, none waits for a
+  whole-blob send), with each chunk replicated onto ``redundancy``
+  consecutive peers (ReStore's placement, per chunk);
+- placement is **fine-grained**: the global lock now only guards ring +
+  manifest metadata (O(1) critical sections); chunk placement takes
+  per-peer locks one chunk at a time, so ``load``/``steps`` never wait on
+  a blob copy (``coarse_lock=True`` keeps the old whole-submit lock for
+  A/B benchmarking);
+- submits optionally **delta-encode** each chunk against the previous
+  submit (``xfer.delta``, verified byte-exact per chunk at encode time).
+
+A snapshot survives any failure that leaves >= 1 holder of every chunk
+alive - in particular a mirrored-pair double failure, whose two physicals
+never co-hold a chunk's only copies unless the world shrank to the pair.
+
+The manifest entry for a step is installed *after* its chunks are placed,
+so a concurrent gather either sees the complete placement or none of it.
 """
 from __future__ import annotations
 
@@ -24,26 +34,54 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.store.base import PyTree, Restored, StateStore, flatten_with_paths, unflatten_like
+from repro.xfer.chunking import Chunk, ChunkedBlob, stripe_holders
+from repro.xfer.plane import TransferPlane
 
 
 class PartnerMemoryStore(StateStore):
     level = 1
     consumes_blob = True
 
-    def __init__(self, peers: Iterable[int], *, redundancy: int = 2, keep: int = 2):
+    def __init__(self, peers: Iterable[int], *, redundancy: int = 2, keep: int = 2,
+                 xfer: Optional[TransferPlane] = None, coarse_lock: bool = False):
         assert redundancy >= 1
         self.redundancy = redundancy
         self.keep = keep
+        self.coarse_lock = coarse_lock
         self._live: List[int] = sorted(set(int(p) for p in peers))
         assert self._live, "need at least one peer host"
-        # peer -> {(step, shard) -> {path: array}}
-        self._mem: Dict[int, Dict[Tuple[int, int], Dict[str, np.ndarray]]] = {
+        # peer -> {(step, chunk_index) -> Chunk}
+        self._mem: Dict[int, Dict[Tuple[int, int], Chunk]] = {
             p: {} for p in self._live
         }
-        # step -> {"n_shards": int, "meta": dict}
+        self._peer_locks: Dict[int, threading.Lock] = {
+            p: threading.Lock() for p in self._live
+        }
+        # step -> {"n_chunks", "layout", "chunk_bytes", "meta"}
         self._manifest: Dict[int, Dict] = {}
-        self._lock = threading.Lock()
+        # guards ring topology + manifest ONLY (short critical sections);
+        # lock order is always meta -> peer
+        self._meta_lock = threading.Lock()
+        self._plane = xfer
+        self._delta = xfer.delta_encoder() if xfer else None
         self.name = f"partner[k{redundancy}]"
+        #: accounting of the last submit (the xfer benchmarks read these)
+        self.last_chunked: Optional[ChunkedBlob] = None
+
+    # ---- plane plumbing ----------------------------------------------------
+    def adopt_plane(self, plane: TransferPlane) -> None:
+        """Called by the RecoveryLadder so every chunk-consuming level
+        shares ITS plane (one chunking pass, one config). A store that
+        already owns a plane keeps it."""
+        if self._plane is None:
+            self._plane = plane
+            self._delta = plane.delta_encoder()
+
+    def _ensure_plane(self) -> TransferPlane:
+        if self._plane is None:
+            self._plane = TransferPlane()
+            self._delta = self._plane.delta_encoder()
+        return self._plane
 
     # ---- writes ------------------------------------------------------------
     def submit(self, step: int, state: PyTree, meta: Optional[Dict] = None) -> None:
@@ -51,81 +89,167 @@ class PartnerMemoryStore(StateStore):
 
     def submit_blob(self, step: int, blob: Dict[str, np.ndarray],
                     meta: Optional[Dict] = None) -> None:
-        with self._lock:
-            self._place_locked(step, blob, dict(meta or {}))
+        """Stripe ``blob`` over the CURRENT ring. Any prior placement of
+        the step is purged first: replay can resubmit a step after the
+        world shrank (and rebalance re-places after it grew) - stale
+        chunks from the old ring must not be gathered alongside new ones."""
+        plane = self._ensure_plane()
+        if self.coarse_lock:
+            with self._meta_lock:
+                live = list(self._live)
+                cb = self._delta.encode(plane.chunked(blob, min_chunks=len(live)))
+                self._place_locked(step, cb, dict(meta or {}), live)
+                self._trim_locked(self.keep)
+            self.last_chunked = cb
+            return
+        with self._meta_lock:
+            live = list(self._live)
+            self._drop_locked(step)
+        # the expensive part - chunk, delta-encode, place - runs WITHOUT
+        # the metadata lock: concurrent loads proceed against older steps
+        cb = self._delta.encode(plane.chunked(blob, min_chunks=len(live)))
+        self._place_fine(step, cb, dict(meta or {}), live)
+        with self._meta_lock:
             self._trim_locked(self.keep)
+        self.last_chunked = cb
 
-    def _place_locked(self, step: int, blob: Dict[str, np.ndarray],
-                      meta: Dict) -> None:
-        """Shard ``blob`` over the CURRENT ring. Any prior placement of the
-        step is purged first: replay can resubmit a step after the world
-        shrank (and rebalance re-places after it grew) - stale shards from
-        the old ring must not be gathered alongside the new ones."""
+    @staticmethod
+    def _entry(cb: ChunkedBlob, meta: Dict) -> Dict:
+        return {
+            "n_chunks": cb.n_chunks,
+            "layout": cb.layout,
+            "chunk_bytes": cb.chunk_bytes,
+            "meta": meta,
+        }
+
+    def _place_locked(self, step: int, cb: ChunkedBlob, meta: Dict,
+                      live: List[int]) -> None:
+        """Whole-submit placement under the metadata lock (the pre-xfer
+        behavior, kept behind ``coarse_lock`` for contention A/B runs)."""
         self._drop_locked(step)
-        live = list(self._live)
-        n = len(live)
-        k = min(self.redundancy, n)
-        shards: List[Dict[str, np.ndarray]] = [{} for _ in range(n)]
-        for i, path in enumerate(sorted(blob)):
-            shards[i % n][path] = blob[path]
-        self._manifest[step] = {"n_shards": n, "meta": meta}
-        for s, shard in enumerate(shards):
-            for j in range(k):
-                self._mem[live[(s + j) % n]][(step, s)] = shard
+        for chunk in cb.chunks:
+            for peer in stripe_holders(chunk.index, live, self.redundancy):
+                mem = self._mem.get(peer)
+                if mem is not None:
+                    mem[(step, chunk.index)] = chunk
+        self._manifest[step] = self._entry(cb, meta)
+
+    def _place_fine(self, step: int, cb: ChunkedBlob, meta: Dict,
+                    live: List[int]) -> None:
+        """Per-chunk placement (no metadata lock held), manifest installed
+        LAST so gathers see the placement complete or not at all."""
+        for chunk in cb.chunks:
+            for peer in stripe_holders(chunk.index, live, self.redundancy):
+                self._store_chunk(peer, (step, chunk.index), chunk)
+        with self._meta_lock:
+            self._manifest[step] = self._entry(cb, meta)
+
+    def _store_chunk(self, peer: int, key: Tuple[int, int], chunk: Chunk) -> None:
+        """Place ONE chunk under that peer's lock (the fine-grained unit).
+        A peer that died mid-placement simply drops the write - the step
+        stays unrecoverable until resubmitted, exactly as if the death had
+        preceded the submit."""
+        lock = self._peer_locks.get(peer)
+        mem = self._mem.get(peer)
+        if lock is None or mem is None:
+            return
+        with lock:
+            mem[key] = chunk
 
     # ---- reads -------------------------------------------------------------
     def load(self, template: PyTree, step: Optional[int] = None) -> Optional[Restored]:
-        with self._lock:
-            candidates = [step] if step is not None else sorted(self._manifest, reverse=True)
-            for cand in candidates:
-                if cand not in self._manifest:
-                    continue
-                blob = self._gather_locked(cand)
+        """Newest (or requested) recoverable snapshot. Gathers run without
+        the metadata lock, so a concurrent submit/trim can invalidate a
+        candidate mid-gather; a failed gather whose manifest entry was
+        REPLACED meanwhile is transient (retried against the fresh
+        manifest), while one whose entry is intact is a genuine chunk loss
+        (a dead holder) and falls through to older candidates."""
+        for _ in range(5):
+            with self._meta_lock:
+                candidates = (
+                    [step] if step is not None
+                    else sorted(self._manifest, reverse=True)
+                )
+                entries = {
+                    s: self._manifest[s] for s in candidates if s in self._manifest
+                }
+            if not entries:
+                return None
+            transient = False
+            for cand, entry in entries.items():
+                blob = self._gather(cand, entry)
                 if blob is not None:
-                    meta = dict(self._manifest[cand]["meta"])
-                    return cand, unflatten_like(template, blob), meta
+                    return cand, unflatten_like(template, blob), dict(entry["meta"])
+                with self._meta_lock:
+                    if self._manifest.get(cand) is entry:
+                        continue  # intact manifest, missing chunk: lost
+                transient = True
+            if not transient:
+                return None
         return None
 
-    def _gather_locked(self, step: int) -> Optional[Dict[str, np.ndarray]]:
-        """All shards of ``step`` from surviving holders, or None if any
-        shard lost every copy."""
-        n = self._manifest[step]["n_shards"]
-        blob: Dict[str, np.ndarray] = {}
-        for s in range(n):
-            part = next(
-                (m[(step, s)] for m in self._mem.values() if (step, s) in m), None
-            )
+    def _gather(self, step: int, entry: Dict) -> Optional[Dict[str, np.ndarray]]:
+        """All chunks of ``step`` from surviving holders, or None if any
+        chunk lost every copy. Reads are lock-free: chunk objects are
+        immutable once placed and per-peer dict lookups are atomic. A
+        gather racing a resubmit that RE-CHUNKED the step (the ring
+        changed) can mix chunks from the new placement with the old
+        manifest entry; every chunk's byte size is validated against the
+        entry's layout before reassembly, so a torn gather degrades to
+        None (``load`` then retries against the fresh manifest) instead
+        of reconstructing misaligned bytes."""
+        with self._meta_lock:
+            mems = list(self._mem.values())
+        total = sum(s.nbytes for s in entry["layout"])
+        cb_size = entry["chunk_bytes"]
+        chunks: List[Chunk] = []
+        raws: List[np.ndarray] = []  # decoded ONCE: validated then reused
+        for ci in range(entry["n_chunks"]):
+            part = next((m.get((step, ci)) for m in mems if (step, ci) in m), None)
             if part is None:
                 return None
-            blob.update(part)
-        return blob
+            raw = part.raw()
+            if raw.nbytes != min(cb_size, total - ci * cb_size):
+                return None  # chunk from a different (re-chunked) placement
+            chunks.append(part)
+            raws.append(raw)
+        return ChunkedBlob(
+            layout=entry["layout"], chunk_bytes=cb_size, chunks=chunks
+        ).to_blob(raws)
 
     def recoverable(self, step: int) -> bool:
-        """True if every shard of ``step`` still has a surviving holder."""
-        with self._lock:
-            return step in self._manifest and self._gather_locked(step) is not None
+        """True if every chunk of ``step`` still has a surviving holder."""
+        with self._meta_lock:
+            entry = self._manifest.get(step)
+            if entry is None:
+                return False
+            mems = list(self._mem.values())
+        return all(
+            any((step, ci) in m for m in mems) for ci in range(entry["n_chunks"])
+        )
 
     def steps(self) -> List[int]:
-        with self._lock:
+        with self._meta_lock:
             return sorted(self._manifest)
 
     def latest_step(self) -> int:
-        with self._lock:
+        with self._meta_lock:
             return max(self._manifest, default=-1)
 
     # ---- space management --------------------------------------------------
     def drop(self, step: int) -> None:
-        with self._lock:
+        with self._meta_lock:
             self._drop_locked(step)
 
     def _drop_locked(self, step: int) -> None:
         self._manifest.pop(step, None)
-        for m in self._mem.values():
-            for key in [k for k in m if k[0] == step]:
-                del m[key]
+        for peer, m in self._mem.items():
+            with self._peer_locks[peer]:
+                for key in [k for k in m if k[0] == step]:
+                    del m[key]
 
     def trim(self, keep: int) -> None:
-        with self._lock:
+        with self._meta_lock:
             self._trim_locked(keep)
 
     def _trim_locked(self, keep: int) -> None:
@@ -134,39 +258,56 @@ class PartnerMemoryStore(StateStore):
 
     # ---- failure plumbing --------------------------------------------------
     def on_failure(self, dead_physicals: Sequence[int]) -> None:
-        """Dead peers' host memories are gone: drop their shard copies and
-        stop placing new shards on them."""
-        with self._lock:
+        """Dead peers' host memories are gone: drop their chunk copies and
+        stop striping onto them."""
+        with self._meta_lock:
             for p in dead_physicals:
                 self._mem.pop(p, None)
+                self._peer_locks.pop(p, None)
             self._live = [p for p in self._live if p in self._mem]
 
     # ---- heal plumbing (repro.heal pair re-registration) --------------------
     def register_peers(self, peers: Iterable[int]) -> None:
         """Admit peers into the ring (idempotent): a healed replica or a
-        backfilled spare brings fresh host memory that new shard placements
+        backfilled spare brings fresh host memory that new chunk stripes
         should use. Existing snapshots keep their recorded placement until
         :meth:`rebalance` re-places them."""
-        with self._lock:
+        with self._meta_lock:
             for p in peers:
                 p = int(p)
                 if p not in self._mem:
                     self._mem[p] = {}
+                    self._peer_locks[p] = threading.Lock()
             self._live = sorted(self._mem)
 
     def rebalance(self) -> List[int]:
-        """Re-place every still-recoverable snapshot onto the CURRENT ring,
-        restoring the K-way redundancy that deaths eroded (ReStore's
-        re-distribution step after the ring changes). Snapshots that
-        already lost a shard entirely are left as-is (nothing to gather).
+        """Re-stripe every still-recoverable snapshot onto the CURRENT
+        ring, restoring the K-way redundancy that deaths eroded (ReStore's
+        re-distribution step). Re-placement is raw (no delta re-encode:
+        the delta reference tracks the *submit* stream, not placement).
+        Snapshots that already lost a chunk entirely are left as-is.
         Returns the re-placed steps."""
-        with self._lock:
-            replaced = []
-            for step in sorted(self._manifest):
-                blob = self._gather_locked(step)
-                if blob is None:
-                    continue
-                meta = self._manifest[step]["meta"]
-                self._place_locked(step, blob, meta)
-                replaced.append(step)
-            return replaced
+        plane = self._ensure_plane()
+        with self._meta_lock:
+            steps = sorted(self._manifest)
+            entries = {s: self._manifest[s] for s in steps}
+        replaced = []
+        for step in steps:
+            blob = self._gather(step, entries[step])
+            if blob is None:
+                continue
+            if self.coarse_lock:
+                with self._meta_lock:
+                    live = list(self._live)
+                    cb = plane.chunked(blob, min_chunks=len(live))
+                    self._place_locked(step, cb, entries[step]["meta"], live)
+            else:
+                # same discipline as submit_blob: purge under the short
+                # lock, chunk + place outside it, manifest installed last
+                with self._meta_lock:
+                    live = list(self._live)
+                    self._drop_locked(step)
+                cb = plane.chunked(blob, min_chunks=len(live))
+                self._place_fine(step, cb, entries[step]["meta"], live)
+            replaced.append(step)
+        return replaced

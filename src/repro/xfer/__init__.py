@@ -1,0 +1,52 @@
+"""``repro.xfer`` - the striped, pipelined transfer plane.
+
+The hot path of every submit, restore and heal: one staging pass, blobs
+striped into fixed-size chunks round-robin across the partner ring (the
+paper's Sec. V message splitting), a double-buffered async stager whose
+``drain()`` barrier the session and the recovery window share, verified-
+exact delta encoding between close submits, and on-device digest
+verification through the fused Pallas checksum kernel.
+
+Consumers: ``repro.store`` (all three levels + the RecoveryLadder),
+``repro.heal.Healer`` (clone staging + verification), ``ServeEngine`` KV
+snapshots, and ``core.state_transfer.verify_clone``.
+"""
+from repro.xfer.chunking import (
+    Chunk,
+    ChunkedBlob,
+    LeafSpec,
+    chunk_blob,
+    chunk_count,
+    size_for_chunks,
+    stripe_holders,
+)
+from repro.xfer.delta import DeltaEncoder, decode_delta, encode_delta
+from repro.xfer.digest import digests_match, tree_digests, verify_tree
+from repro.xfer.plane import (
+    DEFAULT_CHUNK_BYTES,
+    AsyncStager,
+    TransferPlane,
+    capture_tree,
+    stage_tree,
+)
+
+__all__ = [
+    "AsyncStager",
+    "Chunk",
+    "ChunkedBlob",
+    "DEFAULT_CHUNK_BYTES",
+    "DeltaEncoder",
+    "LeafSpec",
+    "TransferPlane",
+    "capture_tree",
+    "chunk_blob",
+    "chunk_count",
+    "decode_delta",
+    "digests_match",
+    "encode_delta",
+    "size_for_chunks",
+    "stage_tree",
+    "stripe_holders",
+    "tree_digests",
+    "verify_tree",
+]

@@ -1,0 +1,203 @@
+"""Striping primitives: a staged blob as a fixed-size chunk stream.
+
+The paper's parallel communication strategy (Sec. V) splits every
+state-transfer message so all partners receive their part concurrently
+instead of one whole-blob send at a time. Host-side, the same idea: a
+flattened ``{path: ndarray}`` blob becomes one virtual byte stream (leaf
+bytes in sorted path order) cut into fixed-size :class:`Chunk`\\ s. Chunks
+are the unit of
+
+- **striping** - round-robin placement across the partner ring
+  (:func:`stripe_holders`), replacing whole-shard placement;
+- **delta encoding** - each chunk independently compares to / encodes
+  against the previous submit's same-index chunk (``xfer.delta``);
+- **fine-grained locking** - stores place one chunk at a time, so a
+  concurrent ``load`` never waits on a whole-blob copy.
+
+Chunks that fall inside a single leaf are zero-copy views into the staged
+blob; only chunks spanning a leaf boundary materialize new bytes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class LeafSpec:
+    """Layout record for one leaf: enough to rebuild it from raw bytes."""
+
+    path: str
+    dtype: str
+    shape: Tuple[int, ...]
+    nbytes: int
+
+
+@dataclass
+class Chunk:
+    """One stripe of the byte stream.
+
+    ``encoding`` selects how ``payload`` maps to raw bytes:
+
+    - ``raw``  - payload IS the bytes (uint8);
+    - ``zero`` - identical to the reference chunk: no payload, ``ref``
+      (shared by refcount with the previous submit) is the bytes;
+    - ``bf16``/``int8`` - payload is the codec-encoded fp32 *delta*
+      against ``ref`` (kept only when reconstruction is byte-exact).
+    """
+
+    index: int
+    encoding: str = "raw"
+    payload: Optional[object] = None
+    ref: Optional[np.ndarray] = None
+
+    @property
+    def moved_bytes(self) -> int:
+        """Bytes a submit actually moves: the payload (the shared ``ref``
+        already resides with every holder from the reference submit)."""
+        if self.encoding == "zero":
+            return 0
+        if self.encoding == "int8":
+            q, _ = self.payload
+            return int(q.nbytes) + 4
+        return int(np.asarray(self.payload).nbytes)
+
+    def raw(self) -> np.ndarray:
+        """Decode to the chunk's raw uint8 bytes (exact by construction)."""
+        if self.encoding == "raw":
+            return self.payload
+        if self.encoding == "zero":
+            return self.ref
+        from repro.xfer.delta import decode_delta
+
+        return decode_delta(self)
+
+
+@dataclass
+class ChunkedBlob:
+    """The striped form of one staged blob."""
+
+    layout: Tuple[LeafSpec, ...]
+    chunk_bytes: int
+    chunks: List[Chunk] = field(default_factory=list)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(s.nbytes for s in self.layout)
+
+    @property
+    def moved_bytes(self) -> int:
+        return sum(c.moved_bytes for c in self.chunks)
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.chunks)
+
+    def layout_signature(self) -> Tuple:
+        """Delta encoding is only valid between identically-laid-out
+        submits (same leaves, same chunk size)."""
+        return (self.chunk_bytes, self.layout)
+
+    def raw_chunks(self) -> List[np.ndarray]:
+        return [c.raw() for c in self.chunks]
+
+    def to_blob(self, raw: Optional[List[np.ndarray]] = None
+                ) -> Dict[str, np.ndarray]:
+        """Reassemble ``{path: ndarray}``. Restores are byte-identical to
+        the submitted blob whatever each chunk's encoding. ``raw`` reuses
+        already-decoded chunk bytes (delta decodes are not free - a caller
+        that validated them should not pay twice)."""
+        out: Dict[str, np.ndarray] = {}
+        raw = self.raw_chunks() if raw is None else raw
+        ci, off = 0, 0
+        for spec in self.layout:
+            pieces, need = [], spec.nbytes
+            while need:
+                chunk = raw[ci]
+                take = min(need, chunk.nbytes - off)
+                pieces.append(chunk[off : off + take])
+                need -= take
+                off += take
+                if off == chunk.nbytes:
+                    ci, off = ci + 1, 0
+            # concatenate/copy (never view): pieces may sit at unaligned
+            # offsets inside a chunk, and the caller owns the result;
+            # zero-size leaves contribute no pieces at all
+            if not pieces:
+                b = np.zeros(0, np.uint8)
+            elif len(pieces) == 1:
+                b = pieces[0].copy()
+            else:
+                b = np.concatenate(pieces)
+            out[spec.path] = b.view(np.dtype(spec.dtype)).reshape(spec.shape)
+        return out
+
+
+def leaf_bytes(arr: np.ndarray) -> np.ndarray:
+    """A leaf's raw bytes as a flat uint8 view (copy only if non-contiguous
+    or 0-d)."""
+    return np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
+
+
+def chunk_blob(blob: Dict[str, np.ndarray], chunk_bytes: int) -> ChunkedBlob:
+    """Cut a staged blob into raw chunks of ``chunk_bytes`` (last may be
+    short). Handles the degenerate shapes the protocol must survive: an
+    empty blob (0 chunks), scalar leaves, and a chunk size larger than the
+    largest leaf (chunks then span leaves)."""
+    assert chunk_bytes >= 4 and chunk_bytes % 4 == 0, chunk_bytes
+    layout, parts = [], []
+    for path in sorted(blob):
+        arr = np.asarray(blob[path])
+        b = leaf_bytes(arr)
+        layout.append(LeafSpec(path, str(arr.dtype), tuple(arr.shape), b.nbytes))
+        parts.append(b)
+    cb = ChunkedBlob(layout=tuple(layout), chunk_bytes=chunk_bytes)
+    cur: List[np.ndarray] = []
+    cur_n = 0
+    for b in parts:
+        off = 0
+        while off < b.nbytes:
+            take = min(chunk_bytes - cur_n, b.nbytes - off)
+            cur.append(b[off : off + take])
+            cur_n += take
+            off += take
+            if cur_n == chunk_bytes:
+                cb.chunks.append(_seal(cur, len(cb.chunks)))
+                cur, cur_n = [], 0
+    if cur_n:
+        cb.chunks.append(_seal(cur, len(cb.chunks)))
+    return cb
+
+
+def _seal(pieces: List[np.ndarray], index: int) -> Chunk:
+    data = pieces[0] if len(pieces) == 1 else np.concatenate(pieces)
+    return Chunk(index=index, encoding="raw", payload=data)
+
+
+def chunk_count(total_bytes: int, chunk_bytes: int, min_chunks: int = 1) -> int:
+    """How many chunks a submit stripes into: enough that every ring
+    member holds a part (the paper's message splitting - no partner idles
+    while another receives the whole blob), and no chunk exceeds
+    ``chunk_bytes``."""
+    need = max(1, -(-total_bytes // chunk_bytes)) if total_bytes else 0
+    return max(need, min_chunks if total_bytes else 0)
+
+
+def size_for_chunks(total_bytes: int, n_chunks: int) -> int:
+    """A 4-byte-aligned chunk size yielding ~``n_chunks`` chunks."""
+    if not total_bytes or n_chunks <= 0:
+        return 4
+    size = -(-total_bytes // n_chunks)
+    return size + ((-size) % 4)
+
+
+def stripe_holders(index: int, ring: Sequence[int], redundancy: int) -> List[int]:
+    """The ``redundancy`` ring members holding chunk ``index``: consecutive
+    peers starting at ``index mod n`` (ReStore's consecutive-ring default,
+    applied per chunk instead of per whole-shard). Correct for odd ring
+    sizes and rings smaller than the redundancy."""
+    n = len(ring)
+    k = min(redundancy, n)
+    return [ring[(index + j) % n] for j in range(k)]

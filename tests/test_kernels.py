@@ -6,6 +6,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.kernels.checksum_ops import chunk_digests
+from repro.kernels.checksum_ref import checksum_ref
 from repro.kernels.flash_attention_ops import flash_attention
 from repro.kernels.flash_attention_ref import flash_attention_ref
 from repro.kernels.rmsnorm_ops import rmsnorm
@@ -143,6 +145,45 @@ def test_rmsnorm_vs_ref(shape, dtype):
     ref = rmsnorm_ref(x, s)
     tol = 1e-5 if dtype == jnp.float32 else 2e-2
     assert float(jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)))) < tol
+
+
+# ---------------------------------------------------------------------------
+# per-chunk checksum digest (the repro.xfer verification kernel)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,chunk_elems", [
+    (1, 128),          # single padded chunk
+    (128, 128),        # exact fit
+    (1000, 128),       # ragged tail chunk
+    (4096, 256),       # many chunks, multiple kernel grid steps
+    (77, 512),         # chunk larger than the stream
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_checksum_kernel_vs_ref(n, chunk_elems, dtype):
+    key = jax.random.PRNGKey(n + chunk_elems)
+    x = (jax.random.normal(key, (n,)) * 10).astype(dtype)
+    out = chunk_digests(x, chunk_elems=chunk_elems)
+    xf = x.astype(jnp.float32)
+    pad = (-n) % chunk_elems
+    ref = checksum_ref(jnp.pad(xf, (0, pad)).reshape(-1, chunk_elems))
+    assert out.shape == (-(-n // chunk_elems), 2)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(chunks=st.integers(1, 6), ce=st.sampled_from([128, 256]))
+def test_checksum_digest_properties(chunks, ce):
+    """Property: column 0 is the per-chunk abs-sum (>= |column 1|), and a
+    single-element perturbation moves exactly one digest row."""
+    n = chunks * ce
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,))
+    d = chunk_digests(x, chunk_elems=ce)
+    assert bool(jnp.all(d[:, 0] >= jnp.abs(d[:, 1]) - 1e-4))
+    hit = (chunks - 1) * ce  # first element of the last chunk
+    d2 = chunk_digests(x.at[hit].add(1.0), chunk_elems=ce)
+    changed = jnp.any(jnp.abs(d - d2) > 1e-5, axis=1)
+    assert int(changed.sum()) == 1 and bool(changed[chunks - 1])
 
 
 @settings(max_examples=10, deadline=None)

@@ -1,0 +1,359 @@
+"""The repro.xfer transfer plane.
+
+Chunking/striping edge cases (empty pytree, scalar leaves, chunk size
+larger than the largest leaf, odd ring sizes), verified-exact delta
+encoding (including a delta submit across a ring shrink with stale
+placement purged), the pipelined async stager (capture-before-return,
+drain barrier, double-buffer backpressure, error propagation), the
+fine-grained placement locking (a load completes while a submit is
+stalled mid-placement - deterministic, event-gated), and the fused
+checksum-digest verification path.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.store import PartnerMemoryStore, RecoveryLadder, flatten_with_paths
+from repro.xfer import (
+    AsyncStager,
+    DeltaEncoder,
+    TransferPlane,
+    capture_tree,
+    chunk_blob,
+    chunk_count,
+    stripe_holders,
+    tree_digests,
+    verify_tree,
+)
+
+
+def _state(v: float):
+    return {
+        "params": {"w": np.full((16, 16), v), "b": np.arange(4.0)},
+        "opt": {"mu": np.full((8, 8), v / 2), "nu": np.full((8, 8), v / 4)},
+    }
+
+
+def _tmpl():
+    return _state(0.0)
+
+
+# ---------------------------------------------------------------------------
+# chunking / striping
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk_bytes", [4, 64, 1 << 20])
+def test_chunk_roundtrip_mixed_dtypes(chunk_bytes):
+    blob = {
+        "a": np.arange(16.0).reshape(4, 4),
+        "b": np.arange(5, dtype=np.int32),
+        "c": np.asarray(np.float64(3.5)),  # scalar leaf
+        "d": np.array([True, False, True]),
+    }
+    cb = chunk_blob(blob, chunk_bytes)
+    out = cb.to_blob()
+    assert set(out) == set(blob)
+    for k in blob:
+        assert out[k].dtype == blob[k].dtype and out[k].shape == blob[k].shape
+        assert np.array_equal(out[k], blob[k])
+    assert cb.total_bytes == sum(v.nbytes for v in blob.values())
+
+
+def test_chunk_empty_blob():
+    cb = chunk_blob({}, 64)
+    assert cb.n_chunks == 0 and cb.to_blob() == {} and cb.total_bytes == 0
+
+
+def test_chunk_roundtrip_zero_size_leaf():
+    """A zero-size leaf contributes no chunk pieces but must survive the
+    round trip (shape and dtype intact)."""
+    blob = {"w": np.arange(4.0, dtype=np.float32),
+            "empty": np.zeros((0, 3), np.float32),
+            "tail": np.zeros((0,), np.int64)}
+    out = chunk_blob(blob, 64).to_blob()
+    for k in blob:
+        assert out[k].shape == blob[k].shape and out[k].dtype == blob[k].dtype
+        assert np.array_equal(out[k], blob[k])
+    ps = PartnerMemoryStore(range(4))
+    ps.submit(1, blob)
+    step, state, _ = ps.load({k: np.zeros_like(v) for k, v in blob.items()})
+    assert step == 1 and state["empty"].shape == (0, 3)
+
+
+def test_gather_rejects_rechunked_placement():
+    """A gather holding a STALE manifest entry while a resubmit re-chunked
+    the step (ring changed) must come back None - never misaligned bytes
+    or an IndexError - so load's transient-race retry can take over."""
+    ps = PartnerMemoryStore(range(8), keep=4)
+    ps.submit(5, _state(1.0))
+    with ps._meta_lock:
+        stale = ps._manifest[5]
+    ps.register_peers([100, 101, 102])  # ring grows -> resubmit re-chunks
+    ps.submit(5, _state(2.0))
+    assert ps._gather(5, stale) is None  # stale entry, new placement
+    step, state, _ = ps.load(_tmpl())  # fresh manifest still serves
+    assert step == 5
+    assert np.array_equal(state["params"]["w"], _state(2.0)["params"]["w"])
+
+
+def test_chunk_larger_than_largest_leaf_spans_leaves():
+    """One chunk can cover several leaves - layout, not leaf size, drives
+    reassembly."""
+    blob = {"x": np.arange(4.0), "y": np.arange(3, dtype=np.int16),
+            "z": np.asarray(np.int64(7))}
+    cb = chunk_blob(blob, 1 << 20)
+    assert cb.n_chunks == 1
+    out = cb.to_blob()
+    assert all(np.array_equal(out[k], blob[k]) for k in blob)
+
+
+def test_stripe_holders_odd_rings():
+    assert stripe_holders(0, [2, 5, 9], 2) == [2, 5]
+    assert stripe_holders(2, [2, 5, 9], 2) == [9, 2]  # wraps
+    assert stripe_holders(7, [4], 3) == [4]  # ring smaller than K
+    assert chunk_count(100, 1 << 20, min_chunks=7) == 7
+    assert chunk_count(0, 1 << 20, min_chunks=7) == 0  # empty submits 0 chunks
+
+
+@pytest.mark.parametrize("ring", [1, 3, 7])
+def test_partner_store_roundtrip_odd_rings(ring):
+    ps = PartnerMemoryStore(range(ring), redundancy=2)
+    ps.submit(1, _state(1.0), {"r": ring})
+    # striping reaches (essentially) the whole ring even for small states
+    assert ps.last_chunked.n_chunks >= ring - 1
+    step, state, meta = ps.load(_tmpl())
+    assert step == 1 and meta["r"] == ring
+    assert np.array_equal(state["params"]["w"], _state(1.0)["params"]["w"])
+
+
+def test_partner_store_empty_and_scalar_states():
+    ps = PartnerMemoryStore(range(4))
+    ps.submit(1, {}, {"empty": True})
+    step, state, meta = ps.load({})
+    assert (step, state, meta["empty"]) == (1, {}, True)
+    scalars = {"s": np.float64(2.5), "n": np.int32(7)}
+    ps.submit(2, scalars)
+    step, state, _ = ps.load({"s": np.float64(0.0), "n": np.int32(0)})
+    assert step == 2 and float(state["s"]) == 2.5 and int(state["n"]) == 7
+
+
+# ---------------------------------------------------------------------------
+# delta encoding
+# ---------------------------------------------------------------------------
+
+
+def test_delta_zero_and_codec_chunks_reconstruct_exactly():
+    enc = DeltaEncoder("bf16")
+    b1 = flatten_with_paths(_state(1.0))
+    b2 = flatten_with_paths(_state(1.5))
+    enc.encode(chunk_blob(b1, 256))
+    cb2 = enc.encode(chunk_blob(b2, 256))
+    assert cb2.moved_bytes < cb2.total_bytes  # something delta-encoded
+    out = cb2.to_blob()
+    assert all(np.array_equal(out[k], b2[k]) for k in b2)  # bit-identical
+    cb3 = enc.encode(chunk_blob({k: v.copy() for k, v in b2.items()}, 256))
+    assert cb3.moved_bytes == 0  # unchanged resubmit ships nothing
+    assert all(c.encoding == "zero" for c in cb3.chunks)
+
+
+def test_delta_falls_back_to_raw_when_not_exact():
+    """A delta the codec cannot reproduce byte-exactly must ship raw - the
+    per-chunk verification, not luck, guarantees bit-identical restores."""
+    rng = np.random.default_rng(0)
+    enc = DeltaEncoder("int8")
+    b1 = {"w": rng.standard_normal(64).astype(np.float32)}
+    b2 = {"w": b1["w"] + rng.standard_normal(64).astype(np.float32) * 1e-3}
+    enc.encode(chunk_blob(b1, 256))
+    cb2 = enc.encode(chunk_blob(b2, 256))
+    assert all(c.encoding == "raw" for c in cb2.chunks)
+    assert np.array_equal(cb2.to_blob()["w"], b2["w"])
+
+
+def test_delta_layout_change_resets_reference():
+    enc = DeltaEncoder("bf16")
+    enc.encode(chunk_blob({"w": np.ones(32, np.float32)}, 64))
+    cb = enc.encode(chunk_blob({"w": np.ones(32, np.float32)}, 128))  # re-chunked
+    assert all(c.encoding == "raw" for c in cb.chunks)  # full submit
+    cb2 = enc.encode(chunk_blob({"w": np.ones(32, np.float32)}, 128))
+    assert all(c.encoding == "zero" for c in cb2.chunks)  # reference rebuilt
+
+
+def test_delta_submit_across_ring_shrink_purges_stale_placement():
+    """Replay resubmits a step after the ring shrank: the old placement is
+    purged, the re-chunked submit ships full (layout changed), the restore
+    is bit-identical, and delta encoding resumes on the next submit."""
+    plane = TransferPlane(delta="bf16", pipeline=False)
+    ps = PartnerMemoryStore(range(5), xfer=plane, keep=4)  # odd ring
+    ps.submit(6, _state(1.0))
+    ps.submit(7, _state(1.5))
+    assert ps.last_chunked.moved_bytes < ps.last_chunked.total_bytes
+    ps.on_failure([0])
+    ps.submit(7, _state(2.0))  # recrossed step 7 on the 4-peer ring
+    cb = ps.last_chunked
+    assert all(c.encoding == "raw" for c in cb.chunks)  # reference reset
+    # stale placement purged: no peer holds a step-7 chunk beyond the new
+    # chunk count, and nothing lives on the dead peer
+    assert 0 not in ps._mem
+    for m in ps._mem.values():
+        assert all(ci < cb.n_chunks for (s, ci) in m if s == 7)
+    step, state, _ = ps.load(_tmpl())
+    assert step == 7
+    assert np.array_equal(state["params"]["w"], _state(2.0)["params"]["w"])
+    assert np.array_equal(state["opt"]["nu"], _state(2.0)["opt"]["nu"])
+    ps.submit(8, _state(2.5))  # delta chain restarts against the new ref
+    assert ps.last_chunked.moved_bytes < ps.last_chunked.total_bytes
+
+
+# ---------------------------------------------------------------------------
+# the async stager / pipelined ladder submit
+# ---------------------------------------------------------------------------
+
+
+def test_stager_orders_and_drains():
+    st = AsyncStager(depth=2)
+    acc = []
+    for i in range(6):
+        st.submit(lambda i=i: acc.append(i))
+    st.drain()
+    assert acc == list(range(6))  # FIFO, single worker
+
+
+def test_stager_backpressure_bounded_by_depth():
+    st = AsyncStager(depth=2)
+    gate = threading.Event()
+    third_submitted = threading.Event()
+    st.submit(gate.wait)  # running
+    st.submit(lambda: None)  # queued
+    t = threading.Thread(
+        target=lambda: (st.submit(lambda: None), third_submitted.set()),
+        daemon=True,
+    )
+    t.start()
+    time.sleep(0.05)
+    assert not third_submitted.is_set()  # blocked: both buffers in flight
+    gate.set()
+    t.join(5)
+    assert third_submitted.is_set()
+    st.drain()
+
+
+def test_stager_propagates_errors_on_drain():
+    st = AsyncStager()
+    st.submit(lambda: (_ for _ in ()).throw(RuntimeError("torn")))
+    with pytest.raises(RuntimeError, match="torn"):
+        st.drain()
+    st.submit(lambda: None)  # usable after the error surfaced
+    st.drain()
+
+
+def test_ladder_submit_async_captures_before_return():
+    """The capture-before-return contract survives pipelining: mutable
+    numpy leaves are copied synchronously, so in-place mutation right
+    after submit_async must not leak into the snapshot."""
+    slow = threading.Event()
+
+    class SlowStore(PartnerMemoryStore):
+        def submit_blob(self, step, blob, meta=None):
+            slow.wait(5)  # stage AFTER the caller mutated
+            super().submit_blob(step, blob, meta)
+
+    ladder = RecoveryLadder([SlowStore(range(4))])
+    state = {"w": np.zeros(8)}
+    ladder.submit_async(1, state, {})
+    state["w"][:] = 9.0  # the program's next step mutates in place
+    slow.set()
+    ladder.drain()
+    _, got, _ = ladder.store(1).load({"w": np.zeros(8)})
+    assert np.array_equal(got["w"], np.zeros(8)), "mutation leaked into snapshot"
+
+
+def test_capture_tree_copies_only_mutable_leaves():
+    arr = np.arange(4.0)
+    cap = capture_tree({"a": arr, "b": 3, "c": "s"})
+    arr[:] = -1.0
+    assert np.array_equal(cap["a"], [0.0, 1.0, 2.0, 3.0])
+    assert cap["b"] == 3 and cap["c"] == "s"
+
+
+# ---------------------------------------------------------------------------
+# fine-grained placement locking (the contention satellite, deterministic)
+# ---------------------------------------------------------------------------
+
+
+def test_load_completes_while_submit_stalled_mid_placement():
+    """With the old whole-submit global lock a load had to wait out the
+    entire placement; per-chunk placement keeps metadata critical sections
+    O(1), so a load serves an older step while a submit is stalled halfway
+    through striping (gated by events - no timing assumptions)."""
+
+    class Stalled(PartnerMemoryStore):
+        gate = threading.Event()
+        mid_placement = threading.Event()
+
+        def _store_chunk(self, peer, key, chunk):
+            if key[0] == 2 and not self.mid_placement.is_set():
+                self.mid_placement.set()
+                assert self.gate.wait(10)
+            super()._store_chunk(peer, key, chunk)
+
+    ps = Stalled(range(8))
+    ps.submit(1, _state(1.0), {"ok": 1})
+    t = threading.Thread(target=lambda: ps.submit(2, _state(2.0)), daemon=True)
+    t.start()
+    assert ps.mid_placement.wait(10)
+    # submit 2 is mid-placement and will hold there until gated onward
+    got = ps.load(_tmpl())
+    assert got is not None and got[0] == 1 and got[2]["ok"] == 1
+    assert t.is_alive()  # the submit really was still in flight
+    Stalled.gate.set()
+    t.join(10)
+    assert ps.load(_tmpl())[0] == 2
+
+
+# ---------------------------------------------------------------------------
+# digest verification (the fused checksum kernel path)
+# ---------------------------------------------------------------------------
+
+
+def test_tree_digests_catch_chunk_local_corruption():
+    """The old global abs-sum averaged a big tree's corruption away; the
+    per-chunk digest localizes it. Chunk size 128 floats -> the two trees
+    differ in exactly one digest row."""
+    a = {"w": np.ones(1024, np.float32)}
+    b = {"w": np.ones(1024, np.float32)}
+    b["w"][700] += 1e-3
+    da = tree_digests(a, chunk_elems=128)
+    db = tree_digests(b, chunk_elems=128)
+    assert da.shape == (8, 2)
+    differing = np.any(np.abs(da - db) > 0, axis=1)
+    assert differing.sum() == 1 and differing[700 // 128]
+    assert not verify_tree(a, b, chunk_elems=128)
+    assert verify_tree(a, {"w": np.ones(1024, np.float32)}, chunk_elems=128)
+
+
+def test_tree_digests_sign_column_catches_compensating_flips():
+    """Two opposite-sign flips keep the abs-sum column constant; the plain
+    sum column moves."""
+    a = {"w": np.arange(1.0, 9.0, dtype=np.float32)}
+    b = {"w": a["w"].copy()}
+    b["w"][1] *= -1.0
+    b["w"][2] *= -1.0
+    assert not verify_tree(a, b)
+
+
+def test_verify_tree_empty_and_scalar_trees():
+    assert verify_tree({}, {})
+    assert not verify_tree({}, {"x": np.ones(2)})  # shape mismatch
+    assert verify_tree({"s": np.float32(2.0)}, {"s": np.float32(2.0)})
+    assert not verify_tree({"s": np.float32(2.0)}, {"s": np.float32(3.0)})
+
+
+def test_verify_tree_all_empty_leaves():
+    """Leaves can be zero-size arrays: the digest stream is then empty and
+    verification must not crash (0 chunks, trivially equal)."""
+    a = {"x": np.zeros((0,), np.float32)}
+    assert tree_digests(a).shape == (0, 2)
+    assert verify_tree(a, {"x": np.zeros((0,), np.float32)})
