@@ -115,6 +115,39 @@ for rdeg in %(degrees)s:
                                 "mode": mode, "n_comp": world.topo.n_comp,
                                 "sec": t + sub_s, "step_sec": t,
                                 "submit_sec": sub_s})
+            # durable snapshot path: per-iteration disk bytes, full
+            # self-contained dirs vs on-disk delta chains (consecutive
+            # failure-free submits of an unchanged state are the delta
+            # plane's best case: everything ships as zero chunks)
+            dd = os.environ.get("BENCH_DURABLE_DELTA", "none")
+            if dd != "none":
+                import tempfile
+                from repro.store import DurableStore
+
+                iters = max(REPS, 4)
+                for variant, ds in (
+                    ("ckpt_durable_full",
+                     DurableStore(tempfile.mkdtemp(), keep=3)),
+                    ("ckpt_durable_delta",
+                     DurableStore(tempfile.mkdtemp(), keep=3, delta=dd)),
+                ):
+                    lad = RecoveryLadder([ds])
+                    subs = []
+                    for i in range(iters):
+                        out = step(params, opt_state, batch)
+                        jax.block_until_ready(out[2]["loss"])
+                        t0 = time.perf_counter()
+                        lad.submit_async(i, state, {})
+                        subs.append(time.perf_counter() - t0)
+                    lad.drain()
+                    sub_s = float(np.median(subs))
+                    results.append({"app": "lm_train+" + variant,
+                                    "rdegree": rdeg, "mode": mode,
+                                    "n_comp": world.topo.n_comp,
+                                    "sec": t + sub_s, "step_sec": t,
+                                    "submit_sec": sub_s,
+                                    "bytes_written": ds.io_bytes_total,
+                                    "bytes_per_iter": ds.io_bytes_total // iters})
         if TINY:
             continue
         # --- mini-apps, built + dispatched through the repro.ft session ---
@@ -132,7 +165,8 @@ print("RESULTS_JSON:" + json.dumps(results))
 """
 
 
-def run(degrees=None, mode: str = "paper", reps: int = 5, tiny: bool = False):
+def run(degrees=None, mode: str = "paper", reps: int = 5, tiny: bool = False,
+        durable_delta: str = "none"):
     if tiny:
         degrees = degrees or [0.0, 0.5]
         reps = min(reps, 2)
@@ -145,6 +179,7 @@ def run(degrees=None, mode: str = "paper", reps: int = 5, tiny: bool = False):
     env["BENCH_MODE"] = mode
     env["BENCH_REPS"] = str(reps)
     env["BENCH_TINY"] = "1" if tiny else "0"
+    env["BENCH_DURABLE_DELTA"] = durable_delta
     code = textwrap.dedent(_CHILD % {"degrees": degrees})
     proc = subprocess.run(
         [sys.executable, "-c", code], capture_output=True, text=True, env=env,
@@ -167,6 +202,8 @@ def rows(results):
         if "step_sec" in r:
             ov = (r["sec"] / r["step_sec"] - 1.0) * 100.0
             d = f"submit_overhead={ov:+.1f}%"
+            if "bytes_per_iter" in r:
+                d += f" bytes_per_iter={r['bytes_per_iter']}"
         else:
             ov = (r["sec"] / base[r["app"]] - 1.0) * 100.0 if r["app"] in base else 0.0
             d = f"overhead={ov:+.1f}%"
@@ -181,10 +218,13 @@ if __name__ == "__main__":
     import sys as _s
 
     sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
-    from perf_json import update_perf_json
+    from perf_json import pop_durable_delta, update_perf_json
 
-    args = [a for a in _s.argv[1:] if not a.startswith("--")]
-    res = run(mode=args[0] if args else "paper", tiny="--tiny" in _s.argv)
+    argv = list(_s.argv[1:])
+    dd = pop_durable_delta(argv)
+    args = [a for a in argv if not a.startswith("--")]
+    res = run(mode=args[0] if args else "paper", tiny="--tiny" in argv,
+              durable_delta=dd)
     update_perf_json("failure_free", res)
     for name, us, d in rows(res):
         print(f"{name},{us:.0f},{d}")

@@ -37,3 +37,19 @@ def update_perf_json(section: str, payload: Any, path: str = PATH) -> str:
 def rows_payload(rows) -> list:
     """The common ``(name, us, derived)`` row triple as JSON records."""
     return [{"name": n, "us": round(us, 1), "derived": d} for n, us, d in rows]
+
+
+def pop_durable_delta(argv: list) -> str:
+    """Consume ``--durable-delta <codec>`` from ``argv`` (shared by the
+    benchmark mains; removed in place so positional args stay clean).
+    Exits with a usage error on a missing or unknown codec."""
+    import sys
+
+    if "--durable-delta" not in argv:
+        return "none"
+    i = argv.index("--durable-delta")
+    if i + 1 >= len(argv) or argv[i + 1] not in ("bf16", "int8"):
+        sys.exit("--durable-delta needs a codec: bf16 | int8")
+    dd = argv[i + 1]
+    del argv[i : i + 2]
+    return dd

@@ -12,6 +12,11 @@ Measures, with real state sizes on the simulated cluster:
                    pre-xfer path: one global lock, no overlap) vs the
                    transfer plane's striped + pipelined path (the paper's
                    Sec. V message splitting; must be >= 2x faster)
+- durable-delta  : (with ``--durable-delta bf16|int8``) bytes a close-
+                   consecutive-submit cadence writes to disk, full
+                   self-contained snapshots vs on-disk delta chains
+                   (must shed >= 2x), plus the chain-restore cost and
+                   its dirs-read bound
 - pair-death     : BOTH members of a mirrored pair killed mid-run; recovery
                    must come from the striped level-1 redundancy (the
                    scenario the old single-partner copy could not survive)
@@ -107,6 +112,51 @@ assert speedup >= 2.0, f"striped+pipelined submit only {{speedup:.1f}}x faster"
 results.append({{"path": "l1-submit/speedup", "restore_s": 0.0,
                 "speedup": speedup}})
 
+# durable delta chains: close consecutive submits (each tick perturbs a
+# small slice of the real trainer state - the fine-cadence / sparse-update
+# regime ReStore's sub-block reuse targets) written as full snapshots vs
+# on-disk delta chains; the chain restore must stay byte-identical to the
+# full-snapshot restore, read <= max_chain dirs, and shed >= 2x the bytes
+DD = {durable_delta!r}
+if DD != "none":
+    from repro.store import flatten_with_paths
+    from repro.xfer import TransferPlane
+
+    wstate = jax.tree.map(np.array, state)  # writable host copies
+    big = max(jax.tree.leaves(wstate), key=lambda a: a.nbytes)
+    ticks = 6 if TINY else 10
+    full_ds = DurableStore(tempfile.mkdtemp(), keep=ticks + 1)
+    delta_ds = DurableStore(tempfile.mkdtemp(), keep=ticks + 1, delta=DD,
+                            max_chain=4,
+                            xfer=TransferPlane(chunk_bytes=64 * 1024))
+    for i in range(ticks):
+        big.reshape(-1)[i * 512 : (i + 1) * 512] += 1.0 / 64.0
+        for ds in (full_ds, delta_ds):
+            ds.submit(10 + i, wstate, {{"tick": i}})
+    for ds in (full_ds, delta_ds):
+        ds.wait()
+    t0 = time.perf_counter(); got_full = full_ds.load(template)
+    full_load_s = time.perf_counter() - t0
+    t0 = time.perf_counter(); got_delta = delta_ds.load(template)
+    delta_load_s = time.perf_counter() - t0
+    assert got_full is not None and got_delta is not None
+    assert got_full[0] == got_delta[0] == 10 + ticks - 1
+    fb, db = flatten_with_paths(got_full[1]), flatten_with_paths(got_delta[1])
+    assert set(fb) == set(db) and all(
+        np.array_equal(fb[k], db[k]) for k in fb
+    ), "delta-chain restore diverged from the full-snapshot restore"
+    assert delta_ds.last_restore_dirs <= 4, delta_ds.last_restore_dirs
+    ratio = full_ds.io_bytes_total / max(delta_ds.io_bytes_total, 1)
+    assert ratio >= 2.0, f"durable delta chains only {{ratio:.1f}}x fewer bytes"
+    results.append({{"path": "durable-delta/full", "restore_s": full_load_s,
+                    "bytes_written": full_ds.io_bytes_total, "bytes": nbytes}})
+    results.append({{"path": "durable-delta/delta", "restore_s": delta_load_s,
+                    "bytes_written": delta_ds.io_bytes_total,
+                    "restore_dirs": delta_ds.last_restore_dirs,
+                    "bytes": nbytes}})
+    results.append({{"path": "durable-delta/savings", "restore_s": 0.0,
+                    "bytes_ratio": ratio}})
+
 # restart path: unreplicated loss -> ladder restore + replay
 sim2 = SimCluster(cfg, n_slices=N, model_shards=1, rdegree=0.0, seq_len=32,
                   checkpoint_dir=tempfile.mkdtemp(), checkpoint_every=2)
@@ -144,15 +194,16 @@ print("RESULTS_JSON:" + json.dumps(results))
 """
 
 
-def run(tiny: bool = False):
+def run(tiny: bool = False, durable_delta: str = "none"):
     env = dict(os.environ)
     n = 4 if tiny else 8
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
     env["PYTHONPATH"] = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src")
     )
+    code = _CHILD.format(tiny=tiny, durable_delta=durable_delta)
     proc = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(_CHILD.format(tiny=tiny))],
+        [sys.executable, "-c", textwrap.dedent(code)],
         capture_output=True, text=True, env=env, timeout=2000,
     )
     if proc.returncode != 0:
@@ -173,6 +224,12 @@ def rows(results):
                 extra += f" drain_us={r['drain_s'] * 1e6:.0f}"
         if "speedup" in r:
             extra = f"speedup={r['speedup']:.1f}x"
+        if "bytes_written" in r:
+            extra = f"bytes_written={r['bytes_written']}"
+            if "restore_dirs" in r:
+                extra += f" restore_dirs={r['restore_dirs']}"
+        if "bytes_ratio" in r:
+            extra = f"bytes_ratio={r['bytes_ratio']:.1f}x"
         if "heal_clone_s" in r:
             extra = (f"heal_clone_us={r['heal_clone_s'] * 1e6:.0f} "
                      f"healed={r['healed']} replaced={r['replaced_steps']}")
@@ -182,10 +239,11 @@ def rows(results):
 
 if __name__ == "__main__":
     sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
-    from perf_json import update_perf_json
+    from perf_json import pop_durable_delta, update_perf_json
 
+    dd = pop_durable_delta(sys.argv)
     tiny = "--tiny" in sys.argv
-    results = run(tiny=tiny)
+    results = run(tiny=tiny, durable_delta=dd)
     update_perf_json("recovery", results)
     for name, us, d in rows(results):
         print(f"{name},{us:.0f},{d}")

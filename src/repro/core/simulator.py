@@ -75,6 +75,8 @@ class SimCluster(ResilientProgram):
         delta: str = "none",
         chunk_bytes: int = 0,
         pipeline: bool = True,
+        durable_delta: str = "none",
+        durable_max_chain: int = 4,
     ):
         self.model_cfg = model_cfg
         self.repl = ReplicationConfig(rdegree=rdegree, collective_mode=collective_mode)
@@ -93,14 +95,25 @@ class SimCluster(ResilientProgram):
         # recovery-state plane: level-1 K-way partner memory over the slice
         # hosts, plus level-2 durable when a directory is given; all levels
         # share one repro.xfer transfer plane (striping / pipelined async
-        # submit / optional verified-exact delta encoding)
+        # submit / optional verified-exact delta encoding). ``durable_delta``
+        # turns on the ON-DISK delta chains (ref-counted GC, restore depth
+        # capped at ``durable_max_chain`` step dirs) independently of the
+        # memory levels' ``delta`` codec.
         if stores is not None:
-            assert delta == "none" and not chunk_bytes and pipeline, (
-                "delta/chunk_bytes/pipeline configure the default ladder's "
-                "TransferPlane; an explicit stores= ladder carries its own - "
-                "pass RecoveryLadder(..., xfer=TransferPlane(...)) instead"
+            assert (
+                delta == "none" and durable_delta == "none"
+                and not chunk_bytes and pipeline
+            ), (
+                "delta/durable_delta/chunk_bytes/pipeline configure the "
+                "default ladder; an explicit stores= ladder carries its own - "
+                "pass RecoveryLadder(..., xfer=TransferPlane(...)) and "
+                "DurableStore(..., delta=...) instead"
             )
         if stores is None:
+            assert durable_delta == "none" or checkpoint_dir, (
+                "durable_delta configures the on-disk DurableStore - it "
+                "needs checkpoint_dir, or the flag silently stores nothing"
+            )
             xfer = TransferPlane(
                 **({"chunk_bytes": chunk_bytes} if chunk_bytes else {}),
                 delta=delta,
@@ -110,7 +123,10 @@ class SimCluster(ResilientProgram):
                 PartnerMemoryStore(range(n_slices), redundancy=partner_redundancy)
             ]
             if checkpoint_dir:
-                levels.append(DurableStore(checkpoint_dir))
+                levels.append(DurableStore(
+                    checkpoint_dir, delta=durable_delta,
+                    max_chain=durable_max_chain,
+                ))
             stores = RecoveryLadder(levels, xfer=xfer)
 
         # the session owns the entire ULFM lifecycle; FTSession.__init__

@@ -275,7 +275,12 @@ class FTSession:
         if got is None:
             return None
         self.program.restore(got.state, got.meta)
-        self.report.restored_from.append(f"L{got.level}:{got.store}@step{got.step}")
+        # e.g. "L2:durable@step8[chain:3]" when the durable rung resolved
+        # an on-disk delta chain across 3 step dirs
+        tag = f"L{got.level}:{got.store}@step{got.step}"
+        if got.detail:
+            tag += f"[{got.detail}]"
+        self.report.restored_from.append(tag)
         return got.step
 
     # ------------------------------------------------------------------

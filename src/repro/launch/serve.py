@@ -36,6 +36,17 @@ def main() -> None:
                     help="delta-encode KV snapshot chunks against the previous "
                          "submit (repro.xfer; a mostly-append cache then ships "
                          "mostly zero chunks)")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="stack a durable rung under the KV-snapshot ladder "
+                         "so decode state survives process death")
+    ap.add_argument("--durable-delta", default="none",
+                    choices=["none", "bf16", "int8"],
+                    help="on-disk delta chains for the durable rung: the "
+                         "append-only cache's unchanged chunks ship nothing "
+                         "(ref-counted GC, bounded chain restore)")
+    ap.add_argument("--durable-max-chain", type=int, default=4,
+                    help="max step dirs a durable delta-chain restore reads "
+                         "before a full self-contained snapshot is forced")
     ap.add_argument("--heal", default="none",
                     help="re-replication policy (repro.heal): none | eager | "
                          "deferred:K")
@@ -70,6 +81,9 @@ def main() -> None:
         snapshot_every=args.snapshot_every,
         partner_redundancy=args.redundancy,
         delta=args.delta,
+        checkpoint_dir=args.checkpoint_dir or None,
+        durable_delta=args.durable_delta,
+        durable_max_chain=args.durable_max_chain,
     )
     print(
         f"serving {model.name}: {eng.world.topo.n_comp} cmp + "

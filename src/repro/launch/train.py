@@ -41,6 +41,16 @@ def main() -> None:
                     help="delta-encode snapshot chunks against the previous "
                          "submit (repro.xfer; verified byte-exact per chunk, "
                          "restores stay bit-identical)")
+    ap.add_argument("--durable-delta", default="none",
+                    choices=["none", "bf16", "int8"],
+                    help="extend delta encoding to the DurableStore: "
+                         "step dirs ship only changed chunks + a manifest "
+                         "referencing base chunks, with ref-counted GC and "
+                         "a full snapshot forced every --durable-max-chain "
+                         "submits (needs --checkpoint-dir)")
+    ap.add_argument("--durable-max-chain", type=int, default=4,
+                    help="max step dirs a durable delta-chain restore reads "
+                         "before a full self-contained snapshot is forced")
     ap.add_argument("--chunk-kib", type=int, default=0,
                     help="transfer-plane stripe size in KiB (0 = default 1024)")
     ap.add_argument("--no-pipeline", dest="pipeline", action="store_false",
@@ -99,6 +109,8 @@ def main() -> None:
         delta=args.delta,
         chunk_bytes=args.chunk_kib * 1024,
         pipeline=args.pipeline,
+        durable_delta=args.durable_delta,
+        durable_max_chain=args.durable_max_chain,
     )
     print(
         f"world: {sim.world.topo.n_comp} computational + {sim.world.topo.n_rep} "

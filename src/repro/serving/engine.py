@@ -43,7 +43,7 @@ from repro.dist.sharding import (
 )
 from repro.ft import FailureSchedule, FTReport, FTSession, ResilientProgram
 from repro.models import model as M
-from repro.store import PartnerMemoryStore, RecoveryLadder
+from repro.store import DurableStore, PartnerMemoryStore, RecoveryLadder
 from repro.xfer import TransferPlane
 
 
@@ -82,6 +82,9 @@ class ServeEngine(ResilientProgram):
         partner_redundancy: int = 2,
         stores: Optional[RecoveryLadder] = None,
         delta: str = "none",
+        checkpoint_dir: Optional[str] = None,
+        durable_delta: str = "none",
+        durable_max_chain: int = 4,
     ):
         self.model_cfg = model_cfg
         self.repl = ReplicationConfig(rdegree=rdegree)
@@ -99,17 +102,29 @@ class ServeEngine(ResilientProgram):
         # repro.xfer plane, so a snapshot survives losses that take live
         # caches with them; KV snapshots pipeline behind decode steps, and
         # ``delta`` encodes a mostly-append cache cheaply (rows past the
-        # decode position never change -> zero chunks)
-        assert delta == "none" or (stores is None and snapshot_every), (
-            "delta configures the default snapshot ladder's TransferPlane: "
-            "it needs snapshot_every > 0, and an explicit stores= ladder "
-            "carries its own plane (RecoveryLadder(..., xfer=...))"
+        # decode position never change -> zero chunks). ``checkpoint_dir``
+        # stacks a durable rung under the memory level so the decode state
+        # survives whole-process death too; ``durable_delta`` puts the
+        # append-only cache's zero chunks on disk as delta chains instead
+        # of full snapshots every cadence tick.
+        assert (delta == "none" and durable_delta == "none"
+                and checkpoint_dir is None) or (stores is None and snapshot_every), (
+            "delta/durable_delta/checkpoint_dir configure the default "
+            "snapshot ladder: they need snapshot_every > 0, and an explicit "
+            "stores= ladder carries its own plane/levels"
         )
         if stores is None and snapshot_every:
-            stores = RecoveryLadder(
-                [PartnerMemoryStore(range(n_slices), redundancy=partner_redundancy)],
-                xfer=TransferPlane(delta=delta),
+            assert durable_delta == "none" or checkpoint_dir, (
+                "durable_delta configures the on-disk DurableStore - it "
+                "needs checkpoint_dir, or the flag silently stores nothing"
             )
+            levels = [
+                PartnerMemoryStore(range(n_slices), redundancy=partner_redundancy)
+            ]
+            if checkpoint_dir:
+                levels.append(DurableStore(checkpoint_dir, delta=durable_delta,
+                                           max_chain=durable_max_chain))
+            stores = RecoveryLadder(levels, xfer=TransferPlane(delta=delta))
 
         self.session = FTSession(
             self,

@@ -11,7 +11,8 @@ level  backend                  survives
 0      :class:`LiveCloneStore`  nothing beyond its host - O(memcpy) restore
 1      :class:`PartnerMemoryStore` any failure leaving >= 1 holder per shard
                                 (K-way ReStore-style redundancy)
-2      :class:`DurableStore`    job teardown (npz + manifest, atomic)
+2      :class:`DurableStore`    job teardown (npz + manifest, atomic;
+                                optional ref-counted on-disk delta chains)
 ====== ======================== ============================================
 
 Paper mapping: level 1 is Sec. III-A's partner replica memory generalized

@@ -11,7 +11,8 @@ paper's recovery model assumes (Sec. III-A / VI):
 - level 1 ``PartnerMemoryStore`` - host-memory snapshots sharded K-way
   across surviving slices (ReStore-style redundancy);
 - level 2 ``DurableStore``      - serialized npz + manifest on disk,
-  double-buffered async writes, atomic publish.
+  double-buffered async writes, atomic publish, optional ref-counted
+  on-disk delta chains with a bounded restore depth.
 
 A store holds ``(step, state, meta)`` snapshots. ``state`` is any pytree;
 serializing backends flatten it with :func:`flatten_with_paths` and

@@ -36,6 +36,9 @@ class RestoreAttempt:
     step: Optional[int] = None
     seconds: float = 0.0
     error: str = ""
+    #: backend-specific resolution note (e.g. the durable delta plane's
+    #: "chain:3" - how many step dirs the chain restore read)
+    detail: str = ""
 
 
 @dataclass
@@ -48,6 +51,7 @@ class LadderRestore:
     state: PyTree
     meta: Dict
     attempts: List[RestoreAttempt] = field(default_factory=list)
+    detail: str = ""
 
 
 class RecoveryLadder:
@@ -156,11 +160,13 @@ class RecoveryLadder:
                 ))
                 continue
             rstep, state, meta = got
+            detail = str(getattr(s, "last_restore_info", "") or "")
             self.attempts.append(RestoreAttempt(
-                level=s.level, store=s.name, ok=True, step=rstep, seconds=dt
+                level=s.level, store=s.name, ok=True, step=rstep, seconds=dt,
+                detail=detail,
             ))
             return LadderRestore(
                 level=s.level, store=s.name, step=rstep, state=state,
-                meta=meta, attempts=list(self.attempts),
+                meta=meta, attempts=list(self.attempts), detail=detail,
             )
         return None

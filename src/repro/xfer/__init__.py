@@ -17,10 +17,18 @@ from repro.xfer.chunking import (
     LeafSpec,
     chunk_blob,
     chunk_count,
+    layout_from_json,
+    layout_to_json,
     size_for_chunks,
     stripe_holders,
 )
-from repro.xfer.delta import DeltaEncoder, decode_delta, encode_delta
+from repro.xfer.delta import (
+    DeltaEncoder,
+    decode_delta,
+    encode_delta,
+    payload_from_parts,
+    payload_parts,
+)
 from repro.xfer.digest import digests_match, tree_digests, verify_tree
 from repro.xfer.plane import (
     DEFAULT_CHUNK_BYTES,
@@ -44,6 +52,10 @@ __all__ = [
     "decode_delta",
     "digests_match",
     "encode_delta",
+    "layout_from_json",
+    "layout_to_json",
+    "payload_from_parts",
+    "payload_parts",
     "size_for_chunks",
     "stage_tree",
     "stripe_holders",

@@ -135,6 +135,24 @@ class ChunkedBlob:
         return out
 
 
+def layout_to_json(layout: Sequence[LeafSpec]) -> List[Dict]:
+    """A layout as JSON-able records (the durable delta manifests persist
+    the chunking layout so a restore can validate the chain against it)."""
+    return [
+        {"path": s.path, "dtype": s.dtype, "shape": list(s.shape),
+         "nbytes": s.nbytes}
+        for s in layout
+    ]
+
+
+def layout_from_json(rows: Sequence[Dict]) -> Tuple[LeafSpec, ...]:
+    return tuple(
+        LeafSpec(r["path"], r["dtype"], tuple(int(d) for d in r["shape"]),
+                 int(r["nbytes"]))
+        for r in rows
+    )
+
+
 def leaf_bytes(arr: np.ndarray) -> np.ndarray:
     """A leaf's raw bytes as a flat uint8 view (copy only if non-contiguous
     or 0-d)."""

@@ -19,7 +19,7 @@ the check ships raw. A layout change (ring shrink re-chunking, a new
 state shape) resets the reference - the next submit is full."""
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -54,6 +54,35 @@ def decode_delta(chunk: Chunk) -> np.ndarray:
     return (_as_f32(chunk.ref) + delta).view(np.uint8)
 
 
+def payload_parts(chunk: Chunk) -> Tuple[List[np.ndarray], List[str]]:
+    """A chunk payload as raw byte parts + dtype tags, for serialization
+    to npz (``np.savez`` mangles non-native dtypes like bfloat16 to void -
+    ship uint8 views and rebuild with the recorded dtype). Scalars land as
+    shape-(1,) parts; :func:`payload_from_parts` restores the codec's
+    expected shapes."""
+    leaves = jax.tree.leaves(chunk.payload)
+    arrs = [np.asarray(l) for l in leaves]
+    parts = [
+        np.ascontiguousarray(a).reshape(-1).view(np.uint8) for a in arrs
+    ]
+    return parts, [str(a.dtype) for a in arrs]
+
+
+def payload_from_parts(encoding: str, parts: Sequence[np.ndarray],
+                       dtypes: Sequence[str]):
+    """Inverse of :func:`payload_parts` (byte-identical: the parts are
+    views, the dtypes round-trip through their registered names)."""
+    leaves = [
+        np.asarray(p).reshape(-1).view(np.uint8).view(np.dtype(d))
+        for p, d in zip(parts, dtypes)
+    ]
+    if encoding == "int8":
+        q, scale = leaves
+        return (q, scale.reshape(()))
+    assert len(leaves) == 1, (encoding, len(leaves))
+    return leaves[0]
+
+
 class DeltaEncoder:
     """Per-consumer delta state: the previous submit's raw chunk bytes.
 
@@ -68,6 +97,14 @@ class DeltaEncoder:
 
     def reset(self) -> None:
         self._sig, self._ref = None, []
+
+    def observe(self, cb: ChunkedBlob) -> None:
+        """Update the reference WITHOUT encoding: a consumer that decided
+        to ship this submit full (e.g. the durable chain-depth cap) still
+        needs the next submit to delta against it, and paying the per-chunk
+        compare + codec pass for a result it will discard is waste."""
+        self._sig = cb.layout_signature()
+        self._ref = [c.raw() for c in cb.chunks]
 
     def encode(self, cb: ChunkedBlob) -> ChunkedBlob:
         """Delta-encode ``cb`` against the previous submit (a NEW blob:

@@ -179,6 +179,18 @@ class TransferPlane:
             self._memo = (blob, size, cb)
         return cb
 
+    def chunked_cached(self, blob: Dict[str, np.ndarray], *,
+                       min_chunks: int = 1) -> ChunkedBlob:
+        """The memoized cut for ``blob`` at WHATEVER chunk size it was cut
+        (a consumer with no ring of its own - the durable level - adopts
+        the granularity the level before it striped at, sharing one pass
+        and keeping sub-block delta reuse meaningful for states smaller
+        than one default chunk); falls back to a fresh cut."""
+        with self._memo_lock:
+            if self._memo is not None and self._memo[0] is blob:
+                return self._memo[2]
+        return self.chunked(blob, min_chunks=min_chunks)
+
     # ---- delta -------------------------------------------------------------
     def delta_encoder(self) -> DeltaEncoder:
         """A fresh per-consumer delta state (stores own their reference

@@ -1,8 +1,11 @@
 """DurableStore (level 2): roundtrip, double-buffered async publish,
-keep-based GC, atomicity, and crash consistency (stale ``.tmp-*`` debris
-from a writer that died mid-checkpoint)."""
+keep-based GC, atomicity, crash consistency (stale ``.tmp-*`` debris
+from a writer that died mid-checkpoint), the torn-newest restore walk,
+and the drop/trim-vs-in-flight-writer race. On-disk delta chains live in
+``test_durable_delta.py``."""
 import json
 import os
+import threading
 
 import jax.numpy as jnp
 import numpy as np
@@ -111,3 +114,129 @@ def test_manifest_contents(tmp_path):
         man = json.load(f)
     assert man["step"] == 7 and man["meta"] == {"n_comp": 2}
     assert man["leaves"] == 3 and man["bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# the torn-newest restore walk
+# ---------------------------------------------------------------------------
+
+
+def test_load_falls_back_past_torn_newest(tmp_path):
+    """A torn NEWEST snapshot used to make load(step=None) return None,
+    skipping the whole durable rung even though older intact step dirs
+    could have served the restore; the walk must continue newest-first."""
+    ds = DurableStore(str(tmp_path), keep=5)
+    for s in (3, 5, 8):
+        ds.submit_sync(s, _state(float(s)))
+    # tear the newest: truncated npz (a disk that died mid-sector)
+    with open(os.path.join(str(tmp_path), "step-0000000008", "state.npz"), "w") as f:
+        f.write("torn bytes")
+    got = ds.load(_state(0.0))
+    assert got is not None, "torn newest must not mask older intact steps"
+    step, state, _ = got
+    assert step == 5 and float(state["params"]["w"][0, 0]) == 5.0
+    # a missing manifest tears the dir just as hard
+    os.remove(os.path.join(str(tmp_path), "step-0000000005", "manifest.json"))
+    step, state, _ = ds.load(_state(0.0))
+    assert step == 3 and float(state["params"]["w"][0, 0]) == 3.0
+    # an explicitly requested torn step still reports None
+    assert ds.load(_state(0.0), step=8) is None
+
+
+def test_load_falls_back_past_schema_drifted_newest(tmp_path):
+    """A newest dir whose leaves no longer match the restore template
+    (schema drift) is torn FOR THIS RESTORE - it must fall back, not
+    raise KeyError out of the whole durable rung."""
+    ds = DurableStore(str(tmp_path), keep=5)
+    ds.submit_sync(1, _state(1.0))
+    ds.submit_sync(2, {"params": {"renamed": jnp.ones((4, 4))}})
+    got = ds.load(_state(0.0))
+    assert got is not None and got[0] == 1
+    assert float(got[1]["params"]["w"][0, 0]) == 1.0
+
+
+def test_bfloat16_leaves_roundtrip(tmp_path):
+    """np.savez mangles non-native dtypes (bfloat16 -> void) - a bf16
+    param snapshot used to submit fine and then fail every restore."""
+    state = {"w": jnp.arange(64.0, dtype=jnp.bfloat16).reshape(8, 8),
+             "b": jnp.ones(4)}
+    ds = DurableStore(str(tmp_path))
+    ds.submit_sync(1, state)
+    got = ds.load(state)
+    assert got is not None and got[0] == 1
+    assert got[1]["w"].dtype == jnp.bfloat16
+    assert np.array_equal(
+        np.asarray(got[1]["w"]).view(np.uint8),
+        np.asarray(state["w"]).view(np.uint8),
+    )
+
+
+# ---------------------------------------------------------------------------
+# stray directory entries
+# ---------------------------------------------------------------------------
+
+
+def test_steps_skips_stray_step_entries(tmp_path):
+    """Any non-numeric ``step-*`` entry (an operator's ``step-old.bak``)
+    used to raise ValueError out of steps() and kill every restore walk."""
+    ds = DurableStore(str(tmp_path))
+    ds.submit_sync(4, _state(4.0))
+    os.makedirs(os.path.join(str(tmp_path), "step-old.bak"))
+    with open(os.path.join(str(tmp_path), "step-NOTES"), "w") as f:
+        f.write("ops scratch")
+    assert ds.steps() == [4]
+    step, state, _ = ds.load(_state(0.0))
+    assert step == 4 and float(state["params"]["w"][0, 0]) == 4.0
+    # the stray entries survive GC untouched
+    ds.submit_sync(5, _state(5.0))
+    assert os.path.exists(os.path.join(str(tmp_path), "step-old.bak"))
+
+
+# ---------------------------------------------------------------------------
+# drop/trim vs in-flight writers
+# ---------------------------------------------------------------------------
+
+
+class _GatedStore(DurableStore):
+    """Writers block until released - an event-gated slow disk."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.release = threading.Event()
+        self.entered = threading.Event()
+
+    def _write_prepared(self, job):
+        self.entered.set()
+        assert self.release.wait(timeout=30), "writer gate never released"
+        super()._write_prepared(job)
+
+
+def test_drop_cancels_inflight_writer(tmp_path):
+    """Dropping a step whose background writer is still running used to
+    let the writer republish the dir after the drop."""
+    ds = _GatedStore(str(tmp_path))
+    ds.submit(5, _state(5.0))
+    assert ds.entered.wait(timeout=30)
+    ds.drop(5)  # writer is mid-write: mark-cancelled, not republished
+    ds.release.set()
+    ds.wait()
+    assert ds.steps() == []
+    assert not os.path.exists(os.path.join(str(tmp_path), "step-0000000005"))
+
+
+def test_trim_cancels_inflight_resubmit_writer(tmp_path):
+    """Trim must also win against a writer resubmitting a step it is
+    about to discard (replay recrossed the step while disk was slow)."""
+    ds = _GatedStore(str(tmp_path), keep=5)
+    ds.release.set()
+    ds.submit_sync(1, _state(1.0))
+    ds.submit_sync(2, _state(2.0))
+    ds.release.clear()
+    ds.entered.clear()
+    ds.submit(1, _state(9.0))  # replay recrossed step 1; writer stalls
+    assert ds.entered.wait(timeout=30)
+    ds.trim(1)  # keeps only step 2: the in-flight step-1 write is void
+    ds.release.set()
+    ds.wait()
+    assert ds.steps() == [2]
+    assert not os.path.exists(os.path.join(str(tmp_path), "step-0000000001"))

@@ -1,0 +1,367 @@
+"""DurableStore on-disk delta chains.
+
+Chain restores must be byte-identical to the equivalent full-snapshot
+restores (the full-mode store is the oracle throughout), GC must never
+delete a step dir a live chain references (and must not leak dirs once a
+chain rolls past its bases), restores must read at most ``max_chain``
+step dirs, and a crash between a dir's publish and the refcount-sidecar
+update must heal at startup (the sidecar is rebuilt from manifests).
+"""
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import run_subprocess
+
+from repro.store import DurableStore, PartnerMemoryStore, RecoveryLadder, flatten_with_paths
+from repro.xfer import TransferPlane
+
+CHUNK = 4096  # small chunks so multi-chunk states exercise sub-blocking
+
+
+def _plane():
+    return TransferPlane(chunk_bytes=CHUNK)
+
+
+def _state(step: int, lo: float = 0.0):
+    """A close-consecutive-submit stream: each step perturbs one small
+    slice of a multi-chunk state, leaving most chunks byte-identical to
+    the previous step (pure function of ``step`` - any two stores fed the
+    same step see the same bytes)."""
+    w = (np.arange(8192, dtype=np.float32) / 77.0 + lo).reshape(64, 128)
+    w.reshape(-1)[(step * 97) % 7000 : (step * 97) % 7000 + 64] += step + 0.5
+    mu = np.full((32, 32), step / 8.0, dtype=np.float32)
+    return {"params": {"w": w, "b": np.arange(4.0) + step}, "opt": {"mu": mu}}
+
+
+def _tmpl():
+    return _state(0)
+
+
+def _blob_equal(a, b) -> bool:
+    fa, fb = flatten_with_paths(a), flatten_with_paths(b)
+    return set(fa) == set(fb) and all(np.array_equal(fa[k], fb[k]) for k in fa)
+
+
+def _manifest(directory, step):
+    path = os.path.join(directory, f"step-{step:010d}", "manifest.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def _dir_exists(directory, step):
+    return os.path.exists(os.path.join(directory, f"step-{step:010d}"))
+
+
+# ---------------------------------------------------------------------------
+# chain formation + byte-identical restores
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("codec", ["bf16", "int8"])
+def test_chain_restore_bit_identical_to_full(tmp_path, codec):
+    full_dir, delta_dir = str(tmp_path / "full"), str(tmp_path / "delta")
+    full = DurableStore(full_dir, keep=0, xfer=_plane())
+    delt = DurableStore(delta_dir, keep=0, delta=codec, max_chain=4,
+                        xfer=_plane())
+    for s in range(1, 7):
+        full.submit_sync(s, _state(s))
+        delt.submit_sync(s, _state(s))
+    # the stream formed actual delta dirs (not just full fallbacks)
+    formats = [_manifest(delta_dir, s)["format"] for s in range(1, 7)]
+    assert formats == ["full", "delta", "delta", "delta", "full", "delta"]
+    for s in range(1, 7):
+        gf, gd = full.load(_tmpl(), step=s), delt.load(_tmpl(), step=s)
+        assert gf is not None and gd is not None
+        assert _blob_equal(gf[1], gd[1]), f"step {s} diverged"
+    # newest-first default walk agrees too, and stays within the cap
+    gf, gd = full.load(_tmpl()), delt.load(_tmpl())
+    assert gf[0] == gd[0] == 6 and _blob_equal(gf[1], gd[1])
+    assert delt.last_restore_dirs <= 4
+    assert delt.last_restore_info.startswith("chain:")
+
+
+def test_chain_cap_bounds_restore_depth(tmp_path):
+    ds = DurableStore(str(tmp_path), keep=0, delta="bf16", max_chain=2,
+                      xfer=_plane())
+    for s in range(1, 7):
+        ds.submit_sync(s, _state(s))
+    formats = [_manifest(str(tmp_path), s)["format"] for s in range(1, 7)]
+    assert formats == ["full", "delta"] * 3
+    for s in range(1, 7):
+        assert ds.load(_tmpl(), step=s) is not None
+        assert ds.last_restore_dirs <= 2
+
+
+def test_resubmit_of_same_step_ships_full(tmp_path):
+    """Replay recrossing a checkpoint step must not delta against the dir
+    it is about to replace (a self-referencing chain)."""
+    ds = DurableStore(str(tmp_path), keep=0, delta="bf16", xfer=_plane())
+    ds.submit_sync(1, _state(1))
+    ds.submit_sync(2, _state(2))
+    assert _manifest(str(tmp_path), 2)["format"] == "delta"
+    ds.submit_sync(2, _state(2, lo=9.0))  # the recross, different bytes
+    assert _manifest(str(tmp_path), 2)["format"] == "full"
+    got = ds.load(_tmpl(), step=2)
+    assert _blob_equal(got[1], _state(2, lo=9.0))
+
+
+def test_chain_with_bfloat16_leaves_roundtrips(tmp_path):
+    """Non-native dtypes cross the chain as raw bytes (full base dirs ship
+    uint8 views + dtype tags, chunk payloads already do)."""
+    import jax.numpy as jnp
+
+    def bf_state(step):
+        s = _state(step)
+        s["params"]["h"] = jnp.full((32,), step / 4.0, dtype=jnp.bfloat16)
+        return s
+
+    ds = DurableStore(str(tmp_path), keep=0, delta="bf16", xfer=_plane())
+    for s in (1, 2, 3):
+        ds.submit_sync(s, bf_state(s))
+    assert _manifest(str(tmp_path), 3)["format"] == "delta"
+    for s in (1, 2, 3):
+        got = ds.load(bf_state(0), step=s)
+        assert got is not None
+        assert got[1]["params"]["h"].dtype == jnp.bfloat16
+        assert _blob_equal(got[1], bf_state(s)), s
+
+
+def test_layout_change_resets_chain(tmp_path):
+    ds = DurableStore(str(tmp_path), keep=0, delta="bf16", xfer=_plane())
+    ds.submit_sync(1, _state(1))
+    grown = _state(2)
+    grown["params"]["extra"] = np.ones(512, dtype=np.float32)
+    ds.submit_sync(2, grown)  # new leaf: signature mismatch, full snapshot
+    assert _manifest(str(tmp_path), 2)["format"] == "full"
+    assert _blob_equal(ds.load(grown, step=2)[1], grown)
+
+
+# ---------------------------------------------------------------------------
+# ref-counted GC
+# ---------------------------------------------------------------------------
+
+
+def test_keep_gc_preserves_chain_bases_then_collects(tmp_path):
+    """keep=1 would have deleted every base dir a live chain needs; the
+    ref closure keeps them - and collects the WHOLE chain as soon as the
+    next full snapshot makes it unreachable (no leak)."""
+    d = str(tmp_path)
+    ds = DurableStore(d, keep=1, delta="bf16", max_chain=4, xfer=_plane())
+    for s in range(1, 5):
+        ds.submit_sync(s, _state(s))
+    assert all(_dir_exists(d, s) for s in range(1, 5))  # chain alive
+    got = ds.load(_tmpl())
+    assert got[0] == 4 and _blob_equal(got[1], _state(4))
+    ds.submit_sync(5, _state(5))  # chain cap: full, old chain unreachable
+    assert _manifest(d, 5)["format"] == "full"
+    assert ds.steps() == [5]
+    assert not any(_dir_exists(d, s) for s in range(1, 5))  # no leak
+
+
+def test_drop_defers_referenced_base_dir(tmp_path):
+    d = str(tmp_path)
+    ds = DurableStore(d, keep=0, delta="bf16", xfer=_plane())
+    ds.submit_sync(1, _state(1))
+    ds.submit_sync(2, _state(2))
+    ds.drop(1)
+    assert ds.steps() == [2]  # hidden from the walk...
+    assert ds.load(_tmpl(), step=1) is None
+    assert _dir_exists(d, 1)  # ...but the dir survives: step 2 needs it
+    got = ds.load(_tmpl(), step=2)
+    assert _blob_equal(got[1], _state(2))
+    ds.drop(2)  # last referrer gone: both dirs are collectable
+    assert ds.steps() == []
+    assert not _dir_exists(d, 1) and not _dir_exists(d, 2)
+
+
+def test_trim_keeps_chain_restorable(tmp_path):
+    d = str(tmp_path)
+    ds = DurableStore(d, keep=0, delta="bf16", max_chain=4, xfer=_plane())
+    for s in range(1, 5):
+        ds.submit_sync(s, _state(s))
+    ds.trim(1)
+    assert ds.steps() == [4]
+    got = ds.load(_tmpl())
+    assert got[0] == 4 and _blob_equal(got[1], _state(4))
+
+
+# ---------------------------------------------------------------------------
+# crash consistency (satellite: publish/refcount crash window)
+# ---------------------------------------------------------------------------
+
+
+def test_crash_between_publish_and_refcount_update_heals(tmp_path):
+    """Kill between a delta dir's payload publish and the sidecar update:
+    startup rebuilds the ref graph from the published manifests, so the
+    restart neither frees the live base nor leaks the chain forever."""
+    d = str(tmp_path)
+    ds = DurableStore(d, keep=1, delta="bf16", max_chain=4, xfer=_plane())
+    ds.submit_sync(1, _state(1))
+    ds.submit_sync(2, _state(2))
+    assert _manifest(d, 2)["format"] == "delta"
+    # the crash window: dir 2 is published, the sidecar still pre-publish
+    with open(os.path.join(d, "refs.json"), "w") as f:
+        json.dump({"refs": {"1": []}, "refcounts": {}}, f)
+
+    ds2 = DurableStore(d, keep=1, delta="bf16", max_chain=4, xfer=_plane())
+    with open(os.path.join(d, "refs.json")) as f:
+        healed = json.load(f)
+    assert healed["refs"]["2"] == [1] and healed["refcounts"]["1"] == 1
+    # does not free the live base: the chain still resolves
+    got = ds2.load(_tmpl())
+    assert got[0] == 2 and _blob_equal(got[1], _state(2))
+    assert _dir_exists(d, 1)
+    # does not leak: the next full rolls the chain and collects both
+    ds2.submit_sync(3, _state(3))  # fresh encoder: self-contained
+    assert ds2.steps() == [3]
+    assert not _dir_exists(d, 1) and not _dir_exists(d, 2)
+
+
+def test_missing_base_dir_falls_back_to_older_intact_step(tmp_path):
+    """A base dir lost to a crash makes the referring delta dir torn, not
+    the whole rung: the walk serves the next intact (full) step."""
+    d = str(tmp_path)
+    ds = DurableStore(d, keep=0, delta="bf16", max_chain=3, xfer=_plane())
+    for s in range(1, 5):
+        ds.submit_sync(s, _state(s))  # 1 full, 2-3 delta, 4 full
+    assert _manifest(d, 4)["format"] == "full"
+    ds.submit_sync(5, _state(5))  # delta on 4
+    import shutil
+
+    shutil.rmtree(os.path.join(d, "step-0000000004"))  # crash ate the base
+    ds2 = DurableStore(d, keep=0, delta="bf16", xfer=_plane())
+    got = ds2.load(_tmpl())
+    assert got is not None
+    assert got[0] == 3 and _blob_equal(got[1], _state(3))
+
+
+# ---------------------------------------------------------------------------
+# ladder integration: the L2 rung serves a chain when L1 lost coverage
+# ---------------------------------------------------------------------------
+
+
+def test_ladder_restores_from_delta_chain_with_detail(tmp_path):
+    plane = _plane()
+    ps = PartnerMemoryStore(range(4), redundancy=2)
+    ds = DurableStore(str(tmp_path), keep=0, delta="bf16", max_chain=4)
+    ladder = RecoveryLadder([ps, ds], xfer=plane)
+    for s in range(1, 4):
+        ladder.submit(s, _state(s))
+    ladder.wait()
+    assert _manifest(str(tmp_path), 3)["format"] == "delta"
+    ladder.on_failure([0, 1, 2, 3])  # every L1 holder died with its host
+    got = ladder.restore(_tmpl())
+    assert got is not None and (got.level, got.step) == (2, 3)
+    assert got.detail.startswith("chain:")  # surfaces in restored_from
+    assert _blob_equal(got.state, _state(3))
+
+
+# ---------------------------------------------------------------------------
+# subprocess integration (slow): a real engine restoring THROUGH a chain
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_serving_restore_from_durable_delta_chain_bit_identical():
+    """The append-only KV cache is the regime on-disk delta chains target:
+    snapshot dirs past the first are delta (rows beyond the decode position
+    ship as zero chunks). An unmirrored slice loss must restore through the
+    chain - the only rung in this ladder is the delta-mode DurableStore -
+    and re-decode bit-identically to the failure-free run."""
+    out = run_subprocess(
+        """
+        import json, os, tempfile
+        import numpy as np
+        from repro.configs.registry import smoke_config
+        from repro.serving.engine import ServeEngine
+        from repro.store import DurableStore, RecoveryLadder
+        from repro.xfer import TransferPlane
+
+        cfg = smoke_config("qwen2.5-3b")
+        a = ServeEngine(cfg, n_slices=4, model_shards=1, rdegree=0.0,
+                        max_len=64)
+        ta = a.decode(12)
+
+        ckdir = tempfile.mkdtemp()
+        stores = RecoveryLadder(
+            [DurableStore(ckdir, delta="bf16", max_chain=4)],
+            xfer=TransferPlane(chunk_bytes=4096),
+        )
+        b = ServeEngine(cfg, n_slices=4, model_shards=1, rdegree=0.0,
+                        max_len=64, snapshot_every=4, stores=stores)
+        tb = b.decode(12, failures={9: [2]})
+        r = b.report
+
+        # the newest snapshot dir is an actual delta link, not a full dir
+        newest = max(int(d.split("-")[1]) for d in os.listdir(ckdir)
+                     if d.startswith("step-"))
+        with open(os.path.join(ckdir, f"step-{newest:010d}",
+                               "manifest.json")) as f:
+            man = json.load(f)
+        assert man["format"] == "delta", man["format"]
+        assert any(c["e"] == "zero" for c in man["chunks"]), (
+            "append-only cache should ship zero chunks")
+
+        assert r.restarts == 1 and r.promotes == 0
+        assert r.restored_from == ["L2:durable@step8[chain:2]"], r.restored_from
+        # streams 0,1,3 survive; their token history must match the
+        # failure-free run bit-for-bit (greedy decode is deterministic)
+        assert tb.shape[0] == 3 and ta.shape[0] == 4
+        assert np.array_equal(tb, ta[[0, 1, 3]]), "decode state diverged"
+        print("DELTA-CHAIN-SERVE-RESTORE-OK")
+        """
+    )
+    assert "DELTA-CHAIN-SERVE-RESTORE-OK" in out
+
+
+# ---------------------------------------------------------------------------
+# property test: any trim/submit/drop interleaving keeps restores
+# bit-identical (full-mode store as oracle), across a crash-restart
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    ops=st.lists(st.integers(0, 99), min_size=4, max_size=24),
+    codec=st.sampled_from(["bf16", "int8"]),
+)
+def test_trim_submit_interleavings_keep_restores_bit_identical(ops, codec):
+    with tempfile.TemporaryDirectory() as da, tempfile.TemporaryDirectory() as db:
+        full = DurableStore(da, keep=0, xfer=_plane())
+        delt = DurableStore(db, keep=0, delta=codec, max_chain=3,
+                            xfer=_plane())
+        step = 0
+        for op in ops:
+            if op < 70 or step == 0:  # submit the next close state
+                step += 1
+                full.submit(step, _state(step))
+                delt.submit(step, _state(step))
+            elif op < 85:  # trim to a small window
+                k = 1 + op % 3
+                full.trim(k)
+                delt.trim(k)
+            else:  # drop a pseudo-random known step
+                s = 1 + op % step
+                full.drop(s)
+                delt.drop(s)
+            full.wait()
+            delt.wait()
+            assert full.steps() == delt.steps()
+            for s in delt.steps():
+                gf, gd = full.load(_tmpl(), step=s), delt.load(_tmpl(), step=s)
+                assert gf is not None and gd is not None
+                assert _blob_equal(gf[1], gd[1]), (op, s)
+        # the crash-restart: fresh stores on the same dirs must agree too
+        full2 = DurableStore(da, keep=0, xfer=_plane())
+        delt2 = DurableStore(db, keep=0, delta=codec, xfer=_plane())
+        assert full2.steps() == delt2.steps()
+        gf, gd = full2.load(_tmpl()), delt2.load(_tmpl())
+        assert (gf is None) == (gd is None)
+        if gf is not None:
+            assert gf[0] == gd[0] and _blob_equal(gf[1], gd[1])
