@@ -1,0 +1,164 @@
+"""Serving-gateway benchmark: request throughput and tail TTFT, with and
+without a mid-stream kill, against the no-gateway fixed-batch baseline.
+
+Three scenarios over the same synthetic open-loop workload (mixed prompt
+lengths and generation budgets, staggered arrivals):
+
+- ``gateway/failure-free``: continuous batching - slots free at
+  EOS/max-new and refill from the admission queue mid-decode;
+- ``gateway/mid-kill``: an UNmirrored serving slice dies mid-decode; its
+  in-flight requests requeue at the queue front with streamed prefixes
+  pinned and a spare backfills the role. Every client stream must stay
+  byte-identical to the failure-free run (asserted), and the p99 TTFT
+  across the kill is the row CI floors;
+- ``baseline/fixed-batch``: the no-gateway discipline - admit a wave of
+  requests, decode until the LAST one finishes, only then admit the next
+  wave (what ``ServeEngine.decode``'s lockstep position forces).
+
+The acceptance row ``gateway/speedup`` asserts continuous batching
+completes the workload in no more serve steps than the fixed-batch
+baseline (it should be strictly fewer whenever generation lengths vary).
+
+Usage: ``python benchmarks/serving_bench.py [--tiny]`` - ``--tiny`` is
+the CI smoke shape. Results merge into the repo-root ``BENCH_perf.json``
+under ``suites["serving"]``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+_CHILD = """
+import json, time
+import numpy as np
+from repro.configs.registry import smoke_config
+from repro.serving.engine import ServeEngine
+from repro.serving.gateway import ServeGateway
+
+TINY = {tiny}
+N = 3 if TINY else 4          # serving slices (all cmp: rdegree=0)
+R = 12 if TINY else 32        # requests
+MAXNEW = 6 if TINY else 10
+KILL = 5 if TINY else 8       # serve step of the mid-stream kill
+cfg = smoke_config("qwen2.5-3b")
+results = []
+
+def workload(gw):
+    rng = np.random.default_rng(0)
+    return [
+        gw.submit(rng.integers(1, cfg.vocab_size, size=2 + i % 4),
+                  max_new=2 + (i * 5) % MAXNEW, at_step=i // 4)
+        for i in range(R)
+    ]
+
+def mk_gateway():
+    eng = ServeEngine(cfg, n_slices=N, model_shards=1, rdegree=0.0,
+                      spares=1, heal="eager", max_len=64,
+                      slot_granular=True)
+    return ServeGateway(eng, max_queue=2 * R)
+
+def stats(gw, wall):
+    s = gw.summary()
+    return {{"req_s": s["completed"] / wall, "steps": s["steps"],
+            "completed": s["completed"], "requeues": s["requeues"],
+            "tok_s": s["tokens_decoded"] / wall,
+            "ttft_p50_steps": s["ttft_p50_steps"],
+            "ttft_p99_steps": s["ttft_p99_steps"]}}
+
+# --- gateway, failure-free ---------------------------------------------------
+gw0 = mk_gateway(); streams0 = workload(gw0)
+t0 = time.perf_counter(); gw0.serve(max_steps=100_000)
+wall0 = time.perf_counter() - t0
+assert all(s.done for s in streams0)
+row0 = stats(gw0, wall0)
+results.append({{"path": "gateway/failure-free", **row0}})
+
+# --- gateway, unmirrored kill mid-decode ------------------------------------
+gw1 = mk_gateway(); streams1 = workload(gw1)
+t0 = time.perf_counter(); gw1.serve(max_steps=100_000, failures={{KILL: [1]}})
+wall1 = time.perf_counter() - t0
+row1 = stats(gw1, wall1)
+bit_identical = all(
+    b.done and a.tokens == b.tokens for a, b in zip(streams0, streams1)
+)
+assert bit_identical, "client streams diverged across the kill"
+assert row1["requeues"] >= 1, "the kill must have requeued in-flight work"
+results.append({{"path": "gateway/mid-kill", **row1,
+                "bit_identical": bit_identical}})
+
+# --- no-gateway baseline: fixed-batch waves ----------------------------------
+# same workload, admitted a full batch at a time; the wave only turns
+# over when its LAST sequence finishes (lockstep decode discipline)
+gwb = mk_gateway()
+rng = np.random.default_rng(0)
+reqs = [(rng.integers(1, cfg.vocab_size, size=2 + i % 4),
+         2 + (i * 5) % MAXNEW) for i in range(R)]
+B = gwb.registry.n_slots
+t0 = time.perf_counter()
+done_b = 0
+for w in range(0, R, B):
+    wave = [gwb.submit(p, max_new=m) for p, m in reqs[w : w + B]]
+    gwb.serve(max_steps=100_000)
+    done_b += sum(s.done for s in wave)
+wallb = time.perf_counter() - t0
+assert done_b == R
+rowb = stats(gwb, wallb)
+results.append({{"path": "baseline/fixed-batch", **rowb}})
+
+steps_ratio = rowb["steps"] / max(row0["steps"], 1)
+assert row0["steps"] <= rowb["steps"], (
+    f"continuous batching took MORE steps than fixed waves: "
+    f"{{row0['steps']}} > {{rowb['steps']}}"
+)
+results.append({{"path": "gateway/speedup", "steps_ratio": steps_ratio,
+                "req_s_ratio": row0["req_s"] / max(rowb["req_s"], 1e-9)}})
+print("RESULTS_JSON:" + json.dumps(results))
+"""
+
+
+def run(tiny: bool = False):
+    env = dict(os.environ)
+    n = (3 if tiny else 4) + 1  # slices + 1 spare
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    code = _CHILD.format(tiny=tiny)
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=2000,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-3000:])
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULTS_JSON:")][0]
+    return json.loads(line[len("RESULTS_JSON:"):])
+
+
+def rows(results):
+    out = []
+    for r in results:
+        if "steps_ratio" in r:
+            extra = (f"steps_ratio={r['steps_ratio']:.2f}x "
+                     f"req_s_ratio={r['req_s_ratio']:.2f}x")
+            out.append((f"serving/{r['path']}", 0.0, extra))
+            continue
+        extra = (f"req_s={r['req_s']:.1f} steps={r['steps']} "
+                 f"ttft_p99={r['ttft_p99_steps']:.0f}steps "
+                 f"requeues={r['requeues']}")
+        if "bit_identical" in r:
+            extra += f" bit_identical={r['bit_identical']}"
+        out.append((f"serving/{r['path']}", 1e6 / max(r["req_s"], 1e-9), extra))
+    return out
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from perf_json import update_perf_json
+
+    results = run(tiny="--tiny" in sys.argv)
+    update_perf_json("serving", results)
+    for name, us, d in rows(results):
+        print(f"{name},{us:.0f},{d}")

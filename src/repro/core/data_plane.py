@@ -272,6 +272,7 @@ def build_serve_step(
     shard_batch: bool = True,
     donate: bool = True,
     cache_example: Optional[PyTree] = None,
+    per_slot_pos: bool = False,
 ) -> Callable:
     """Returns jitted ``serve(params, cache, tokens, pos) -> (next_tokens,
     cache)`` - one greedy decode step.
@@ -284,6 +285,12 @@ def build_serve_step(
 
     ``shard_batch=False`` replicates the request batch on every slice (used
     when global_batch < n_slices, e.g. the long_500k single-request cell).
+
+    ``per_slot_pos=True`` lowers the slot-granular step: ``pos`` is a
+    ``(B,)`` vector sharded with the batch, so every request slot advances
+    its own sequence position - the serving gateway's continuous batcher
+    admits a fresh request into a freed slot mid-decode while its
+    neighbours keep decoding at their own depths.
     """
     axes = manual_axes(mesh)
 
@@ -308,10 +315,11 @@ def build_serve_step(
         # stacks (gemma3) need cache_example for per-leaf placement
         cache_spec = P(None, lead) if shard_batch else P()
 
+    pos_spec = tok_spec if per_slot_pos else P()
     smapped = shard_map(
         per_slice,
         mesh=mesh,
-        in_specs=(P(), cache_spec, tok_spec, P()),
+        in_specs=(P(), cache_spec, tok_spec, pos_spec),
         out_specs=(tok_spec, cache_spec),
         axis_names=set(axes),
         check_vma=False,

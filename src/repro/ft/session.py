@@ -301,9 +301,14 @@ class FTSession:
         old_world = self.world
         # spare backfill preserves a lost role only if its state can be
         # re-established: trainers replay deterministically even from a
-        # fresh init, servers need a recoverable snapshot in the ladder
+        # fresh init, servers need a recoverable snapshot in the ladder -
+        # unless the program declares ``reinit_roles`` (the serving
+        # gateway re-prefills a backfilled role's requests from their
+        # pinned prefixes, so a zeroed slot is a valid starting state)
         use_spares = self.healer.enabled and (
-            self.replay == "log" or bool(self.ladder)
+            self.replay == "log"
+            or bool(self.ladder)
+            or getattr(self.program, "reinit_roles", False)
         )
         new_world, rep = old_world.repair(sorted(failed), use_spares=use_spares)
         self.last_repair = rep
@@ -376,6 +381,14 @@ class FTSession:
         self._regenerate()
         self.control.shrink_complete(failed)
         self.generation = new_world.generation
+        # recovery-window notification (the serving gateway's failover
+        # hook): the program sees the repair outcome + replay plan BEFORE
+        # replay, so it can requeue in-flight requests from lost roles,
+        # remap its slot table through ``rep["role_map"]``, and re-derive
+        # capacity from the healed world - all while the window is closed
+        on_recover = getattr(self.program, "on_recover", None)
+        if on_recover is not None:
+            on_recover(old_world, new_world, rep, plan)
         self.program.replay_inputs(plan)
         self.report.handler_seconds += time.perf_counter() - t0
         self.report.events.append(

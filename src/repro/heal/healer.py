@@ -47,6 +47,12 @@ class Healer:
         # the rebirth staging buffer: one slot, always the newest clone
         self.stage = LiveCloneStore(verify=True, bit_exact=bit_exact, keep=1)
         self.plans: List[HealPlan] = []
+        # capacity listener (the serving gateway's worker registry): called
+        # with (healed_world, plan_or_None, fresh_physicals) whenever a
+        # recovery window brings new physicals into the world - healed
+        # replicas re-arming the FT plane, spare backfills growing the
+        # serving pool back - so the pool re-registers them live
+        self.on_capacity: Optional[Any] = None
 
     @property
     def enabled(self) -> bool:
@@ -91,6 +97,8 @@ class Healer:
         if plan:
             plan.replaced_steps = replaced
             self.plans.append(plan)
+        if fresh and self.on_capacity is not None:
+            self.on_capacity(healed, plan, fresh)
         return healed, plan
 
     @staticmethod

@@ -53,6 +53,19 @@ def main() -> None:
     ap.add_argument("--spares", type=int, default=0,
                     help="warm-standby slices the heal plane converts back "
                          "into replicas (their caches warm from the partner)")
+    ap.add_argument("--gateway", action="store_true",
+                    help="serve through repro.serving.gateway: bounded "
+                         "admission, continuous batching (slots free at "
+                         "EOS/max-new and refill mid-decode), invisible "
+                         "mid-stream failover via front-priority requeue")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="gateway mode: synthetic requests to serve")
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="gateway admission-queue bound (backpressure "
+                         "beyond it; must be >= 1)")
+    ap.add_argument("--max-batch-slots", type=int, default=0,
+                    help="gateway cap on concurrently decoding slots "
+                         "(0 = every (cmp, lane) slot the world offers)")
     args = ap.parse_args()
 
     if os.environ.get("_REPRO_REEXEC") != "1":
@@ -67,6 +80,14 @@ def main() -> None:
 
     model = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
     failures = FailureSchedule.parse(args.inject_failure)
+
+    if args.gateway:
+        from repro.serving.gateway import ServeGateway, validate_bounds
+
+        max_slots = args.max_batch_slots or None
+        validate_bounds(args.max_queue, max_slots)
+        serve_gateway(args, model, failures, max_slots)
+        return
 
     eng = ServeEngine(
         model,
@@ -105,6 +126,57 @@ def main() -> None:
     print(f"promotes={r.promotes} requeued={r.requeued_requests} "
           f"healed={r.healed_replicas} failover={r.failover_seconds:.2f}s")
     print("sample output ids:", toks[0, 0, :16].tolist())
+
+
+def serve_gateway(args, model, failures, max_slots) -> None:
+    """Drive a synthetic open-loop workload through the gateway."""
+    import numpy as np
+
+    from repro.serving.engine import ServeEngine
+    from repro.serving.gateway import ServeGateway
+
+    assert not (args.snapshot_every or args.checkpoint_dir), (
+        "--gateway recovers by requeue (pinned prefixes), not snapshots"
+    )
+    eng = ServeEngine(
+        model,
+        n_slices=args.slices,
+        model_shards=args.model_shards,
+        rdegree=args.rdegree,
+        spares=args.spares,
+        heal=args.heal,
+        per_slice_batch=args.per_slice_batch,
+        max_len=args.max_len,
+        seed=args.seed,
+        slot_granular=True,
+    )
+    gw = ServeGateway(eng, max_queue=args.max_queue, max_batch_slots=max_slots)
+    print(
+        f"gateway serving {model.name}: {eng.world.topo.n_comp} cmp + "
+        f"{eng.world.topo.n_rep} rep slices + {len(eng.world.spares)} spares, "
+        f"{gw.registry.n_slots} slots (cap {max_slots or 'none'}), "
+        f"queue<={args.max_queue}"
+    )
+    rng = np.random.default_rng(args.seed)
+    for i in range(args.requests):
+        prompt = rng.integers(1, model.vocab_size, size=int(rng.integers(2, 8)))
+        gw.submit(prompt, max_new=args.tokens, at_step=i // 2)
+    t0 = time.time()
+    gw.serve(max_steps=100_000, failures=failures)
+    dt = time.time() - t0
+    for ev in eng.report.events:
+        print("EVENT:", ev)
+    for ev in gw.registry.events:
+        print("CAPACITY:", ev)
+    s = gw.summary()
+    done = sum(1 for st in gw.streams.values() if st.done)
+    print(f"served {done}/{args.requests} requests in {dt:.1f}s "
+          f"({s['tokens_decoded'] / max(dt, 1e-9):.1f} tok/s wall)")
+    print(f"steps={s['steps']} completed={s['completed']} "
+          f"rejected={s['rejected']} requeues={s['requeues']} "
+          f"ttft_p50={s['ttft_p50_steps']:.0f} "
+          f"ttft_p99={s['ttft_p99_steps']:.0f} steps")
+    print("request 0 ids:", gw.streams[0].tokens[:16])
 
 
 if __name__ == "__main__":

@@ -313,9 +313,10 @@ def attn_decode_oneshot(q, k_cache, v_cache, pos, *, window: int = 0,
     s = jnp.einsum("bknd,bskd->bkns", qf, k_cache.astype(jnp.float32))
     s = _softcap(s, softcap)
     kpos = jnp.arange(Smax)
-    mask = kpos[None, None, None, :] <= pos
+    posb = pos[:, None, None, None] if jnp.ndim(pos) else pos
+    mask = kpos[None, None, None, :] <= posb
     if window and window > 0:
-        mask &= pos - kpos[None, None, None, :] < window
+        mask &= posb - kpos[None, None, None, :] < window
     s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkns,bskd->bknd", p, v_cache.astype(jnp.float32))
@@ -330,10 +331,14 @@ def attn_decode(q, k_cache, v_cache, pos, *, window: int = 0,
                 softcap: float = 0.0, block_k: int = 2048):
     """Single-token decode attention against a (B,Smax,KV,hd) cache.
 
-    ``pos`` (scalar int32) is the index of the current token; cache entries
-    at indices > pos are masked out. Dispatches to the one-shot path for
-    moderate caches; falls back to online softmax over KV chunks so the
-    working set stays bounded for 500k caches.
+    ``pos`` is the index of the current token - a scalar int32 when every
+    row decodes in lockstep, or a per-row ``(B,)`` vector when rows sit at
+    independent sequence positions (the serving gateway's continuous
+    batcher admits a request into a freed slot mid-decode, so each slot
+    carries its own position). Cache entries at indices > pos are masked
+    out per row. Dispatches to the one-shot path for moderate caches;
+    falls back to online softmax over KV chunks so the working set stays
+    bounded for 500k caches.
     """
     B, Sq, H, hd = q.shape
     assert Sq == 1
@@ -359,9 +364,10 @@ def attn_decode(q, k_cache, v_cache, pos, *, window: int = 0,
         s = jnp.einsum("bhd,bkhd->bhk", qf, kj)
         s = _softcap(s, softcap)
         kpos = j * block_k + jnp.arange(block_k)
-        mask = kpos[None, None, :] <= pos
+        posb = pos[:, None, None] if jnp.ndim(pos) else pos
+        mask = kpos[None, None, :] <= posb
         if window and window > 0:
-            mask &= pos - kpos[None, None, :] < window
+            mask &= posb - kpos[None, None, :] < window
         s = jnp.where(mask, s, -1e30)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
@@ -466,16 +472,22 @@ def attn_decode_forward(p, x, cache, pos, cfg: ModelConfig, *, is_global: bool,
 
     Returns output (B,1,D) and the updated cache. For windowed layers the
     cache length is the window size and indexing is modular (ring buffer).
+    ``pos`` may be a per-row ``(B,)`` vector (slot-granular decode: each
+    request row advances its own position); the cache write then scatters
+    one row at a time instead of updating a shared column.
     """
     del impl
     B = x.shape[0]
+    per_row = jnp.ndim(pos) > 0
     q, k, v = _project_qkv(p, x, cfg)
     if cfg.mrope:
-        pos3 = jnp.broadcast_to(pos, (3, B, 1)).astype(jnp.int32)
+        pos2 = pos[:, None] if per_row else jnp.full((B, 1), pos)
+        pos3 = jnp.broadcast_to(pos2, (3, B, 1)).astype(jnp.int32)
         q = apply_mrope(q, pos3, cfg.rope_theta)
         k = apply_mrope(k, pos3, cfg.rope_theta)
     else:
-        posv = jnp.full((B, 1), pos, dtype=jnp.int32)
+        posv = (pos[:, None] if per_row
+                else jnp.full((B, 1), pos)).astype(jnp.int32)
         q = apply_rope(q, posv, cfg.rope_theta)
         k = apply_rope(k, posv, cfg.rope_theta)
     Smax = cache["k"].shape[1]
@@ -483,8 +495,13 @@ def attn_decode_forward(p, x, cache, pos, cfg: ModelConfig, *, is_global: bool,
     # write path: match the cache's hd-sharding so the update is local
     k = _maybe_constrain(k, None, None, None, "model")
     v = _maybe_constrain(v, None, None, None, "model")
-    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    if per_row:
+        rows = jnp.arange(B)
+        k_cache = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+        v_cache = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
     window = 0 if is_global else cfg.window
     if window and Smax <= window:
         # ring buffer: every live entry is in-window; mask only unwritten slots

@@ -85,6 +85,7 @@ class ServeEngine(ResilientProgram):
         checkpoint_dir: Optional[str] = None,
         durable_delta: str = "none",
         durable_max_chain: int = 4,
+        slot_granular: bool = False,
     ):
         self.model_cfg = model_cfg
         self.repl = ReplicationConfig(rdegree=rdegree)
@@ -97,6 +98,15 @@ class ServeEngine(ResilientProgram):
         self._out: List[np.ndarray] = []
         self._out_streams: List[List[int]] = []
         self.snapshot_every = snapshot_every
+        # slot-granular decode (the serving gateway's substrate): every
+        # (cmp role, lane) slot advances its OWN sequence position, so the
+        # continuous batcher can free a slot at EOS and admit the next
+        # queued request mid-decode. ``slot_pos`` is (n_comp, lanes) int32;
+        # ``slot_active`` marks slots with a live (unfinished) request -
+        # failover requeue accounting charges only those.
+        self.slot_granular = slot_granular
+        self.slot_pos: Optional[np.ndarray] = None
+        self.slot_active: Optional[np.ndarray] = None
 
         # decode-state plane: K-way striped partner memory on the shared
         # repro.xfer plane, so a snapshot survives losses that take live
@@ -183,7 +193,14 @@ class ServeEngine(ResilientProgram):
             self.step_fn = DP.build_serve_step(
                 self.model_cfg, self.repl, mesh, world,
                 shard_batch=True, donate=False, cache_example=self.cache,
+                per_slot_pos=self.slot_granular,
             )
+        if self.slot_active is None:
+            shape = (world.topo.n_comp, self.per_slice_batch)
+            self.slot_active = np.ones(shape, dtype=bool)
+            if self.slot_granular:
+                self.slot_pos = np.zeros(shape, dtype=np.int32)
+                self.slot_active[:] = False  # gateway marks slots on bind
 
     def run_step(self, t: int) -> None:
         fed = self._mirror_tokens(self._cur)
@@ -206,6 +223,69 @@ class ServeEngine(ResilientProgram):
         self.pos += 1
         self.report.tokens_decoded += n_comp * self.per_slice_batch
 
+    # ---- slot-granular decode (the gateway's substrate) --------------------
+    @property
+    def n_lanes(self) -> int:
+        return self.per_slice_batch
+
+    def step_slots(self, fed: np.ndarray) -> np.ndarray:
+        """One decode step with per-slot positions. ``fed`` is
+        (n_comp, lanes) int32 - each slot's next input token (a prompt
+        token while prefilling, the last generated token while decoding, a
+        pad for idle lanes). Returns the (n_comp, lanes) greedy next
+        tokens and advances every slot's position. Replica slices mirror
+        their partner's tokens AND positions, so mirrored cache rows stay
+        bit-identical and a promote carries in-flight slots for free."""
+        assert self.slot_granular, "step_slots needs ServeEngine(slot_granular=True)"
+        order = self.world.roles_in_mesh_order()
+        src = self.world.topo.mirror_source()
+        n_comp = self.world.topo.n_comp
+        b = self.per_slice_batch
+        fed_full = np.concatenate([fed[src[r]] for r in order])[:, None]
+        pos_full = np.concatenate([self.slot_pos[src[r]] for r in order])
+        with set_mesh(self.mesh):
+            next_fed, self.cache = self.step_fn(
+                self.params, self.cache,
+                jnp.asarray(fed_full.astype(np.int32)),
+                jnp.asarray(pos_full.astype(np.int32)),
+            )
+        next_fed = np.asarray(next_fed)
+        by_role = {
+            r: next_fed[i * b : (i + 1) * b, 0] for i, r in enumerate(order)
+        }
+        out = np.stack([by_role[c] for c in range(n_comp)])
+        self.slot_pos += 1
+        self.report.tokens_decoded += int(self.slot_active.sum())
+        return out
+
+    def reset_slots(self, slots: List[tuple]) -> None:
+        """Zero the cache rows of ``slots`` ((cmp_role, lane) pairs) and
+        rewind their positions to 0 - a freed slot becomes a fresh
+        sequence for the next admitted request. The mirror row of each
+        role's replica is zeroed too (mirrored rows must stay
+        bit-identical, and SSM/conv state is recurrent: masking alone
+        cannot hide a previous occupant's state the way the position mask
+        hides stale KV entries)."""
+        if not slots:
+            return
+        pos = self.world.mesh_position()
+        b = self.per_slice_batch
+        rows: List[int] = []
+        for role, lane in slots:
+            self.slot_pos[role, lane] = 0
+            rows.append(pos[self.world.assignment[role]] * b + lane)
+            partner = self.world.topo.partner_of(role)
+            if partner is not None:
+                rows.append(pos[self.world.assignment[partner]] * b + lane)
+        idx = jnp.asarray(sorted(set(rows)))
+
+        def zero_rows(kp, arr):
+            axis = cache_batch_axis(path_str(kp), arr.ndim)
+            moved = jnp.moveaxis(arr, axis, 0)
+            return jnp.moveaxis(moved.at[idx].set(0), 0, axis)
+
+        self.cache = jax.tree_util.tree_map_with_path(zero_rows, self.cache)
+
     # ---- decode-state snapshots (the repro.store plane) --------------------
     def snapshot(self):
         """KV cache + in-flight tokens, submitted to the recovery ladder on
@@ -218,7 +298,10 @@ class ServeEngine(ResilientProgram):
         state = {"cache": self.cache}
         if self._cur is not None:
             state["cur"] = self._cur
-        return state, {"pos": self.pos}
+        meta = {"pos": self.pos}
+        if self.slot_granular:
+            meta["slot_pos"] = self.slot_pos.tolist()
+        return state, meta
 
     def restore(self, state, meta) -> None:
         """Adopt a snapshot (host arrays, pre-failure world layout); the
@@ -228,6 +311,8 @@ class ServeEngine(ResilientProgram):
         if "cur" in state:
             self._cur = np.asarray(state["cur"])
         self.pos = int(meta["pos"])
+        if "slot_pos" in meta:
+            self.slot_pos = np.asarray(meta["slot_pos"], dtype=np.int32)
 
     def replay_inputs(self, plan) -> None:
         """Drop output tokens past the replay point - re-decode regenerates
@@ -277,8 +362,14 @@ class ServeEngine(ResilientProgram):
             return np.concatenate(rows, axis=axis)
 
         self.cache = jax.tree_util.tree_map_with_path(repack, cache_host)
-        lost_roles = old_world.topo.n_comp - new_world.topo.n_comp
-        self.report.requeued_requests += lost_roles * b
+        # requeue accounting: only LIVE (unfinished) slots on the lost
+        # roles re-enter the queue - a slot whose sequence already hit
+        # EOS/max-len has nothing left to requeue (the old
+        # ``lost_roles * b`` charged finished sequences too). Legacy
+        # whole-batch decode never clears ``slot_active``, so its count is
+        # unchanged.
+        lost = self.session.last_repair.get("lost_cmp", [])
+        self.report.requeued_requests += int(self.slot_active[lost].sum())
         # each surviving cmp role keeps ITS stream (the dead role's row is
         # dropped wherever it sat, not always at the tail; a backfilled
         # role continues the old role's stream from the restored snapshot)
@@ -287,6 +378,9 @@ class ServeEngine(ResilientProgram):
             for r in range(new_world.topo.n_comp)
         ]
         self._streams = [self._streams[r] for r in keep]
+        self.slot_active = self.slot_active[keep]
+        if self.slot_pos is not None:
+            self.slot_pos = self.slot_pos[keep]
         if self._cur is not None:
             self._cur = np.stack([self._cur[r] for r in keep])
 
@@ -314,6 +408,10 @@ class ServeEngine(ResilientProgram):
                failures: Optional[Dict[int, List[int]]] = None) -> np.ndarray:
         """Greedy-decode ``steps`` tokens for every request slot. Returns
         (n_comp * per_slice_batch, steps) generated ids."""
+        assert not self.slot_granular, (
+            "slot-granular engines are driven by repro.serving.gateway - "
+            "lockstep decode() shares one position across the batch"
+        )
         n_comp = self.world.topo.n_comp
         if prompt_tokens is None:
             prompt_tokens = np.ones(

@@ -1,0 +1,36 @@
+"""repro.serving.gateway - the serving front door.
+
+Owns the full request lifecycle over a slot-granular
+:class:`~repro.serving.engine.ServeEngine`:
+
+- :class:`AdmissionQueue` - bounded admission with backpressure; failover
+  requeues re-enter at the FRONT with their streamed prefix pinned;
+- :class:`WorkerRegistry` - the elastic worker/slot pool, re-derived from
+  the ``WorldState`` each recovery window and grown live by the heal
+  plane's capacity callback;
+- :class:`ContinuousBatcher` - slots free as sequences hit EOS/max-new
+  and refill from the queue mid-decode (no lockstep waves);
+- :class:`ServeGateway` - the request API + the failover-transparent
+  recovery hooks that make the FT plane invisible to clients.
+"""
+from repro.serving.gateway.batcher import ContinuousBatcher
+from repro.serving.gateway.gateway import ServeGateway, validate_bounds
+from repro.serving.gateway.queue import (
+    AdmissionQueue,
+    QueueFull,
+    Request,
+    RequestStream,
+)
+from repro.serving.gateway.registry import Worker, WorkerRegistry
+
+__all__ = [
+    "AdmissionQueue",
+    "ContinuousBatcher",
+    "QueueFull",
+    "Request",
+    "RequestStream",
+    "ServeGateway",
+    "Worker",
+    "WorkerRegistry",
+    "validate_bounds",
+]

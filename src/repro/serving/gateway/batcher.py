@@ -1,0 +1,162 @@
+"""Continuous batcher - slot-level request scheduling over the engine.
+
+Instead of fixed-width lockstep waves (every sequence decodes ``steps``
+tokens and the whole batch turns over at once), each ``(cmp_role, lane)``
+slot runs its own sequence: a slot frees the moment its request hits
+EOS/max-new and is refilled from the admission queue on the NEXT step,
+while its neighbours keep decoding at their own depths (the engine's
+per-slot positions make a freed slot a fresh sequence - zeroed rows,
+position 0).
+
+Prefill is folded into the same stepping: a freshly bound request feeds
+its prefix (prompt + any pinned, already-streamed tokens from a previous
+incarnation) one token per step; outputs below the stream's cursor are
+re-generations and are suppressed (greedy decode is deterministic, so
+they are verified byte-equal to what the client already saw), and the
+first output past the cursor continues the client stream with zero
+duplicated or dropped tokens - failover-transparent resume.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.gateway.queue import AdmissionQueue, Request
+from repro.serving.gateway.registry import Slot, WorkerRegistry
+
+PAD_TOKEN = 0
+
+
+@dataclass
+class SlotState:
+    """A request bound to a slot. ``fed`` counts prefix/sequence tokens
+    already fed to the engine: the slot's engine position equals ``fed``,
+    and the output after feeding index ``i`` predicts sequence index
+    ``i + 1`` (prompt indices are skipped, generated indices below the
+    stream cursor are replay-verified, the rest are emitted)."""
+
+    req: Request
+    slot: Slot
+    fed: int = 0
+    bound_step: int = 0
+
+
+class ContinuousBatcher:
+    def __init__(
+        self,
+        engine,
+        registry: WorkerRegistry,
+        max_slots: Optional[int] = None,
+        verify_replay: bool = True,
+    ):
+        self.engine = engine
+        self.registry = registry
+        self.max_slots = max_slots  # None = every slot the world offers
+        self.verify_replay = verify_replay
+        self.states: Dict[int, SlotState] = {}  # rid -> state
+        self.refills = 0
+
+    # ------------------------------------------------------------------
+    def _slot_budget(self) -> int:
+        cap = self.registry.n_slots
+        if self.max_slots is not None:
+            cap = min(cap, self.max_slots)
+        return cap - len(self.states)
+
+    def refill(self, queue: AdmissionQueue, step: int) -> List[int]:
+        """Bind queued requests onto free slots (front of the queue first,
+        lowest slot first). Each bind resets the slot to a fresh sequence.
+        Returns the rids bound this step."""
+        bound: List[int] = []
+        free = self.registry.free_slots()
+        fresh: List[Slot] = []
+        while queue and free and self._slot_budget() > 0:
+            req = queue.pop()
+            slot = free.pop(0)
+            self.registry.bind(slot, req.rid)
+            self.states[req.rid] = SlotState(req=req, slot=slot, bound_step=step)
+            req.arrivals.append(step)
+            fresh.append(slot)
+            bound.append(req.rid)
+        if fresh:
+            self.engine.reset_slots(fresh)
+            for slot in fresh:
+                self.engine.slot_active[slot] = True
+            self.refills += len(fresh)
+        return bound
+
+    def build_fed(self) -> np.ndarray:
+        """The (n_comp, lanes) token matrix for the next engine step: each
+        bound slot's next sequence token; PAD for idle lanes."""
+        fed = np.full(
+            (self.registry.n_comp, self.registry.lanes), PAD_TOKEN, np.int32
+        )
+        for st in self.states.values():
+            seq = st.req.prefix
+            assert st.fed < len(seq), (st.req.rid, st.fed, len(seq))
+            fed[st.slot] = seq[st.fed]
+        return fed
+
+    def consume(self, out: np.ndarray, step: int) -> List[Request]:
+        """Distribute one step's outputs. Emits past-cursor tokens,
+        replay-verifies re-generated ones, finishes sequences at
+        EOS/max-new and frees their slots. Returns finished requests."""
+        finished: List[Request] = []
+        for rid in sorted(self.states):
+            st = self.states[rid]
+            req, stream = st.req, st.req.stream
+            tok = int(out[st.slot])
+            predicted = st.fed + 1  # sequence index this output predicts
+            st.fed = predicted
+            gen_idx = predicted - len(req.prompt)
+            if gen_idx < 0:
+                continue  # still feeding prompt tokens
+            if gen_idx < stream.cursor:
+                # re-generation of a pinned, already-streamed token: the
+                # client saw it - suppress, and prove the resumed sequence
+                # is byte-identical to what was served before the failure
+                if self.verify_replay:
+                    assert tok == stream.tokens[gen_idx], (
+                        f"request {rid}: replayed token {gen_idx} diverged "
+                        f"({tok} != {stream.tokens[gen_idx]})"
+                    )
+                continue
+            stream.emit(tok, step)
+            if req.eos_id is not None and tok == req.eos_id:
+                self._finish(st, "eos", step)
+                finished.append(req)
+            elif stream.cursor >= req.max_new:
+                self._finish(st, "max_new", step)
+                finished.append(req)
+        return finished
+
+    def _finish(self, st: SlotState, reason: str, step: int) -> None:
+        st.req.stream.finish(reason, step)
+        self.registry.release(st.slot)
+        self.engine.slot_active[st.slot] = False
+        del self.states[st.req.rid]
+
+    # ---- failover ----------------------------------------------------------
+    def evict_roles(self, old_roles) -> List[Request]:
+        """Pull every in-flight request off ``old_roles`` (old-world cmp
+        ids whose slot state is gone: truly lost roles and spare-backfilled
+        ones). Returned in (role, lane) order - the gateway requeues them
+        at the queue front in that order."""
+        victims = sorted(
+            (st for st in self.states.values() if st.slot[0] in old_roles),
+            key=lambda st: st.slot,
+        )
+        for st in victims:
+            del self.states[st.req.rid]
+        return [st.req for st in victims]
+
+    def remap_roles(self, old_to_new: Dict[int, int]) -> None:
+        """Apply a repair's cmp-role renumbering to surviving bindings
+        (evict_roles must have removed dead-role states first)."""
+        for st in self.states.values():
+            st.slot = (old_to_new[st.slot[0]], st.slot[1])
+
+    def bound_map(self) -> Dict[Slot, int]:
+        return {st.slot: rid for rid, st in self.states.items()}

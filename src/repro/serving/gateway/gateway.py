@@ -1,0 +1,274 @@
+"""ServeGateway - the request router over a slot-granular ServeEngine.
+
+The gateway IS the session's program: it wraps the engine's data-plane
+hooks and owns the request lifecycle around them -
+
+- ``submit`` -> :class:`AdmissionQueue` (bounded, :class:`QueueFull`
+  backpressure beyond ``max_queue``);
+- each serve step: admit scheduled arrivals, refill freed slots from the
+  queue (:class:`ContinuousBatcher`), one ``step_slots`` decode, stream
+  the outputs;
+- ``on_recover`` (the session's recovery-window notification, fired after
+  repack/regenerate and before replay): in-flight requests whose role
+  died unmirrored are pulled off the batcher and requeued AT THE FRONT
+  with their streamed prefix pinned; surviving bindings are remapped
+  through the repair's role renumbering; backfilled roles' slots are
+  zeroed so re-prefill starts from a fresh sequence. Promoted replicas
+  carry their slots' mirrored caches - their requests never notice.
+
+Greedy decode is deterministic and slot rows are computationally
+independent, so a requeued request's re-generated tokens match what the
+client already streamed byte-for-byte (the batcher verifies this), and
+the stream continues with zero duplicated or dropped tokens: the paper's
+Sec. I "drop the failed processes and continue" made client-invisible.
+
+``reinit_roles = True`` tells FTSession that spare backfill is safe
+without a recovery-ladder restore: a zeroed slot is a valid starting
+state because the gateway re-prefills from pinned prefixes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.ft import FailureSchedule, ResilientProgram
+from repro.serving.gateway.batcher import ContinuousBatcher
+from repro.serving.gateway.queue import (
+    AdmissionQueue,
+    QueueFull,
+    Request,
+    RequestStream,
+)
+from repro.serving.gateway.registry import WorkerRegistry
+
+
+def validate_bounds(max_queue: int, max_batch_slots: Optional[int]) -> None:
+    """Reject nonsensical gateway bounds loudly (zero/negative queues or
+    slot caps would deadlock admission or the batcher)."""
+    if max_queue < 1:
+        raise ValueError(f"--max-queue must be >= 1, got {max_queue}")
+    if max_batch_slots is not None and max_batch_slots < 1:
+        raise ValueError(
+            f"--max-batch-slots must be >= 1 (or unset), got {max_batch_slots}"
+        )
+
+
+@dataclass
+class GatewayStats:
+    steps: int = 0
+    idle_steps: int = 0
+    completed: int = 0
+    requeues: int = 0
+    recoveries: int = 0
+
+
+class ServeGateway(ResilientProgram):
+    #: spare backfill needs no ladder restore - requeued requests
+    #: re-prefill from their pinned prefixes onto zeroed slots
+    reinit_roles = True
+
+    def __init__(
+        self,
+        engine,
+        *,
+        max_queue: int = 64,
+        max_batch_slots: Optional[int] = None,
+        verify_replay: bool = True,
+    ):
+        validate_bounds(max_queue, max_batch_slots)
+        assert engine.slot_granular, (
+            "ServeGateway drives slot-granular engines - build the "
+            "ServeEngine with slot_granular=True"
+        )
+        assert not engine.session.ladder, (
+            "the gateway recovers by requeue (snapshot() is None) - drop "
+            "snapshot_every/stores from the engine"
+        )
+        self.engine = engine
+        self.session = engine.session
+        # the gateway takes the engine's place as the session's program:
+        # run_step/on_recover wrap the engine's data-plane hooks
+        self.session.program = self
+        self.registry = WorkerRegistry(engine.n_lanes)
+        self.registry.sync(engine.world)
+        self.session.healer.on_capacity = self.registry.on_heal
+        self.queue = AdmissionQueue(max_queue)
+        self.batcher = ContinuousBatcher(
+            engine, self.registry, max_slots=max_batch_slots,
+            verify_replay=verify_replay,
+        )
+        self.stats = GatewayStats()
+        self.streams: Dict[int, RequestStream] = {}
+        self._next_rid = 0
+        self._arrivals: Dict[int, List[Request]] = {}  # step -> requests
+        self._step = 0
+
+    # ---- client API --------------------------------------------------------
+    def submit(
+        self,
+        prompt,
+        max_new: int,
+        eos_id: Optional[int] = None,
+        at_step: Optional[int] = None,
+    ) -> RequestStream:
+        """Admit a generation request. Raises :class:`QueueFull` when the
+        admission queue is at capacity (the backpressure signal) and
+        ``ValueError`` on requests the engine could never serve.
+
+        ``at_step`` defers admission to a future serve step (an arrival
+        process for benchmarks); a deferred arrival that meets a full
+        queue is rejected by finishing its stream with reason
+        ``"rejected"`` instead of raising mid-serve.
+        """
+        prompt = tuple(int(t) for t in prompt)
+        if len(prompt) < 1:
+            raise ValueError("empty prompt")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        if len(prompt) + max_new > self.engine.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds the "
+                f"engine's max_len ({self.engine.max_len})"
+            )
+        rid = self._next_rid
+        self._next_rid += 1
+        step = self._step if at_step is None else at_step
+        stream = RequestStream(rid, submitted_step=step)
+        req = Request(rid=rid, prompt=prompt, max_new=max_new,
+                      eos_id=eos_id, stream=stream)
+        self.streams[rid] = stream
+        if at_step is None or at_step <= self._step:
+            self.queue.admit(req)  # may raise QueueFull - caller backs off
+        else:
+            self._arrivals.setdefault(at_step, []).append(req)
+        return stream
+
+    def pending(self) -> int:
+        """Requests not yet finished: queued, in-flight, or scheduled."""
+        return (
+            len(self.queue)
+            + len(self.batcher.states)
+            + sum(len(v) for v in self._arrivals.values())
+        )
+
+    def serve(
+        self,
+        max_steps: int,
+        failures: Union[None, FailureSchedule, Dict[int, List[int]]] = None,
+    ) -> GatewayStats:
+        """Run the serve loop until every submitted request finishes (or
+        ``max_steps`` serve steps elapse), injecting scheduled failures at
+        step boundaries. Resumable: call again after more ``submit``s."""
+        schedule = (
+            failures if isinstance(failures, FailureSchedule)
+            else FailureSchedule(failures)
+        )
+        while self._step < max_steps and (self.pending() or schedule):
+            t = self._step
+            self.session.run(t + 1, schedule, start_step=t)
+            self._step = t + 1
+        return self.stats
+
+    # ---- ResilientProgram hooks (the session's view) -----------------------
+    def build_step(self, mesh, world) -> None:
+        self.engine.build_step(mesh, world)
+
+    def run_step(self, t: int) -> None:
+        for req in self._arrivals.pop(t, []):
+            try:
+                self.queue.admit(req)
+            except QueueFull:
+                req.stream.finish("rejected", t)
+        self.batcher.refill(self.queue, t)
+        self.stats.steps += 1
+        if not self.batcher.states:
+            self.stats.idle_steps += 1
+            return
+        fed = self.batcher.build_fed()
+        out = self.engine.step_slots(fed)
+        finished = self.batcher.consume(out, t)
+        self.stats.completed += len(finished)
+        self.registry.check()
+
+    def snapshot(self):
+        """No ladder snapshots: the gateway's recovery currency is the
+        requeue (pinned prefixes re-prefill deterministically)."""
+        return None
+
+    def repack_state(self, old_world, new_world) -> None:
+        self.engine.repack_state(old_world, new_world)
+
+    def replay_inputs(self, plan) -> None:
+        self.engine.replay_inputs(plan)
+
+    # ---- the failover hook -------------------------------------------------
+    def on_recover(self, old_world, new_world, rep, plan) -> None:
+        """Recovery-window notification (after repack + regenerate, before
+        replay): requeue the dead unmirrored roles' in-flight requests and
+        re-derive the slot table for the new world."""
+        role_map: Dict[int, int] = rep.get("role_map", {})  # new -> old
+        old_to_new = {old: new for new, old in role_map.items()}
+        backfilled_new = [r for r, _ in rep.get("backfilled", [])]
+        backfilled_old = {role_map[r] for r in backfilled_new}
+        dead_old = set(rep.get("lost_cmp", [])) | backfilled_old
+
+        # engine.repack_state already charged lost_cmp slots to
+        # report.requeued_requests; backfilled roles survive the repack
+        # (their slot rows carry over) so their victims are charged here
+        n_backfill_victims = sum(
+            1 for st in self.batcher.states.values()
+            if st.slot[0] in backfilled_old
+        )
+        victims = self.batcher.evict_roles(dead_old)  # (role, lane) order
+        self.engine.report.requeued_requests += n_backfill_victims
+
+        # surviving bindings follow the repair's dense renumbering; the
+        # registry re-derives the pool from the healed world and re-adopts
+        # the remapped assignment
+        self.registry.sync(new_world)
+        self.batcher.remap_roles(old_to_new)
+        self.registry.rebind(self.batcher.bound_map())
+
+        # a backfilled role's rows are the dead slice's stale state: zero
+        # them and mark the lanes free - requeued victims re-prefill onto
+        # fresh sequences wherever the next refill binds them
+        if backfilled_new:
+            fresh = [
+                (r, lane)
+                for r in backfilled_new
+                for lane in range(self.registry.lanes)
+            ]
+            self.engine.reset_slots(fresh)
+            for slot in fresh:
+                self.engine.slot_active[slot] = False
+
+        # front-priority requeue, preserving (role, lane) order at the head
+        for req in reversed(victims):
+            req.requeues += 1
+            self.queue.requeue(req)
+        self.stats.requeues += len(victims)
+        self.stats.recoveries += 1
+        self.registry.check()
+
+    # ---- reporting ---------------------------------------------------------
+    def summary(self) -> Dict[str, float]:
+        rep = self.engine.report
+        ttfts = [
+            s.ttft_steps() for s in self.streams.values()
+            if s.ttft_steps() is not None
+        ]
+        return {
+            "steps": self.stats.steps,
+            "idle_steps": self.stats.idle_steps,
+            "completed": self.stats.completed,
+            "admitted": self.queue.admitted,
+            "rejected": self.queue.rejected,
+            "requeues": self.stats.requeues,
+            "recoveries": self.stats.recoveries,
+            "tokens_decoded": rep.tokens_decoded,
+            "requeued_requests": rep.requeued_requests,
+            "ttft_p50_steps": float(np.percentile(ttfts, 50)) if ttfts else 0.0,
+            "ttft_p99_steps": float(np.percentile(ttfts, 99)) if ttfts else 0.0,
+        }

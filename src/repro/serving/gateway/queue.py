@@ -1,0 +1,128 @@
+"""Admission queue + the request/stream objects it carries.
+
+The queue is the gateway's backpressure point: NEW requests are admitted
+FIFO up to ``max_queue`` and rejected loudly beyond it (:class:`QueueFull`
+- the client's signal to back off). Failover REQUEUES bypass both the
+bound and the FIFO order: a request whose slot died re-enters at the
+front with its already-streamed prefix pinned, so it re-prefills before
+fresh work is admitted and its client stream resumes with zero duplicated
+or dropped tokens. Dropping a requeue would silently lose an accepted
+request, so requeues are always accepted.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional, Tuple
+
+
+class QueueFull(RuntimeError):
+    """Admission rejected: the bounded queue is at capacity (backpressure)."""
+
+
+class RequestStream:
+    """Per-request client-visible output stream.
+
+    ``tokens`` only ever grows, one generated id per index, each emitted
+    exactly once (the monotonic cursor): across failovers the batcher
+    suppresses re-generated tokens below the cursor and the stream
+    continues byte-identically from where the client last read.
+    """
+
+    def __init__(self, rid: int, submitted_step: int):
+        self.rid = rid
+        self.tokens: List[int] = []
+        self.done = False
+        self.finish_reason: Optional[str] = None
+        self.submitted_step = submitted_step
+        self.first_token_step: Optional[int] = None
+        self.finished_step: Optional[int] = None
+        self.submitted_t = time.perf_counter()
+        self.first_token_t: Optional[float] = None
+
+    @property
+    def cursor(self) -> int:
+        """Number of generated tokens the client has seen."""
+        return len(self.tokens)
+
+    def ttft_steps(self) -> Optional[int]:
+        """Time-to-first-token in decode steps (None until the first
+        token lands)."""
+        if self.first_token_step is None:
+            return None
+        return self.first_token_step - self.submitted_step
+
+    # ---- batcher-side (package-internal) -----------------------------------
+    def emit(self, tok: int, step: int) -> None:
+        assert not self.done, f"emit on finished stream {self.rid}"
+        if self.first_token_step is None:
+            self.first_token_step = step
+            self.first_token_t = time.perf_counter()
+        self.tokens.append(int(tok))
+
+    def finish(self, reason: str, step: int) -> None:
+        self.done = True
+        self.finish_reason = reason
+        self.finished_step = step
+
+
+@dataclass
+class Request:
+    """One admitted generation request. ``stream`` is the client handle;
+    ``prefix`` (prompt + everything already streamed) is what a requeued
+    request re-prefills from - the pin that makes failover invisible."""
+
+    rid: int
+    prompt: Tuple[int, ...]
+    max_new: int
+    eos_id: Optional[int] = None
+    stream: RequestStream = None
+    requeues: int = 0
+    arrivals: List[int] = field(default_factory=list)  # bind steps (TTFT trail)
+
+    @property
+    def prefix(self) -> Tuple[int, ...]:
+        return tuple(self.prompt) + tuple(self.stream.tokens)
+
+
+class AdmissionQueue:
+    """Bounded FIFO with front-priority requeues."""
+
+    def __init__(self, max_queue: int = 64):
+        assert max_queue >= 1, max_queue
+        self.max_queue = max_queue
+        self._q: Deque[Request] = deque()
+        self.admitted = 0
+        self.rejected = 0
+        self.requeued = 0
+
+    def admit(self, req: Request) -> None:
+        """FIFO admission of a new request; raises :class:`QueueFull` at
+        capacity (the backpressure signal - nothing is silently dropped)."""
+        if len(self._q) >= self.max_queue:
+            self.rejected += 1
+            raise QueueFull(
+                f"admission queue full ({self.max_queue}); retry later"
+            )
+        self._q.append(req)
+        self.admitted += 1
+
+    def requeue(self, req: Request) -> None:
+        """Front-priority re-entry for a request whose slot died. Always
+        accepted: the request was already admitted, and dropping it here
+        would turn a masked failure into a lost request."""
+        self._q.appendleft(req)
+        self.requeued += 1
+
+    def pop(self) -> Optional[Request]:
+        return self._q.popleft() if self._q else None
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+    def __iter__(self):
+        return iter(self._q)

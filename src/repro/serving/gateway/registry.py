@@ -1,0 +1,117 @@
+"""Elastic worker/slot registry - the gateway's live view of the pool.
+
+Workers are physical slices with a serving kind: ``cmp`` slices own
+decode slots (one per lane), ``replica`` slices mirror a partner (no
+slots of their own - they are the FT plane), ``spare`` slices stand by.
+The registry is re-derived from the :class:`WorldState` on every recovery
+window (:meth:`sync`), and the heal plane's capacity callback
+(:meth:`on_heal`, wired to ``Healer.on_capacity``) records healed
+replicas and spare backfills re-registering LIVE - the
+``WorldState.heal()`` -> gateway-capacity path, the same shape as an
+elastic worker pool where recovered hosts rejoin mid-serve.
+
+Slot ids are ``(cmp_role, lane)``; ``bind``/``release`` keep the
+slot -> request assignment an injection (one request per slot, one slot
+per request) that :meth:`check` asserts - the property suite's bijection
+invariant.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+Slot = Tuple[int, int]  # (cmp_role, lane)
+
+
+@dataclass
+class Worker:
+    physical: int
+    role: Optional[int]  # cmp/rep role id; None for spares
+    kind: str  # "cmp" | "replica" | "spare"
+
+
+class WorkerRegistry:
+    def __init__(self, lanes: int):
+        assert lanes >= 1, lanes
+        self.lanes = lanes
+        self.n_comp = 0
+        self.workers: Dict[int, Worker] = {}
+        self.events: List[str] = []
+        self._bound: Dict[Slot, int] = {}  # slot -> rid
+        self.generation = -1
+
+    # ---- pool membership ---------------------------------------------------
+    def sync(self, world) -> None:
+        """Re-derive the worker table from a (possibly just-repaired and
+        healed) world. Bindings are NOT carried over - the gateway rebinds
+        surviving requests through the repair's role renumbering."""
+        topo = world.topo
+        self.workers = {}
+        for c in topo.cmp_roles():
+            self.workers[world.assignment[c]] = Worker(world.assignment[c], c, "cmp")
+        for r in topo.rep_roles():
+            self.workers[world.assignment[r]] = Worker(world.assignment[r], r, "replica")
+        for s in world.spares:
+            self.workers[s] = Worker(s, None, "spare")
+        self.n_comp = topo.n_comp
+        self.generation = world.generation
+        self._bound = {}
+
+    def on_heal(self, world, plan, fresh: List[int]) -> None:
+        """Capacity callback (``Healer.on_capacity``): new physicals
+        entered the world inside this recovery window - healed replicas
+        re-arming the failover pool, backfilled spares growing the decode
+        pool back to width. Logged here; :meth:`sync` (which runs after
+        the window's repack) folds them into the worker table."""
+        healed = {a.spare: a.cmp_role for a in plan.actions} if plan else {}
+        for p in fresh:
+            if p in healed:
+                self.events.append(
+                    f"gen {world.generation}: phys {p} re-registered as "
+                    f"replica of cmp {healed[p]} (heal)"
+                )
+            else:
+                self.events.append(
+                    f"gen {world.generation}: phys {p} backfilled into the "
+                    "decode pool (spare promote)"
+                )
+
+    # ---- slots -------------------------------------------------------------
+    @property
+    def n_slots(self) -> int:
+        return self.n_comp * self.lanes
+
+    def slots(self) -> List[Slot]:
+        return [(c, l) for c in range(self.n_comp) for l in range(self.lanes)]
+
+    def free_slots(self) -> List[Slot]:
+        return [s for s in self.slots() if s not in self._bound]
+
+    def bind(self, slot: Slot, rid: int) -> None:
+        assert slot not in self._bound, f"slot {slot} already bound"
+        assert 0 <= slot[0] < self.n_comp and 0 <= slot[1] < self.lanes, slot
+        self._bound[slot] = rid
+
+    def release(self, slot: Slot) -> int:
+        return self._bound.pop(slot)
+
+    def rebind(self, bound: Dict[Slot, int]) -> None:
+        """Install a full slot->request assignment after a recovery
+        window's renumbering (validated like per-slot binds)."""
+        self._bound = {}
+        for slot, rid in bound.items():
+            self.bind(slot, rid)
+
+    def bound(self) -> Dict[Slot, int]:
+        return dict(self._bound)
+
+    def check(self) -> None:
+        """Assignment invariants: every bound slot names a live cmp role
+        and lane, and the slot -> request map is injective both ways."""
+        rids = list(self._bound.values())
+        assert len(rids) == len(set(rids)), f"request bound twice: {self._bound}"
+        for (c, l) in self._bound:
+            assert 0 <= c < self.n_comp, f"slot on dead role {c}"
+            assert 0 <= l < self.lanes, f"lane {l} out of range"
+        kinds = [w.kind for w in self.workers.values()]
+        assert kinds.count("cmp") == self.n_comp, (self.workers, self.n_comp)

@@ -1,0 +1,538 @@
+"""repro.serving.gateway - request lifecycle, continuous batching, and
+failover-transparent requeue.
+
+Fast tests drive the REAL gateway/queue/registry/batcher code over a
+FakeEngine (a deterministic pure-function decoder that honors the
+ServeEngine slot contract, including the repack accounting and the
+"backfilled rows are garbage" property of a real host loss) and the real
+WorldState repair/heal algebra. Slow tests run the real engine in
+subprocesses: the flagship asserts every client stream is bit-identical
+across an unmirrored mid-decode kill + spare backfill, with bounded TTFT
+and no more serve steps than the fixed-batch baseline.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import types
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import SRC, run_subprocess
+from repro.core.replication import WorldState
+from repro.serving.gateway import (
+    AdmissionQueue,
+    ContinuousBatcher,
+    QueueFull,
+    Request,
+    RequestStream,
+    ServeGateway,
+    WorkerRegistry,
+    validate_bounds,
+)
+
+# ---------------------------------------------------------------------------
+# FakeEngine: the ServeEngine slot contract without devices
+# ---------------------------------------------------------------------------
+
+
+class FakeEngine:
+    """Deterministic per-slot decoder honoring the slot-granular engine
+    contract: ``step_slots`` appends the fed token to each slot's private
+    history and emits a pure function of it; ``reset_slots`` makes a slot
+    a fresh sequence; ``repack`` mirrors ``ServeEngine.repack_state``'s
+    renumbering + live-slot requeue accounting, and fills a BACKFILLED
+    role's history with garbage (a real spare adopts none of the dead
+    host's memory) - so a gateway that forgets to reset + requeue those
+    slots diverges loudly."""
+
+    slot_granular = True
+    GARBAGE = 10_000
+
+    def __init__(self, world, lanes=2, max_len=64, vocab=50):
+        self.session = types.SimpleNamespace(
+            world=world, ladder=[], program=None, last_repair={},
+            healer=types.SimpleNamespace(on_capacity=None),
+        )
+        self.per_slice_batch = lanes
+        self.max_len = max_len
+        self.vocab = vocab
+        self.report = types.SimpleNamespace(requeued_requests=0, promotes=0,
+                                            tokens_decoded=0)
+        self.slot_active = np.zeros((world.topo.n_comp, lanes), bool)
+        self.hist = {}  # (cmp_role, lane) -> fed tokens
+
+    @property
+    def world(self):
+        return self.session.world
+
+    @property
+    def n_lanes(self):
+        return self.per_slice_batch
+
+    def _next(self, seq):
+        return (seq[-1] * 31 + 7 * len(seq) + sum(seq)) % (self.vocab - 1) + 1
+
+    def step_slots(self, fed):
+        out = np.zeros(fed.shape, np.int32)
+        for r in range(fed.shape[0]):
+            for lane in range(fed.shape[1]):
+                h = self.hist.setdefault((r, lane), [])
+                h.append(int(fed[r, lane]))
+                out[r, lane] = self._next(h)
+        self.report.tokens_decoded += int(self.slot_active.sum())
+        return out
+
+    def reset_slots(self, slots):
+        for s in slots:
+            self.hist[tuple(s)] = []
+
+    def repack(self, old_world, new_world, rep):
+        lost = rep["lost_cmp"]
+        self.report.requeued_requests += int(self.slot_active[lost].sum())
+        self.report.promotes += len(rep["promoted"])
+        backfilled = {r for r, _ in rep["backfilled"]}
+        n = new_world.topo.n_comp
+        hist, active = {}, np.zeros((n, self.per_slice_batch), bool)
+        for r in range(n):
+            old = rep["role_map"][r]
+            for lane in range(self.per_slice_batch):
+                if r in backfilled:
+                    hist[(r, lane)] = [self.GARBAGE] * 3
+                else:
+                    hist[(r, lane)] = self.hist.get((old, lane), [])
+                # stale for backfilled roles too - clearing it is the
+                # gateway's job (mirrors the real repack)
+                active[r, lane] = self.slot_active[old, lane]
+        self.hist, self.slot_active = hist, active
+        self.session.last_repair = rep
+
+
+def fake_gateway(n_slices=3, rdegree=0.0, spares=1, lanes=2, max_queue=64,
+                 **kw):
+    # n_slices = serving slices; spares ride on top (WorldState.create's
+    # n_slices counts the whole physical pool)
+    world = WorldState.create(n_slices + spares, rdegree, n_spares=spares)
+    return ServeGateway(FakeEngine(world, lanes=lanes), max_queue=max_queue,
+                        **kw)
+
+
+def fake_kill(gw, victims, heal=True):
+    """The FTSession.recover window over the real WorldState algebra:
+    repair -> heal -> engine repack -> capacity callback -> on_recover.
+    Returns False when the kill is skipped (dead/unknown victims, or it
+    would leave no computational roles)."""
+    eng = gw.engine
+    old = eng.world
+    live = set(old.assignment) | set(old.spares)
+    victims = sorted(set(victims) & live)
+    if not victims:
+        return False
+    use_spares = heal and bool(old.spares)
+    new_world, rep = old.repair(victims, use_spares=use_spares)
+    if new_world.topo.n_comp == 0:
+        return False
+    hplan = None
+    if heal and new_world.spares:
+        healed, hplan = new_world.heal()
+        if hplan:
+            new_world = healed
+    eng.repack(old, new_world, rep)
+    eng.session.world = new_world
+    fresh = [p for _, p in rep["backfilled"]]
+    if hplan:
+        fresh += [a.spare for a in hplan.actions]
+    if fresh and eng.session.healer.on_capacity is not None:
+        eng.session.healer.on_capacity(new_world, hplan, fresh)
+    gw.on_recover(old, new_world, rep, plan=None)
+    return True
+
+
+# ---------------------------------------------------------------------------
+# queue / stream / registry / bounds units
+# ---------------------------------------------------------------------------
+
+
+def _req(rid, prompt=(1, 2), max_new=4, eos_id=None):
+    return Request(rid=rid, prompt=tuple(prompt), max_new=max_new,
+                   eos_id=eos_id, stream=RequestStream(rid, submitted_step=0))
+
+
+def test_queue_fifo_and_backpressure():
+    q = AdmissionQueue(max_queue=2)
+    q.admit(_req(0))
+    q.admit(_req(1))
+    with pytest.raises(QueueFull):
+        q.admit(_req(2))
+    assert (q.admitted, q.rejected, len(q)) == (2, 1, 2)
+    assert [q.pop().rid, q.pop().rid] == [0, 1]
+    assert q.pop() is None and not q
+
+
+def test_queue_requeue_bypasses_bound_and_goes_front():
+    q = AdmissionQueue(max_queue=1)
+    q.admit(_req(0))
+    q.requeue(_req(7))  # at capacity - still accepted, at the FRONT
+    q.requeue(_req(8))
+    assert [r.rid for r in q] == [8, 7, 0]
+    assert q.requeued == 2 and q.rejected == 0
+
+
+def test_stream_cursor_and_ttft():
+    s = RequestStream(0, submitted_step=3)
+    assert s.cursor == 0 and s.ttft_steps() is None
+    s.emit(11, step=5)
+    s.emit(12, step=6)
+    assert s.tokens == [11, 12] and s.cursor == 2
+    assert s.ttft_steps() == 2 and s.first_token_step == 5
+    s.finish("eos", step=6)
+    assert s.done and s.finish_reason == "eos"
+    with pytest.raises(AssertionError):
+        s.emit(13, step=7)
+
+
+def test_validate_bounds_edges():
+    validate_bounds(1, None)
+    validate_bounds(1, 1)
+    for mq, ms in [(0, None), (-3, None), (1, 0), (1, -1)]:
+        with pytest.raises(ValueError):
+            validate_bounds(mq, ms)
+
+
+def test_registry_sync_bind_and_bijection():
+    world = WorldState.create(5, 1.0, n_spares=1)  # 2 cmp + 2 rep + 1 spare
+    reg = WorkerRegistry(lanes=2)
+    reg.sync(world)
+    assert reg.n_comp == 2 and reg.n_slots == 4
+    kinds = sorted(w.kind for w in reg.workers.values())
+    assert kinds == ["cmp", "cmp", "replica", "replica", "spare"]
+    reg.bind((0, 0), 10)
+    reg.bind((1, 1), 11)
+    assert (0, 0) not in reg.free_slots() and len(reg.free_slots()) == 2
+    with pytest.raises(AssertionError):
+        reg.bind((0, 0), 12)  # slot already bound
+    reg.check()
+    assert reg.release((0, 0)) == 10
+    # rebind after a repair-style renumbering revalidates everything
+    reg.rebind({(0, 1): 11})
+    reg.check()
+    with pytest.raises(AssertionError):
+        reg.rebind({(5, 0): 1})  # dead role
+
+
+# ---------------------------------------------------------------------------
+# batcher over the FakeEngine
+# ---------------------------------------------------------------------------
+
+
+def drive(gw, steps, kills=None, start=0):
+    kills = dict(kills or {})
+    for t in range(start, start + steps):
+        for v in kills.pop(t, []):
+            fake_kill(gw, [v])
+        gw.run_step(t)
+    return gw
+
+
+def test_batcher_prefill_stream_and_slot_refill():
+    gw = fake_gateway(n_slices=1, spares=0, lanes=1, max_queue=8)
+    a = gw.submit([5, 6, 7], max_new=3)
+    b = gw.submit([9], max_new=2)  # waits: the single slot is taken
+    drive(gw, 20)
+    assert a.done and a.finish_reason == "max_new" and len(a.tokens) == 3
+    assert b.done and len(b.tokens) == 2
+    # prefill feeds the prompt token-by-token: the last prompt feed (step
+    # plen-1) predicts the first generated token
+    assert a.ttft_steps() == 2
+    # b bound only after a finished (continuous refill on the freed slot)
+    assert gw.streams[1].first_token_step > gw.streams[0].finished_step
+    # the fake decoder is a pure function of the sequence - the oracle
+    eng = FakeEngine(WorldState.create(1, 0.0, n_spares=0), lanes=1)
+    seq = [5, 6, 7]
+    for _ in range(3):
+        seq.append(eng._next(seq))
+    assert a.tokens == seq[3:]
+    assert gw.stats.completed == 2 and gw.queue.admitted == 2
+
+
+def test_batcher_eos_finish_frees_slot():
+    gw = fake_gateway(n_slices=1, spares=0, lanes=1)
+    eng = gw.engine
+    # find the first generated token for prompt [3] and use it as eos
+    probe = [3]
+    eos = eng._next(probe)
+    s = gw.submit([3], max_new=10, eos_id=eos)
+    drive(gw, 5)
+    assert s.done and s.finish_reason == "eos" and s.tokens == [eos]
+    assert gw.registry.free_slots() == [(0, 0)]
+    assert not eng.slot_active.any()
+
+
+def test_batcher_replay_suppression_pins_streamed_prefix():
+    """A requeued request re-prefills prompt + streamed tokens; outputs
+    below the cursor are verified re-generations, never re-emitted."""
+    gw = fake_gateway(n_slices=1, spares=0, lanes=1)
+    s = gw.submit([5, 6], max_new=6)
+    drive(gw, 4)  # 2 prompt feeds, then 3 generated (last feed emits)
+    assert s.cursor == 3 and not s.done
+    seen = list(s.tokens)
+    # simulate the failover path: evict, zero the slot, requeue
+    req = gw.batcher.evict_roles({0})[0]
+    gw.registry.rebind({})
+    gw.engine.reset_slots([(0, 0)])
+    gw.engine.slot_active[(0, 0)] = False
+    gw.queue.requeue(req)
+    drive(gw, 20, start=4)
+    assert s.done and len(s.tokens) == 6
+    assert s.tokens[:3] == seen, "replay duplicated or rewrote streamed tokens"
+
+
+def test_gateway_submit_validation_and_scheduled_rejection():
+    gw = fake_gateway(max_queue=1)
+    with pytest.raises(ValueError):
+        gw.submit([], max_new=2)
+    with pytest.raises(ValueError):
+        gw.submit([1], max_new=0)
+    with pytest.raises(ValueError):
+        gw.submit([1] * 60, max_new=10)  # exceeds max_len=64
+    # deferred arrivals that meet a full queue finish as "rejected"
+    gw2 = fake_gateway(n_slices=1, spares=0, lanes=1, max_queue=1)
+    keep = gw2.submit([1, 2], max_new=8)
+    blocked = [gw2.submit([3], max_new=2, at_step=1) for _ in range(2)]
+    drive(gw2, 2)
+    reasons = sorted(b.finish_reason or "" for b in blocked)
+    assert "rejected" in reasons and gw2.queue.rejected >= 1
+    assert not keep.done
+
+
+def test_fake_kill_backfill_requeues_and_streams_match_oracle():
+    def run(kills):
+        gw = fake_gateway(n_slices=3, rdegree=0.0, spares=1, lanes=2)
+        streams = [gw.submit([2 + i, 3], max_new=4 + i % 3, at_step=i // 3)
+                   for i in range(8)]
+        drive(gw, 60, kills=kills)
+        return gw, streams
+
+    ga, sa = run({})
+    gb, sb = run({4: [1]})  # unmirrored role dies mid-decode
+    assert all(s.done for s in sa) and all(s.done for s in sb)
+    for x, y in zip(sa, sb):
+        assert x.tokens == y.tokens, (y.rid, x.tokens, y.tokens)
+    assert gb.stats.requeues >= 1
+    assert gb.engine.report.requeued_requests == gb.stats.requeues
+    assert gb.queue.requeued == gb.stats.requeues
+    assert gb.registry.events, "capacity callback never fired"
+
+
+def test_fake_kill_promote_is_invisible():
+    def run(kills):
+        gw = fake_gateway(n_slices=4, rdegree=1.0, spares=0, lanes=2)
+        streams = [gw.submit([2 + i], max_new=5) for i in range(4)]
+        drive(gw, 40, kills=kills)
+        return gw, streams
+
+    ga, sa = run({})
+    gb, sb = run({3: [0]})  # cmp 0 dies; its replica promotes
+    for x, y in zip(sa, sb):
+        assert y.done and x.tokens == y.tokens
+    assert gb.stats.requeues == 0 and gb.engine.report.promotes == 1
+
+
+# ---------------------------------------------------------------------------
+# the property suite (satellite: arbitrary kills x admissions)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10**9))
+def test_property_random_kills_never_lose_or_corrupt_requests(seed):
+    """Arbitrary FailureSchedule-style kills interleaved with admissions:
+    no request is ever lost or duplicated, the slot assignment stays
+    bijective onto live roles, and every completed stream is bitwise
+    equal to the failure-free oracle."""
+    rng = np.random.default_rng(seed)
+    n_slices = int(rng.integers(2, 6))
+    rdegree = float(rng.choice([0.0, 0.5, 1.0]))
+    spares = int(rng.integers(0, 3))
+    lanes = int(rng.integers(1, 3))
+    heal = bool(rng.integers(0, 2))
+    n_req = int(rng.integers(4, 14))
+    reqs = [
+        (rng.integers(1, 40, size=int(rng.integers(1, 5))).tolist(),
+         int(rng.integers(1, 7)), int(rng.integers(0, n_req // 2 + 1)))
+        for _ in range(n_req)
+    ]
+    n_phys = n_slices + spares
+    kills = {}
+    for _ in range(int(rng.integers(0, 4))):
+        kills.setdefault(int(rng.integers(1, 25)), []).append(
+            int(rng.integers(0, n_phys))
+        )
+
+    def run(kill_plan, do_heal):
+        gw = fake_gateway(n_slices=n_slices, rdegree=rdegree, spares=spares,
+                          lanes=lanes, max_queue=2 * n_req + 4)
+        streams = [gw.submit(p, max_new=m, at_step=a) for p, m, a in reqs]
+        plan = {t: list(v) for t, v in kill_plan.items()}
+        for t in range(400):
+            for v in plan.pop(t, []):
+                fake_kill(gw, [v], heal=do_heal)
+            gw.run_step(t)
+            gw.registry.check()  # bijection onto live roles, every step
+            if not gw.pending() and not plan:
+                break
+        return gw, streams
+
+    oracle_gw, oracle = run({}, do_heal=heal)
+    gw, streams = run(kills, do_heal=heal)
+
+    # nothing lost: every submitted request reached a terminal state
+    assert len(gw.streams) == n_req
+    assert all(s.done for s in oracle)
+    assert all(s.done for s in streams), [
+        (s.rid, s.cursor) for s in streams if not s.done
+    ]
+    # nothing duplicated or corrupted: bitwise equal to the oracle
+    for x, y in zip(oracle, streams):
+        assert y.tokens == x.tokens, (seed, y.rid, x.tokens, y.tokens)
+        assert y.finish_reason == x.finish_reason
+    # requeue bookkeeping agrees across queue / gateway / engine report
+    assert gw.stats.requeues == gw.queue.requeued
+    assert gw.engine.report.requeued_requests == gw.stats.requeues
+    assert gw.stats.completed == n_req
+
+
+# ---------------------------------------------------------------------------
+# real-engine integration (subprocess, slow)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "mamba2-2.7b"])
+def test_gateway_flagship_bit_identical_streams_across_kill(arch):
+    """The flagship: N streaming requests through the real engine, an
+    unmirrored role killed mid-decode, heal backfills from a spare -
+    every client stream is bit-identical to the failure-free run, TTFT
+    across the kill stays bounded, and continuous batching needs no more
+    serve steps than the fixed-batch baseline. mamba2 exercises the
+    recurrent-state (SSM) slot-reset path where attention masking alone
+    could not hide a previous occupant."""
+    out = run_subprocess(
+        f"""
+        import numpy as np
+        from repro.configs.registry import smoke_config
+        from repro.serving.engine import ServeEngine
+        from repro.serving.gateway import ServeGateway
+
+        cfg = smoke_config({arch!r})
+
+        def mk():
+            eng = ServeEngine(cfg, n_slices=3, model_shards=1, rdegree=0.0,
+                              spares=1, heal="eager", max_len=64,
+                              slot_granular=True)
+            return ServeGateway(eng, max_queue=64)
+
+        def workload(gw):
+            rng = np.random.default_rng(0)
+            return [gw.submit(rng.integers(1, 50, size=2 + i % 3),
+                              max_new=4 + i % 5, at_step=i // 4)
+                    for i in range(12)]
+
+        ga = mk(); sa = workload(ga); ga.serve(max_steps=10_000)
+        gb = mk(); sb = workload(gb)
+        gb.serve(max_steps=10_000, failures={{6: [1]}})
+
+        assert all(s.done for s in sa) and all(s.done for s in sb)
+        for x, y in zip(sa, sb):
+            assert x.tokens == y.tokens, (y.rid, x.tokens, y.tokens)
+        assert gb.stats.requeues >= 1, "kill missed every in-flight slot"
+        assert gb.engine.report.requeued_requests == gb.stats.requeues
+        p99 = gb.summary()["ttft_p99_steps"]
+        assert 0 < p99 <= 40, f"TTFT blew up across the kill: {{p99}}"
+
+        # fixed-batch baseline: full waves, turnover only when the LAST
+        # sequence of a wave finishes
+        gc = mk()
+        rng = np.random.default_rng(0)
+        reqs = [(rng.integers(1, 50, size=2 + i % 3), 4 + i % 5)
+                for i in range(12)]
+        B = gc.registry.n_slots
+        for w in range(0, 12, B):
+            for p, m in reqs[w : w + B]:
+                gc.submit(p, max_new=m)
+            gc.serve(max_steps=10_000)
+        assert ga.stats.steps <= gc.stats.steps, (
+            ga.stats.steps, gc.stats.steps)
+        print("FLAGSHIP-OK", ga.stats.steps, gc.stats.steps,
+              gb.stats.requeues)
+        """,
+        devices=4,
+    )
+    assert "FLAGSHIP-OK" in out
+
+
+@pytest.mark.slow
+def test_requeue_accounting_counts_only_live_slots():
+    """Regression (the ServeEngine accounting fix): a killed role whose
+    lane already FINISHED its request must not be charged as a requeue -
+    only live (unfinished) slots re-enter the queue."""
+    out = run_subprocess(
+        """
+        import numpy as np
+        from repro.configs.registry import smoke_config
+        from repro.serving.engine import ServeEngine
+        from repro.serving.gateway import ServeGateway
+
+        cfg = smoke_config("qwen2.5-3b")
+
+        def run(failures=None):
+            eng = ServeEngine(cfg, n_slices=3, model_shards=1, rdegree=0.0,
+                              spares=0, heal="none", max_len=64,
+                              slot_granular=True)
+            gw = ServeGateway(eng, max_queue=16)
+            # bind order is rid->slot: 0->(0,0) 1->(0,1) 2->(1,0) 3->(1,1)...
+            maxn = [8, 8, 2, 12, 8, 8]
+            streams = [gw.submit([5 + i, 3], max_new=maxn[i])
+                       for i in range(6)]
+            gw.serve(max_steps=200, failures=failures)
+            return gw, streams
+
+        ga, sa = run()
+        # rid2 (slot (1,0), max_new=2) finishes after ~4 steps; kill
+        # phys 1 at step 8: only rid3 (slot (1,1)) is still in flight
+        gb, sb = run(failures={8: [1]})
+        assert sb[2].done and sb[2].finished_step < 8
+        r = gb.engine.report
+        assert r.requeued_requests == 1, (
+            f"charged finished slots too: {r.requeued_requests}")
+        assert gb.stats.requeues == 1
+        for x, y in zip(sa, sb):
+            assert y.done and x.tokens == y.tokens
+        print("ACCOUNTING-OK")
+        """,
+        devices=3,
+    )
+    assert "ACCOUNTING-OK" in out
+
+
+@pytest.mark.slow
+def test_serve_cli_gateway_bounds_rejected():
+    """--gateway rejects zero/negative --max-queue / --max-batch-slots."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    for flags, msg in [
+        (["--max-queue", "0"], "--max-queue"),
+        (["--max-queue", "-2"], "--max-queue"),
+        (["--max-batch-slots", "-1"], "--max-batch-slots"),
+    ]:
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "--gateway",
+             "--slices", "2", "--model-shards", "1"] + flags,
+            capture_output=True, text=True, env=env, timeout=300,
+        )
+        assert proc.returncode != 0, flags
+        assert msg in proc.stderr, (flags, proc.stderr[-500:])
