@@ -14,6 +14,8 @@ timings, xfer contention/delta stats):
 - xfer         : repro.xfer microbenchmarks (lock contention, pipelined
                  submit latency, delta bytes moved)
 - roofline     : dry-run derived three-term roofline per (arch x shape)
+- sdc          : repro.scrub (in-step digest scrub overhead at r0.5,
+                 digest-guided partial-restore bytes vs the full blob)
 
 ``python -m benchmarks.run [suite ...]`` - default: all.
 """
@@ -27,7 +29,8 @@ from benchmarks.perf_json import rows_payload, update_perf_json
 
 def main() -> None:
     wanted = sys.argv[1:] or [
-        "mtti", "recovery", "xfer", "failure_free", "failures", "roofline"
+        "mtti", "recovery", "xfer", "failure_free", "failures", "roofline",
+        "sdc",
     ]
     failures = 0
     for suite in wanted:
@@ -62,6 +65,11 @@ def main() -> None:
                 from benchmarks import roofline as m
 
                 rows = m.rows()
+            elif suite == "sdc":
+                from benchmarks import sdc_bench as m
+
+                results = m.run()
+                rows = m.rows(results)
             else:
                 print(f"unknown suite {suite}", file=sys.stderr)
                 failures += 1

@@ -1,0 +1,115 @@
+"""repro.scrub benchmarks: scrub overhead + digest-guided partial restore.
+
+Two questions the online SDC plane must answer with numbers:
+
+1. What does continuous scrubbing COST? Per-step time with the in-step
+   digest cross-check on vs off at rdegree 0.5 (the paper's headline
+   replication setting) - the scrub rides the step's existing collectives,
+   so the overhead should be a small fraction of a step.
+2. What does digest-guided partial restore SAVE? A single bit flip right
+   after a checkpoint poisons one chunk of one mirror; the repair should
+   move only the differing chunks, not the whole blob
+   (``FTReport.sdc_bytes_moved`` vs ``sdc_bytes_full``).
+
+``--tiny`` runs the CI smoke shape (4 slices, short runs).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+_CHILD = """
+import json
+from repro.configs.registry import smoke_config
+from repro.core.fault_injector import SDCEvent, SDCSchedule
+from repro.core.simulator import SimCluster
+
+TINY = {tiny}
+N = 4 if TINY else 8
+STEPS = 6 if TINY else 12
+cfg = smoke_config("qwen2.5-3b")
+results = []
+
+# --- 1. scrub overhead at rdegree 0.5 (check off vs on) -------------------
+times = {{}}
+for check in (False, True):
+    sim = SimCluster(cfg, n_slices=N, model_shards=1, rdegree=0.5,
+                     seq_len=32, sdc_check=check)
+    rep = sim.run(STEPS)
+    times[check] = rep.app_seconds / max(rep.steps_completed, 1)
+results.append({{
+    "case": "scrub-overhead/r0.5", "steps": STEPS,
+    "us_off": times[False] * 1e6, "us_on": times[True] * 1e6,
+    "overhead_frac": times[True] / times[False] - 1.0,
+}})
+
+# --- 2. partial vs full restore bytes on a single-chunk corruption --------
+# sign-bit flip (the old checksum's provable blind spot) one step after a
+# checkpoint: the update gate froze the step, so exactly one chunk of the
+# victim's view differs from the submit and the repair moves only that
+sim = SimCluster(cfg, n_slices=4, model_shards=1, rdegree=1.0, seq_len=32,
+                 checkpoint_every=2, chunk_bytes=64 * 1024,
+                 sdc_check=True, sdc_inject=True)
+rep = sim.run(STEPS, sdc=SDCSchedule(
+    [SDCEvent(step=3, victim=1, target="param", bit=31)]))
+assert rep.sdc_detected == 1, rep.sdc_detected
+assert rep.sdc_repairs == 1, rep.sdc_repairs
+assert rep.sdc_bytes_full > 0
+results.append({{
+    "case": "partial-restore", "steps": STEPS,
+    "detected": rep.sdc_detected, "repairs": rep.sdc_repairs,
+    "restarts": rep.restarts,
+    "moved_bytes": rep.sdc_bytes_moved, "full_bytes": rep.sdc_bytes_full,
+    "moved_frac": rep.sdc_bytes_moved / rep.sdc_bytes_full,
+    "handler_us": rep.handler_seconds * 1e6,
+    "restored_from": rep.restored_from,
+}})
+print("RESULTS_JSON:" + json.dumps(results))
+"""
+
+
+def run(tiny: bool = False):
+    env = dict(os.environ)
+    n = 4 if tiny else 8
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_CHILD.format(tiny=tiny))],
+        capture_output=True, text=True, env=env, timeout=3000,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-3000:])
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULTS_JSON:")][0]
+    return json.loads(line[len("RESULTS_JSON:"):])
+
+
+def rows(results):
+    out = []
+    for r in results:
+        if r["case"] == "scrub-overhead/r0.5":
+            out.append((
+                "sdc/scrub-overhead/r0.5", r["us_on"],
+                f"off={r['us_off']:.0f}us overhead=+{r['overhead_frac']:.1%}",
+            ))
+        else:
+            out.append((
+                "sdc/partial-restore", r["handler_us"],
+                f"moved={r['moved_bytes']}/{r['full_bytes']}B "
+                f"({r['moved_frac']:.1%}) repairs={r['repairs']} "
+                f"restarts={r['restarts']}",
+            ))
+    return out
+
+
+if __name__ == "__main__":
+    results = run(tiny="--tiny" in sys.argv)
+    from perf_json import update_perf_json
+
+    update_perf_json("sdc", results)
+    for name, us, d in rows(results):
+        print(f"{name},{us:.0f},{d}")

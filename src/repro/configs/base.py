@@ -258,8 +258,15 @@ class ReplicationConfig:
     # fused: single masked all-reduce over the whole data axis (beyond-paper).
     # branch: replicas contribute grad/k inside the all-reduce (beyond-paper).
     collective_mode: str = "paper"  # 'paper' | 'fused' | 'branch'
-    # SDC detection: replicas cross-check a gradient checksum (RedMPI-style)
+    # SDC detection: mirrored pairs cross-check per-chunk [abs-sum, sum]
+    # digests of gradients AND params inside the step (RedMPI-style); a
+    # mismatch gates the optimizer update so no poisoned step ever lands
     sdc_check: bool = False
+    # absolute per-column digest slack; 0.0 because healthy mirrors are
+    # bit-identical (same compiled program, same inputs)
+    sdc_tol: float = 0.0
+    # scrub digest granularity (elements per per-leaf chunk)
+    sdc_chunk_elems: int = 1 << 12
     # compress the cmp->rep intercomm payload (beyond-paper)
     intercomm_compression: str = "none"  # 'none' | 'bf16' | 'int8'
     # dtype of the gradient all-reduce on the data plane (beyond-paper:

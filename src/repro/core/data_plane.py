@@ -136,9 +136,29 @@ def reduce_gradients(grads: PyTree, *, idx, axes: Tuple[str, ...], mesh: Mesh,
     return _tree_where(is_rep > 0, g_rep, g_local)
 
 
-def sdc_check(grads: PyTree, *, idx, axes, mesh, world: WorldState):
-    """RedMPI-style silent-data-corruption cross-check: mirrored pairs
-    compare a gradient checksum; returns the summed |pair difference|."""
+def sdc_scrub(grads: PyTree, params: PyTree, *, idx, axes, mesh,
+              world: WorldState, repl: ReplicationConfig) -> Dict[str, jnp.ndarray]:
+    """RedMPI-style silent-data-corruption cross-check, per chunk.
+
+    The old form reduced each slice to ONE sum-of-squares scalar - provably
+    blind to sign flips (``x**2 == (-x)**2``) and unable to say which
+    replica or which bytes are poisoned. Here every mirrored pair compares
+    per-chunk ``[abs-sum, sum]`` digest rows (repro.scrub.digest) of both
+    the gradients and the params, and the full per-slice digest tables are
+    exported so the host can run a majority vote and a digest-guided
+    partial restore.
+
+    Returns metrics:
+
+    - ``sdc``: global max |pair digest difference| (0.0 on healthy
+      mirrors - bit-identical state digests to bit-identical rows);
+    - ``sdc_chunks``: number of digest chunks disagreeing beyond
+      ``repl.sdc_tol`` anywhere in the world;
+    - ``sdc_grad_table`` / ``sdc_param_table``: (n_slices, n_chunks, 2)
+      digest rows by mesh position (one-hot psum export).
+    """
+    from repro.scrub.digest import leaf_digest_matrix
+
     topo = world.topo
     roles = world.roles_in_mesh_order()
     sign_by_pos = np.asarray(
@@ -149,12 +169,31 @@ def sdc_check(grads: PyTree, *, idx, axes, mesh, world: WorldState):
         paired[roles.index(c)] = 1.0
         paired[roles.index(topo.n_comp + j)] = 1.0
     sign = jnp.asarray(sign_by_pos)[idx] * jnp.asarray(paired)[idx]
-    checksum = sum(
-        jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)
-    )
     pair_groups = world.physical_groups(topo.pair_groups())
-    diff = jax.lax.psum(checksum * sign, axes, axis_index_groups=pair_groups)
-    return jax.lax.psum(jnp.abs(diff), axes) / 2.0
+    n_total = len(roles)
+    onehot = (jnp.arange(n_total, dtype=jnp.int32) == idx).astype(jnp.float32)
+
+    def scrub_one(tree):
+        d = leaf_digest_matrix(tree, repl.sdc_chunk_elems)
+        if d.shape[0] == 0:
+            zero = jnp.zeros(())
+            return zero, zero, jnp.zeros((n_total, 0, 2), jnp.float32)
+        diff = jax.lax.psum(d * sign.astype(d.dtype), axes,
+                            axis_index_groups=pair_groups)
+        worst = jax.lax.pmax(jnp.max(jnp.abs(diff)), axes)
+        bad = jnp.any(jnp.abs(diff) > repl.sdc_tol, axis=-1)
+        n_bad = jax.lax.pmax(jnp.sum(bad.astype(jnp.float32)), axes)
+        table = jax.lax.psum(onehot[:, None, None] * d[None, :, :], axes)
+        return worst, n_bad, table
+
+    g_worst, g_bad, g_table = scrub_one(grads)
+    p_worst, p_bad, p_table = scrub_one(params)
+    return {
+        "sdc": jnp.maximum(g_worst, p_worst),
+        "sdc_chunks": g_bad + p_bad,
+        "sdc_grad_table": g_table,
+        "sdc_param_table": p_table,
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -172,6 +211,7 @@ def build_train_step(
     *,
     impl: str = "chunked",
     donate: bool = True,
+    sdc_inject: bool = False,
 ) -> Callable:
     """Returns jitted ``step(params, opt_state, batch) -> (params, opt_state,
     metrics)``.
@@ -180,17 +220,33 @@ def build_train_step(
     host data pipeline lays shards out in mesh order with replica slices
     receiving a copy of their partner's shard (paper: replicas run the same
     ops on the same inputs).
+
+    With ``sdc_inject=True`` the step takes a 4th argument: a traced (6,)
+    int32 corruption spec (repro.scrub.digest) that arms an in-graph
+    single-bit flip on one slice's view of the grads or params - armed and
+    disarmed per call without recompiling. When ``repl.sdc_check`` is also
+    on, a detected mismatch gates the optimizer update (``sdc`` metric
+    above ``repl.sdc_tol``), so a poisoned step never lands in the state
+    and mirrored trajectories stay bit-identical through detection.
     """
+    from repro.scrub.digest import TARGET_GRAD, TARGET_PARAM, inject_bitflip
+
     axes = manual_axes(mesh)
     topo = world.topo
     inv_ncomp = 1.0 / topo.n_comp
 
-    def per_slice(params, opt_state, batch, slice_iota):
+    def per_slice(params, opt_state, batch, slice_iota, sdc_spec):
         # this slice's flat (pod, data) index: first element of the sharded
         # iota (each slice sees a length-1 shard). axis_index would be
         # equivalent but does not lower on jax 0.4.x when the model axis is
         # a GSPMD auto axis (PartitionId limitation - see repro.compat).
         idx = slice_iota[0]
+        stored = params
+        if sdc_inject:
+            # the victim computes with a poisoned VIEW of its params; the
+            # underlying stored tree is untouched (persistent corruption is
+            # modelled by keeping the spec armed across steps)
+            params = inject_bitflip(params, sdc_spec, idx, TARGET_PARAM)
         def loss_of(p, b):
             return M.loss_fn(p, b, model_cfg, impl=impl)
 
@@ -214,11 +270,17 @@ def build_train_step(
             )
             ce = m["ce"]
 
+        if sdc_inject:
+            grads = inject_bitflip(grads, sdc_spec, idx, TARGET_GRAD)
+
         metrics: Dict[str, jnp.ndarray] = {}
+        clean = None
         if repl.sdc_check and topo.n_rep:
-            metrics["sdc"] = sdc_check(
-                grads, idx=idx, axes=axes, mesh=mesh, world=world
-            )
+            metrics.update(sdc_scrub(
+                grads, params, idx=idx, axes=axes, mesh=mesh, world=world,
+                repl=repl,
+            ))
+            clean = metrics["sdc"] <= repl.sdc_tol
 
         g = reduce_gradients(
             grads, idx=idx, axes=axes, mesh=mesh, world=world, repl=repl
@@ -226,6 +288,13 @@ def build_train_step(
         g = _tree_scale(g, inv_ncomp)
 
         params_new, opt_state_new, stats = optimizer.update(g, opt_state, params)
+        if clean is not None:
+            # corruption gate: a poisoned gradient entered the reduction, so
+            # params_new is poisoned on EVERY slice - freeze the update (the
+            # gate is a global reduction, so all slices agree) and let the
+            # host recovery path decide (retry / vote / partial restore)
+            params_new = _tree_where(clean, params_new, stored)
+            opt_state_new = _tree_where(clean, opt_state_new, opt_state)
 
         # loss averaged over computational slices (scalar all-reduce)
         roles = world.roles_in_mesh_order()
@@ -242,17 +311,25 @@ def build_train_step(
     smapped = shard_map(
         per_slice,
         mesh=mesh,
-        in_specs=(P(), P(), batch_spec, P(lead)),
+        in_specs=(P(), P(), batch_spec, P(lead), P()),
         out_specs=(P(), P(), P()),
         axis_names=set(axes),
         check_vma=False,
     )
     n_total = n_slices(mesh)
+    iota = jnp.arange(n_total, dtype=jnp.int32)
 
-    def step(params, opt_state, batch):
-        return smapped(
-            params, opt_state, batch, jnp.arange(n_total, dtype=jnp.int32)
-        )
+    if sdc_inject:
+        def step(params, opt_state, batch, sdc_spec):
+            return smapped(params, opt_state, batch, iota, sdc_spec)
+    else:
+        from repro.scrub.digest import NULL_SPEC
+
+        null_spec = jnp.asarray(NULL_SPEC)
+
+        def step(params, opt_state, batch):
+            # constant disarmed spec: XLA folds the injection branch away
+            return smapped(params, opt_state, batch, iota, null_spec)
 
     donate_argnums = (0, 1) if donate else ()
     return jax.jit(step, donate_argnums=donate_argnums)

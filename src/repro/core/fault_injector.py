@@ -1,13 +1,20 @@
-"""Weibull fault injector (paper Sec. VII-B).
+"""Weibull fault injector (paper Sec. VII-B) + deterministic SDC events.
 
 "It uses a Weibull Distribution to generate fault injection timings and
 randomly kills one of the MPI processes after the generated time has
 passed." Deterministic under a seed so experiments are reproducible.
+
+Fail-stop is only half the fault model: :class:`SDCEvent` /
+:class:`SDCInjector` / :class:`SDCSchedule` add *silent data corruption* -
+a single bit flip in one mirror's view of the gradients or params,
+with seeded leaf/element/bit selection so scrubbing tests and benchmarks
+reproduce a corruption scenario exactly (the ``repro.scrub`` plane turns
+these into in-graph flips via ``scrub.digest.encode_spec``).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Iterator, List, Optional, Tuple
+from dataclasses import dataclass, field, replace
+from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -49,3 +56,128 @@ class FaultInjector:
             if t >= horizon:
                 return events
             events.append((t, victim))
+
+
+# ---------------------------------------------------------------------------
+# silent data corruption (the repro.scrub fault model)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SDCEvent:
+    """One bit flip in one slice's view of its state at one step.
+
+    ``victim`` is a PHYSICAL slice id (like FailureSchedule's victims);
+    ``target`` picks the poisoned space: ``"grad"`` models a transient
+    compute fault (gone next step), ``"param"`` a poisoned resident copy
+    (persists until repaired). ``leaf``/``elem``/``bit`` may be None -
+    :meth:`SDCInjector.resolve` fills them deterministically from the
+    seed, so a schedule written as just ``step:victim`` is reproducible.
+    """
+
+    step: int
+    victim: int
+    target: str = "param"
+    leaf: Optional[int] = None
+    elem: Optional[int] = None
+    bit: Optional[int] = None
+
+    def __post_init__(self):
+        assert self.target in ("grad", "param"), self.target
+
+    @property
+    def resolved(self) -> bool:
+        return None not in (self.leaf, self.elem, self.bit)
+
+
+@dataclass
+class SDCInjector:
+    """Seeded leaf/element/bit selection (Philox, like FaultInjector):
+    leaves weighted by element count (a flip lands uniformly over the
+    state's elements), bit uniform over all 32 - the sign bit included,
+    BECAUSE it is the case the old sum-of-squares checksum provably
+    missed."""
+
+    seed: int = 0
+    _rng: np.random.Generator = field(init=False, repr=False)
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(np.random.Philox(key=self.seed))
+
+    def resolve(self, event: SDCEvent,
+                leaf_sizes: Sequence[Tuple[int, int]]) -> SDCEvent:
+        """Fill the event's unspecified leaf/elem/bit. ``leaf_sizes`` is
+        ``[(full-tree leaf index, n_elements), ...]`` over the flippable
+        (float32, non-empty) leaves - the same leaf space the in-graph
+        ``scrub.digest.inject_bitflip`` indexes."""
+        if event.resolved:
+            return event
+        assert leaf_sizes, "no flippable leaves in the state tree"
+        idxs = np.asarray([i for i, _ in leaf_sizes])
+        sizes = np.asarray([n for _, n in leaf_sizes], np.float64)
+        leaf = event.leaf
+        if leaf is None:
+            leaf = int(self._rng.choice(idxs, p=sizes / sizes.sum()))
+        n = dict(leaf_sizes).get(leaf)
+        assert n, f"leaf {leaf} is not flippable (not float32 / empty)"
+        elem = event.elem if event.elem is not None else int(self._rng.integers(n))
+        bit = event.bit if event.bit is not None else int(self._rng.integers(32))
+        return replace(event, leaf=leaf, elem=elem, bit=bit)
+
+
+class SDCSchedule:
+    """Deterministic corruption plan: dispatch step -> SDCEvent. Mirrors
+    ``FailureSchedule``'s contract: input copied, events consumed by
+    :meth:`take` (a replay never re-poisons a step it already survived)."""
+
+    def __init__(self, events: Union[None, "SDCSchedule",
+                                     Sequence[SDCEvent],
+                                     Mapping[int, SDCEvent]] = None):
+        if isinstance(events, SDCSchedule):
+            self._by_step = dict(events._by_step)
+        elif isinstance(events, Mapping):
+            self._by_step = {int(s): e for s, e in events.items()}
+        else:
+            self._by_step = {}
+            for e in events or []:
+                assert e.step not in self._by_step, (
+                    f"duplicate SDC event at step {e.step}")
+                self._by_step[e.step] = e
+
+    @classmethod
+    def parse(cls, spec: str) -> "SDCSchedule":
+        """CLI syntax: comma list of ``step:victim[:target[:leaf:elem:bit]]``
+        (target ``grad``/``param``, default param; omitted leaf/elem/bit
+        are drawn by the seeded SDCInjector)."""
+        events = []
+        for item in filter(None, (s.strip() for s in (spec or "").split(","))):
+            parts = item.split(":")
+            try:
+                if len(parts) == 2:
+                    step, victim = parts
+                    events.append(SDCEvent(int(step), int(victim)))
+                elif len(parts) == 3:
+                    step, victim, target = parts
+                    events.append(SDCEvent(int(step), int(victim), target))
+                elif len(parts) == 6:
+                    step, victim, target, leaf, elem, bit = parts
+                    events.append(SDCEvent(int(step), int(victim), target,
+                                           int(leaf), int(elem), int(bit)))
+                else:
+                    raise ValueError(len(parts))
+            except (ValueError, AssertionError):
+                raise ValueError(
+                    f"bad SDC injection {item!r}: expected "
+                    "step:victim[:target[:leaf:elem:bit]] "
+                    "(e.g. --sdc-inject 5:2 or 5:2:param:0:17:31)"
+                ) from None
+        return cls(events)
+
+    def take(self, step: int) -> Optional[SDCEvent]:
+        return self._by_step.pop(step, None)
+
+    def pending(self) -> int:
+        return len(self._by_step)
+
+    def __bool__(self) -> bool:
+        return bool(self._by_step)

@@ -34,10 +34,12 @@ import numpy as np
 from repro.compat import set_mesh
 from repro.configs.base import ModelConfig, ReplicationConfig, TrainConfig
 from repro.core import data_plane as DP
+from repro.core.fault_injector import SDCEvent, SDCInjector, SDCSchedule
 from repro.data.pipeline import TokenPipeline
 from repro.dist.sharding import opt_shardings, param_shardings
 from repro.ft import FailureSchedule, FTReport, FTSession, ResilientProgram
 from repro.models import model as M
+from repro.scrub import NULL_SPEC, ScrubEvidence, ScrubPlane, encode_spec
 from repro.optim.adamw import adamw
 from repro.optim.schedules import constant
 from repro.store import DurableStore, PartnerMemoryStore, RecoveryLadder
@@ -77,10 +79,28 @@ class SimCluster(ResilientProgram):
         pipeline: bool = True,
         durable_delta: str = "none",
         durable_max_chain: int = 4,
+        sdc_check: bool = False,
+        sdc_inject: bool = False,
+        sdc_tol: float = 0.0,
+        sdc_chunk_elems: int = 1 << 12,
+        sdc_seed: int = 0,
     ):
         self.model_cfg = model_cfg
-        self.repl = ReplicationConfig(rdegree=rdegree, collective_mode=collective_mode)
+        self.repl = ReplicationConfig(
+            rdegree=rdegree, collective_mode=collective_mode,
+            sdc_check=sdc_check, sdc_tol=sdc_tol,
+            sdc_chunk_elems=sdc_chunk_elems,
+        )
         self.train_cfg = TrainConfig(microbatches=microbatches)
+        # online SDC scrubbing (repro.scrub): ``sdc_check`` turns on the
+        # in-step per-chunk digest cross-check + update gate; ``sdc_inject``
+        # additionally lowers the in-graph bit-flip port (the step takes a
+        # traced corruption spec) for schedules passed to :meth:`run`
+        self._sdc_inject = bool(sdc_inject)
+        self._sdc_injector = SDCInjector(seed=sdc_seed)
+        self._sdc_schedule: Optional[SDCSchedule] = None
+        self._sdc_armed: Optional[SDCEvent] = None
+        self._sdc_evidence = None
         self.impl = impl
         self.pipeline = TokenPipeline(
             model_cfg, seq_len=seq_len, per_slice_batch=per_slice_batch, seed=seed
@@ -129,6 +149,11 @@ class SimCluster(ResilientProgram):
                 ))
             stores = RecoveryLadder(levels, xfer=xfer)
 
+        scrub = (
+            ScrubPlane(chunk_elems=sdc_chunk_elems, tol=sdc_tol)
+            if sdc_check else None
+        )
+
         # the session owns the entire ULFM lifecycle; FTSession.__init__
         # builds the base mesh and calls build_step for the initial lowering
         self.session = FTSession(
@@ -144,6 +169,7 @@ class SimCluster(ResilientProgram):
             replay="log",
             report=SimReport(),
             unit="step",
+            scrub=scrub,
         )
 
     # ---- convenience views over the session --------------------------------
@@ -184,10 +210,26 @@ class SimCluster(ResilientProgram):
                 self.optimizer,
                 impl=self.impl,
                 donate=False,
+                sdc_inject=self._sdc_inject,
             )
 
     def run_step(self, step: int) -> float:
+        if self._sdc_schedule is not None:
+            ev = self._sdc_schedule.take(step)
+            if ev is not None:
+                self._arm_sdc(ev)
         loss = self._run_one_step(step)
+        if self._sdc_armed is not None and self._sdc_armed.target == "grad":
+            # transient compute fault: it poisoned this step's gradients
+            # only, so the session's retry must rerun clean
+            self._sdc_armed = None
+        if self._sdc_evidence is not None:
+            # the update was gated in-graph - the step is NOT complete;
+            # hand the evidence to the session's corruption handler and
+            # keep the poisoned loss out of the trajectory
+            ev, self._sdc_evidence = self._sdc_evidence, None
+            self.session.report_corruption(step, ev)
+            return loss
         self.report.losses.append(loss)
         return loss
 
@@ -208,6 +250,60 @@ class SimCluster(ResilientProgram):
         self.params = M.init(key, self.model_cfg)
         self.opt_state = self.optimizer.init(self.params)
 
+    # ---- repro.scrub hooks -------------------------------------------
+    def scrub_view(self, state):
+        """Narrow a snapshot to what the in-step scrub tables digest
+        (params - the persistent space the vote adjudicates)."""
+        return {"params": state["params"]}
+
+    def corrupted_view(self):
+        """The victim's host-side view of its state: the snapshot tree
+        with the armed param flip applied. The in-graph flip poisons a
+        VIEW (the stored tree stays clean so the gate can freeze it), so
+        the corruption is re-materialized here for the ladder's byte
+        diff - this is the tree ``restore_partial`` compares against the
+        last submit's chunk fingerprints."""
+        state = {
+            "params": jax.tree.map(np.array, self.params),
+            "opt": jax.tree.map(np.array, self.opt_state),
+        }
+        e = self._sdc_armed
+        if e is None or e.target != "param" or not e.resolved:
+            return state
+        leaves, treedef = jax.tree.flatten(state["params"])
+        if 0 <= e.leaf < len(leaves) and leaves[e.leaf].dtype == np.float32:
+            arr = np.array(leaves[e.leaf])
+            flat = arr.reshape(-1)
+            if flat.size:
+                elem = min(max(e.elem, 0), flat.size - 1)  # clamp like in-graph
+                flat.view(np.uint32)[elem] ^= np.uint32(1) << np.uint32(e.bit & 31)
+                leaves[e.leaf] = arr
+                state["params"] = jax.tree.unflatten(treedef, leaves)
+        return state
+
+    def clear_corruption(self, verdict=None) -> None:
+        """The session repaired (or restarted past) the corruption:
+        disarm the spec so replayed steps run clean."""
+        self._sdc_armed = None
+
+    def _arm_sdc(self, event: SDCEvent) -> None:
+        leaf_sizes = [
+            (i, int(np.prod(x.shape)))
+            for i, x in enumerate(jax.tree.leaves(self.params))
+            if hasattr(x, "dtype") and x.dtype == jnp.float32
+            and int(np.prod(x.shape))
+        ]
+        self._sdc_armed = self._sdc_injector.resolve(event, leaf_sizes)
+
+    def _sdc_spec(self) -> np.ndarray:
+        e = self._sdc_armed
+        if e is None:
+            return NULL_SPEC
+        pos = self.world.mesh_position().get(e.victim)
+        if pos is None:  # victim slice is dead / off-mesh: nothing to poison
+            return NULL_SPEC
+        return encode_spec(pos, e.target, e.leaf, e.elem, e.bit)
+
     # ------------------------------------------------------------------
     def _place_state(self, mesh) -> None:
         pshard = param_shardings(self.params, mesh, self.model_cfg)
@@ -220,9 +316,29 @@ class SimCluster(ResilientProgram):
         batch_np = self.pipeline.global_batch(step, self.world)
         with set_mesh(self.mesh):
             batch = jax.tree.map(jnp.asarray, batch_np)
-            self.params, self.opt_state, metrics = self.step_fn(
-                self.params, self.opt_state, batch
-            )
+            if self._sdc_inject:
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state, batch,
+                    jnp.asarray(self._sdc_spec()),
+                )
+            else:
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state, batch
+                )
+            if (self.repl.sdc_check and "sdc" in metrics
+                    and float(metrics["sdc"]) > self.repl.sdc_tol):
+                self._sdc_evidence = ScrubEvidence(
+                    step=step,
+                    sdc=float(metrics["sdc"]),
+                    grad_table=np.asarray(metrics["sdc_grad_table"]),
+                    param_table=np.asarray(metrics["sdc_param_table"]),
+                    pairs=tuple(
+                        (int(g[0]), int(g[1]))
+                        for g in self.world.physical_groups(
+                            self.world.topo.pair_groups())
+                        if len(g) == 2
+                    ),
+                )
             return float(metrics["loss"])
 
     # ------------------------------------------------------------------
@@ -231,12 +347,23 @@ class SimCluster(ResilientProgram):
         steps: int,
         failures: Optional[Dict[int, List[int]]] = None,
         warmup_compile: bool = True,
+        sdc=None,
     ) -> SimReport:
         """Run ``steps`` training steps through the session's dispatch loop.
         ``failures`` maps step index -> physical slices to kill *during*
         that step (detected at its dispatch boundary, like a
         communication-time detection); the schedule is copied, never
-        mutated."""
+        mutated. ``sdc`` is an :class:`SDCSchedule` (or anything its
+        constructor accepts) of bit flips to arm - requires the cluster
+        to be built with ``sdc_inject=True``."""
+        if sdc is not None:
+            assert self._sdc_inject, (
+                "an SDC schedule needs sdc_inject=True at construction "
+                "(the step must be lowered with the corruption-spec port)"
+            )
+            self._sdc_schedule = (
+                sdc if isinstance(sdc, SDCSchedule) else SDCSchedule(sdc)
+            )
         if warmup_compile:
             # compile outside timing WITHOUT consuming step 0: snapshot
             # state, run, restore (the update must not be applied twice)

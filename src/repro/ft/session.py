@@ -85,6 +85,17 @@ class FTReport:
     #: mirrors the world ran below its configured target (0 under healing
     #: that keeps up; grows linearly once redundancy erodes un-healed)
     exposure_steps: int = 0
+    #: silent-data-corruption scrubbing (repro.scrub): pair digest
+    #: mismatches the step-level scrub flagged ...
+    sdc_detected: int = 0
+    #: ... of which grad-space transients resolved by a single retry ...
+    sdc_transient: int = 0
+    #: ... and persistent corruptions repaired through a restore
+    sdc_repairs: int = 0
+    #: bytes digest-guided partial restores actually moved, and what the
+    #: equivalent full-blob restores would have moved
+    sdc_bytes_moved: int = 0
+    sdc_bytes_full: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -174,6 +185,7 @@ class FTSession:
         replay: str = "log",
         report: Optional[FTReport] = None,
         unit: str = "step",
+        scrub=None,
     ):
         assert replay in ("log", "none"), replay
         import jax  # deferred: callers set XLA_FLAGS before first jax use
@@ -210,6 +222,12 @@ class FTSession:
         self.replay = replay
         self.report = report if report is not None else FTReport()
         self.unit = unit
+        #: repro.scrub.ScrubPlane (or None): records each submit's digest
+        #: reference - the extra majority-vote holder - and carries the
+        #: scrub tolerance the corruption handler classifies with
+        self.scrub = scrub
+        self._sdc_pending = None
+        self._sdc_retried: set = set()
         self.generation = 0
         self.logs: Dict[int, StepLog] = {}
         self.reset_logs()
@@ -261,6 +279,11 @@ class FTSession:
         # staging + store placement overlap the next dispatch unit on the
         # ladder's transfer plane (drained by recover() and run())
         self.ladder.submit_async(step, state, {"step": step, **meta})
+        if self.scrub is not None:
+            # the scrub plane digests the same submit (the program narrows
+            # the tree to what the in-step scrub tables cover, e.g. params)
+            view = getattr(self.program, "scrub_view", None)
+            self.scrub.record_submit(step, view(state) if view else state)
 
     def _restore(self) -> Optional[int]:
         """Walk the recovery ladder (cheapest surviving level first).
@@ -402,6 +425,124 @@ class FTSession:
         return rep, plan
 
     # ------------------------------------------------------------------
+    # the corruption handler (beyond-paper: repro.scrub)
+    # ------------------------------------------------------------------
+    def report_corruption(self, step: int, evidence) -> None:
+        """Called by the program from inside ``run_step`` when the step's
+        scrub metrics flagged a mirrored-pair digest mismatch (a
+        :class:`repro.scrub.ScrubEvidence`). The dispatch loop enters
+        :meth:`recover_corruption` before counting the unit as done."""
+        self._sdc_pending = evidence
+
+    def recover_corruption(self, step: int) -> int:
+        """detect -> classify -> vote -> (partial) restore -> replay.
+
+        The poisoned update never landed (the data plane's corruption gate
+        freezes params/opt on detection), so:
+
+        - grad-space-only mismatch (param digest tables agree): transient
+          flip - retry the unit once; it recurring escalates;
+        - param-space mismatch (or a repeat): persistent - a majority vote
+          over the param digest table + the scrub plane's last-submit
+          reference names the victim, and the ladder's digest-guided
+          partial restore moves ONLY the chunks whose bytes differ from
+          the victim's view (``FTReport.sdc_bytes_moved`` vs the full
+          blob). An inconclusive vote or unsupported ladder falls back to
+          the full-blob restore walk. Either way the trainer replays from
+          the restored step, reproducing the failure-free trajectory.
+
+        Returns the step to resume dispatch from.
+        """
+        from repro.scrub.vote import majority_vote, mismatched_pairs
+
+        ev, self._sdc_pending = self._sdc_pending, None
+        t0 = time.perf_counter()
+        self.report.sdc_detected += 1
+        # any pipelined submit must land before the handler consults or
+        # diffs against the stores (same barrier as the fail-stop window)
+        self.ladder.drain()
+        tol = float(getattr(self.scrub, "tol", 0.0) or 0.0)
+        bad_pairs = (
+            mismatched_pairs(ev.param_table, ev.pairs, tol=tol)
+            if ev.param_table is not None and len(ev.param_table) else []
+        )
+        if not bad_pairs and step not in self._sdc_retried:
+            # gradients disagreed but every param digest row matches: the
+            # state is clean on all mirrors - a transient compute flip.
+            # Retry the unit once; a deterministic step reruns clean.
+            self._sdc_retried.add(step)
+            self.report.sdc_transient += 1
+            self.report.events.append(
+                f"{self.unit} {step}: sdc-transient retry (sdc={ev.sdc:.3g})"
+            )
+            self.report.handler_seconds += time.perf_counter() - t0
+            return step
+
+        verdict = None
+        if bad_pairs:
+            reference = getattr(self.scrub, "reference", None)
+            verdict = majority_vote(
+                ev.param_table, bad_pairs[0], reference=reference, tol=tol
+            )
+        self.report.sdc_repairs += 1
+        restored_step: Optional[int] = None
+        if verdict is not None and verdict.conclusive and self.ladder:
+            view_fn = getattr(self.program, "corrupted_view", None)
+            got = self.ladder.restore_partial(
+                view_fn()) if view_fn is not None else None
+            if got is not None:
+                self.program.restore(got.state, got.meta)
+                restored_step = got.step
+                self.report.sdc_bytes_moved += got.moved_bytes
+                self.report.sdc_bytes_full += got.total_bytes
+                self.report.restored_from.append(
+                    f"L{got.level}:{got.store}@step{got.step}"
+                    f"[partial:{got.moved_chunks}/{got.n_chunks}]"
+                )
+                self.report.events.append(
+                    f"{self.unit} {step}: sdc-repair victim={verdict.victim} "
+                    f"({verdict.reason}) chunks={verdict.poisoned_chunks.tolist()} "
+                    f"moved={got.moved_bytes}/{got.total_bytes}B"
+                )
+        if restored_step is None:
+            # inconclusive vote / no chunk-manifest level / layout drift:
+            # corruption is never "probably fine" - full-blob restore
+            self.report.restarts += 1
+            restored_step = self._restore()
+            if restored_step is None and self.replay == "log":
+                self.program.init_fresh()
+                restored_step = -1
+            self.report.events.append(
+                f"{self.unit} {step}: sdc-restart "
+                f"({verdict.reason if verdict else 'no param mismatch'}) "
+                f"restored_step={restored_step}"
+            )
+        clear = getattr(self.program, "clear_corruption", None)
+        if clear is not None:
+            clear(verdict)
+        # same world, same mesh - but the restored state is host-resident:
+        # one build_step re-places it (and re-lowers against the unchanged
+        # groups), the corruption path's analogue of _regenerate
+        self.program.build_step(self.mesh, self.world)
+
+        if self.replay == "log":
+            live_logs = [self.logs[r] for r in sorted(self.logs)]
+            plan = replay_plan(live_logs, step, restored_step=restored_step)
+        elif restored_step is not None and restored_step >= 0:
+            plan = ReplayPlan(
+                start_step=min(restored_step + 1, step), skip={},
+                reason=f"sdc restore from step {restored_step}",
+            )
+        else:
+            plan = ReplayPlan(start_step=step, skip={}, reason="sdc resume")
+        self.reset_logs()
+        for log in self.logs.values():
+            log.applied.update(range(0, plan.start_step))
+        self.program.replay_inputs(plan)
+        self.report.handler_seconds += time.perf_counter() - t0
+        return max(plan.start_step, 0)
+
+    # ------------------------------------------------------------------
     # the dispatch loop (paper Fig. 7)
     # ------------------------------------------------------------------
     def run(
@@ -434,6 +575,15 @@ class FTSession:
             t0 = time.perf_counter()
             self.program.run_step(step)
             self.report.app_seconds += time.perf_counter() - t0
+            if self._sdc_pending is not None:
+                # the scrub flagged this unit mid-step: its update was
+                # gated in-graph, so it is NOT complete - classify and
+                # repair, then resume (retry or replay) where the handler
+                # says
+                resume = self.recover_corruption(step)
+                self.report.replayed_steps += max(0, step - resume)
+                step = resume
+                continue
             self.report.steps_completed += 1
             # time-at-risk: every unit dispatched below the configured
             # replication target accrues its mirror deficit

@@ -70,6 +70,20 @@ def main() -> None:
                     help="full assigned config (real accelerator mesh)")
     ap.add_argument("--inject-failure", default="",
                     help="comma list of step:physical_slice failure injections")
+    ap.add_argument("--sdc-check", action="store_true",
+                    help="online SDC scrubbing (repro.scrub): mirrored pairs "
+                         "cross-check per-chunk [abs-sum, sum] digests of "
+                         "grads + params inside every step; a mismatch gates "
+                         "the update and enters the corruption handler "
+                         "(vote -> digest-guided partial restore)")
+    ap.add_argument("--sdc-inject", default="",
+                    help="comma list of step:victim[:target[:leaf:elem:bit]] "
+                         "bit-flip injections (target grad|param; omitted "
+                         "leaf/elem/bit drawn by the seeded injector); "
+                         "implies --sdc-check")
+    ap.add_argument("--sdc-tol", type=float, default=0.0,
+                    help="digest comparison tolerance (0.0: mirrored pairs "
+                         "are bit-identical, any difference is corruption)")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N fake host devices (subprocess re-exec)")
     args = ap.parse_args()
@@ -84,11 +98,14 @@ def main() -> None:
     import jax  # noqa: E402  (after XLA_FLAGS)
 
     from repro.configs.registry import get_arch, smoke_config
+    from repro.core.fault_injector import SDCSchedule
     from repro.core.simulator import SimCluster
     from repro.ft import FailureSchedule
 
     model = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
     failures = FailureSchedule.parse(args.inject_failure)
+    sdc = SDCSchedule.parse(args.sdc_inject)
+    sdc_check = args.sdc_check or bool(sdc)
 
     sim = SimCluster(
         model,
@@ -111,6 +128,10 @@ def main() -> None:
         pipeline=args.pipeline,
         durable_delta=args.durable_delta,
         durable_max_chain=args.durable_max_chain,
+        sdc_check=sdc_check,
+        sdc_inject=bool(sdc),
+        sdc_tol=args.sdc_tol,
+        sdc_seed=args.seed,
     )
     print(
         f"world: {sim.world.topo.n_comp} computational + {sim.world.topo.n_rep} "
@@ -120,8 +141,11 @@ def main() -> None:
     )
     print("recovery ladder:", " -> ".join(
         f"L{s.level}:{s.name}" for s in sim.ladder) or "(none)")
+    if sdc_check:
+        print(f"scrub: sdc_check on (tol={args.sdc_tol:g}), "
+              f"{sdc.pending() if sdc else 0} injection(s) scheduled")
     t0 = time.time()
-    report = sim.run(args.steps, failures=failures)
+    report = sim.run(args.steps, failures=failures, sdc=sdc or None)
     dt = time.time() - t0
     for i, loss in enumerate(report.losses):
         if i % 10 == 0 or i == len(report.losses) - 1:
@@ -140,6 +164,13 @@ def main() -> None:
         f"healed={report.healed_replicas} exposure={report.exposure_steps} "
         f"final_rdegree={sim.world.topo.rdegree:.2f}"
     )
+    if sdc_check:
+        print(
+            f"scrub: detected={report.sdc_detected} "
+            f"transient={report.sdc_transient} repairs={report.sdc_repairs} "
+            f"partial-restore {report.sdc_bytes_moved}/"
+            f"{report.sdc_bytes_full}B moved"
+        )
 
 
 if __name__ == "__main__":

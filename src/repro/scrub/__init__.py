@@ -1,0 +1,36 @@
+"""repro.scrub - online SDC scrubbing: detect -> vote -> partial restore.
+
+Mirrored pairs compare per-chunk ``[abs-sum, sum]`` digests of gradients
+and params inside every train step (detect), a mismatch is adjudicated by
+a majority vote among >=3 digest holders (the pair, other live slices,
+and the last submit's reference digests), and recovery reloads ONLY the
+chunks whose digests disagree with the vote - digest-guided partial
+restore through the RecoveryLadder.
+"""
+from repro.scrub.digest import (
+    NULL_SPEC,
+    SCRUB_CHUNK_ELEMS,
+    SPEC_LEN,
+    TARGET_GRAD,
+    TARGET_PARAM,
+    chunk_leaf_map,
+    encode_spec,
+    inject_bitflip,
+    leaf_digest_matrix,
+    n_scrub_chunks,
+)
+from repro.scrub.plane import ScrubPlane
+from repro.scrub.vote import (
+    ScrubEvidence,
+    ScrubVerdict,
+    majority_vote,
+    mismatched_pairs,
+    rows_differ,
+)
+
+__all__ = [
+    "NULL_SPEC", "SCRUB_CHUNK_ELEMS", "SPEC_LEN", "TARGET_GRAD",
+    "TARGET_PARAM", "chunk_leaf_map", "encode_spec", "inject_bitflip",
+    "leaf_digest_matrix", "n_scrub_chunks", "ScrubPlane", "ScrubEvidence",
+    "ScrubVerdict", "majority_vote", "mismatched_pairs", "rows_differ",
+]

@@ -1,0 +1,132 @@
+"""In-graph per-chunk state digests + deterministic bit-flip injection.
+
+The scrub plane digests state INSIDE the compiled train step, so the
+chunking here is deliberately different from ``repro.xfer.digest`` (which
+streams the whole tree as one fp32 stream for host-side clone/heal
+verification): each float leaf is padded out to a whole number of
+``chunk_elems`` chunks, so a chunk never straddles two leaves and a
+poisoned chunk names its leaf exactly (``chunk_leaf_map``).
+
+Every chunk digests to an ``[abs-sum, sum]`` row. The pair of columns is
+the sign-blindness fix: the old ``sum(x**2)`` scalar is invariant under
+``x -> -x`` of any element, while here a sign flip moves the ``sum``
+column by ``2|x|`` with the ``abs-sum`` column pinned - and a magnitude
+flip moves both.
+
+Injection is in-graph too: the corruption spec rides into the step as a
+small traced int32 vector, so arming/disarming a flip never recompiles.
+The flip itself is a bitcast-XOR on one element of one leaf, gated on the
+slice index - exactly one mirror of a pair sees the poisoned value, which
+is what RedMPI-style cross-replica comparison must catch.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+#: scrub digest granularity (elements per chunk, per leaf)
+SCRUB_CHUNK_ELEMS = 1 << 12
+
+#: corruption-spec layout: [active, victim, target, leaf, elem, bit]
+SPEC_LEN = 6
+TARGET_GRAD = 0
+TARGET_PARAM = 1
+
+#: disarmed spec - constant-folds the injection branch away when closed over
+NULL_SPEC = np.zeros((SPEC_LEN,), np.int32)
+
+
+def encode_spec(victim: int, target, leaf: int, elem: int, bit: int) -> np.ndarray:
+    """Armed corruption spec. ``target`` is ``"grad"``/``"param"`` or the
+    integer code; ``victim`` is a mesh position (flat slice index)."""
+    if isinstance(target, str):
+        target = {"grad": TARGET_GRAD, "param": TARGET_PARAM}[target]
+    return np.asarray([1, victim, int(target), leaf, elem, bit], np.int32)
+
+
+def _digest_leaves(tree: PyTree) -> List[Tuple[int, Any]]:
+    """(full-tree leaf index, leaf) for every non-empty float leaf, in
+    ``jax.tree.leaves`` order - the leaf space both the digest matrix and
+    the injection spec index into."""
+    out = []
+    for i, x in enumerate(jax.tree.leaves(tree)):
+        if not hasattr(x, "dtype"):
+            continue
+        if not jnp.issubdtype(x.dtype, jnp.floating):
+            continue
+        if int(np.prod(x.shape)) == 0:
+            continue
+        out.append((i, x))
+    return out
+
+
+def n_scrub_chunks(tree: PyTree, chunk_elems: int = SCRUB_CHUNK_ELEMS) -> int:
+    return sum(
+        -(-int(np.prod(x.shape)) // chunk_elems) for _, x in _digest_leaves(tree)
+    )
+
+
+def chunk_leaf_map(tree: PyTree, chunk_elems: int = SCRUB_CHUNK_ELEMS) -> np.ndarray:
+    """chunk row -> full-tree leaf index (chunks never straddle leaves)."""
+    owners: List[int] = []
+    for i, x in _digest_leaves(tree):
+        owners += [i] * -(-int(np.prod(x.shape)) // chunk_elems)
+    return np.asarray(owners, np.int64)
+
+
+def leaf_digest_matrix(tree: PyTree,
+                       chunk_elems: int = SCRUB_CHUNK_ELEMS) -> jnp.ndarray:
+    """(n_chunks, 2) fp32 ``[abs-sum, sum]`` rows over per-leaf-padded
+    chunks. Pure jnp - traceable inside the train step's shard_map and
+    identical code host-side (the scrub plane's submit reference)."""
+    rows = []
+    for _, x in _digest_leaves(tree):
+        flat = jnp.ravel(x).astype(jnp.float32)
+        pad = (-flat.shape[0]) % chunk_elems
+        if pad:
+            flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+        m = flat.reshape(-1, chunk_elems)
+        rows.append(
+            jnp.stack([jnp.sum(jnp.abs(m), axis=1), jnp.sum(m, axis=1)], axis=1)
+        )
+    if not rows:
+        return jnp.zeros((0, 2), jnp.float32)
+    return jnp.concatenate(rows, axis=0)
+
+
+def inject_bitflip(tree: PyTree, spec, idx, target: int) -> PyTree:
+    """Flip bit ``spec[5]`` of element ``spec[4]`` of (float32) leaf
+    ``spec[3]`` - only on the slice whose flat index ``idx`` equals
+    ``spec[1]``, only when ``spec[0]`` is armed and ``spec[2]`` matches
+    ``target`` (the call site's TARGET_GRAD/TARGET_PARAM).
+
+    ``spec`` may be traced (armed/disarmed without recompiling) or the
+    ``NULL_SPEC`` constant (XLA folds the whole branch away). Out-of-range
+    leaf/elem/bit indices clamp rather than trap, so a fuzzing schedule
+    can never crash the step.
+    """
+    active = (spec[0] != 0) & (idx == spec[1]) & (spec[2] == target)
+    leaves = jax.tree.leaves(tree)
+    treedef = jax.tree.structure(tree)
+    out = []
+    for i, x in enumerate(leaves):
+        if (not hasattr(x, "dtype") or x.dtype != jnp.float32
+                or int(np.prod(x.shape)) == 0):
+            out.append(x)
+            continue
+        hit = active & (spec[3] == i)
+        flat = jnp.ravel(x)
+        elem = jnp.clip(spec[4], 0, flat.shape[0] - 1)
+        bit = jnp.clip(spec[5], 0, 31)
+        word = jax.lax.bitcast_convert_type(flat[elem], jnp.int32)
+        flipped = jax.lax.bitcast_convert_type(
+            word ^ (jnp.int32(1) << bit), jnp.float32
+        )
+        val = jnp.where(hit, flipped, flat[elem])
+        out.append(flat.at[elem].set(val).reshape(x.shape))
+    return jax.tree.unflatten(treedef, out)

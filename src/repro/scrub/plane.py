@@ -1,0 +1,53 @@
+"""Host-side scrub plane state: the last good submit's digest reference.
+
+The in-step tables compare LIVE mirrors; this plane pins them against the
+past - the param digests of the state that was last submitted to the
+recovery ladder. It is the third digest holder the majority vote needs in
+a two-slice world, and the "last known good" anchor the corruption
+recovery rolls back to.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.scrub.digest import SCRUB_CHUNK_ELEMS, leaf_digest_matrix
+
+PyTree = Any
+
+
+class ScrubPlane:
+    """Records per-chunk digests of each ladder submit.
+
+    ``tol`` is the absolute per-column slack for in-table comparisons
+    (0.0: healthy mirrors are bit-identical); references recorded here
+    are compared with an additional relative tolerance because the host
+    and in-step compilations may associate the chunk sums differently.
+    """
+
+    def __init__(self, *, chunk_elems: int = SCRUB_CHUNK_ELEMS,
+                 tol: float = 0.0):
+        self.chunk_elems = int(chunk_elems)
+        self.tol = float(tol)
+        self._ref: Optional[np.ndarray] = None
+        self._ref_step: Optional[int] = None
+
+    def record_submit(self, step: int, tree: PyTree) -> np.ndarray:
+        """Digest the just-submitted state; returns the (n_chunks, 2) rows."""
+        ref = np.asarray(leaf_digest_matrix(tree, self.chunk_elems))
+        self._ref = ref
+        self._ref_step = int(step)
+        return ref
+
+    @property
+    def reference(self) -> Optional[np.ndarray]:
+        return self._ref
+
+    @property
+    def reference_step(self) -> Optional[int]:
+        return self._ref_step
+
+    def clear(self) -> None:
+        self._ref = None
+        self._ref_step = None

@@ -1,0 +1,118 @@
+"""Majority vote over per-slice digest tables: name the poisoned replica.
+
+A pair mismatch only says "these two disagree" - RedMPI's dual-redundancy
+blind spot. Naming the poisoned member needs a third opinion. The scrub
+plane has two kinds:
+
+- the OTHER live slices' rows of the same in-step table. Params are
+  replicated, so every healthy slice's param-digest row is bit-identical
+  (same compiled program, same array) - comparable with zero tolerance;
+- the partner store's reference digests of the last good submit,
+  recorded host-side by :class:`repro.scrub.plane.ScrubPlane`. Host and
+  in-step compilations may associate the chunk reductions differently,
+  so the reference is compared under a small relative tolerance and a
+  live holder always outranks it.
+
+The vote is conservative: a verdict needs a strict majority among the
+holders that took a side, otherwise it is inconclusive and the caller
+falls back to a full restore (corruption is never "probably fine").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def _rel_tol(a: np.ndarray, b: np.ndarray, rel: float) -> np.ndarray:
+    return rel * np.maximum(1.0, np.maximum(np.abs(a), np.abs(b)))
+
+
+def rows_differ(a: np.ndarray, b: np.ndarray, *, tol: float = 0.0,
+                rel: float = 0.0) -> np.ndarray:
+    """(n_chunks,) bool: chunks whose [abs-sum, sum] rows differ beyond
+    ``tol`` (absolute) plus ``rel`` (relative, symmetric in a/b)."""
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    bound = tol + _rel_tol(a, b, rel)
+    return np.any(np.abs(a - b) > bound, axis=-1)
+
+
+@dataclass
+class ScrubEvidence:
+    """What the train step exported when a pair digest mismatched."""
+
+    step: int
+    sdc: float                      # global max |pair digest diff|
+    grad_table: Optional[np.ndarray] = None   # (n_slices, n_chunks, 2)
+    param_table: Optional[np.ndarray] = None  # by mesh position
+    pairs: Tuple[Tuple[int, int], ...] = ()   # mesh-position mirror pairs
+
+
+@dataclass
+class ScrubVerdict:
+    victim: Optional[int]           # mesh position, None if inconclusive
+    poisoned_chunks: np.ndarray = field(
+        default_factory=lambda: np.zeros((0,), np.int64))
+    holders: int = 0                # third-party holders that took a side
+    conclusive: bool = False
+    persistent: bool = False        # param-space corruption (state poisoned)
+    reason: str = ""
+
+
+def mismatched_pairs(table: np.ndarray,
+                     pairs: Sequence[Sequence[int]],
+                     *, tol: float = 0.0) -> List[Tuple[int, int]]:
+    """Mirror pairs whose digest rows disagree (singleton groups skipped)."""
+    out = []
+    for g in pairs:
+        if len(g) != 2:
+            continue
+        a, b = int(g[0]), int(g[1])
+        if bool(np.any(rows_differ(table[a], table[b], tol=tol))):
+            out.append((a, b))
+    return out
+
+
+def majority_vote(table: np.ndarray, pair: Tuple[int, int], *,
+                  reference: Optional[np.ndarray] = None,
+                  tol: float = 0.0, ref_rel: float = 1e-6) -> ScrubVerdict:
+    """Name the poisoned member of ``pair`` from a digest table whose
+    healthy rows are identical by construction (replicated state).
+
+    Every other live slice is a holder (exact comparison); the last-submit
+    ``reference`` digests are one more holder (relative comparison). The
+    loser of a strict majority is the victim; its poisoned chunks are the
+    rows differing from the winner's.
+    """
+    a, b = int(pair[0]), int(pair[1])
+    n = table.shape[0]
+    votes = {a: 0, b: 0}
+    holders = 0
+    for m in (a, b):
+        for other in range(n):
+            if other in (a, b):
+                continue
+            if not np.any(rows_differ(table[m], table[other], tol=tol)):
+                votes[m] += 1
+    holders = n - 2
+    if reference is not None and reference.shape == table[a].shape:
+        holders += 1
+        for m in (a, b):
+            if not np.any(rows_differ(table[m], reference,
+                                      tol=tol, rel=ref_rel)):
+                votes[m] += 1
+    if votes[a] == votes[b]:
+        return ScrubVerdict(victim=None, holders=holders, conclusive=False,
+                            reason=f"tie {votes[a]}:{votes[b]} "
+                                   f"among {holders} holders")
+    winner, victim = (a, b) if votes[a] > votes[b] else (b, a)
+    bad = rows_differ(table[victim], table[winner], tol=tol)
+    return ScrubVerdict(
+        victim=victim,
+        poisoned_chunks=np.nonzero(bad)[0].astype(np.int64),
+        holders=holders,
+        conclusive=True,
+        reason=f"{votes[winner]}:{votes[victim]} for slice {winner}",
+    )

@@ -29,6 +29,7 @@ so a concurrent gather either sees the complete placement or none of it.
 from __future__ import annotations
 
 import threading
+import zlib
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -36,6 +37,13 @@ import numpy as np
 from repro.store.base import PyTree, Restored, StateStore, flatten_with_paths, unflatten_like
 from repro.xfer.chunking import Chunk, ChunkedBlob, stripe_holders
 from repro.xfer.plane import TransferPlane
+
+
+def _chunk_crcs(cb: ChunkedBlob) -> List[int]:
+    """zlib.crc32 per PRE-encode raw chunk: the exact byte-space
+    fingerprints a digest-guided partial restore diffs against (the
+    in-step fp digests detect and vote; these name the bytes to move)."""
+    return [zlib.crc32(c.raw()) for c in cb.chunks]
 
 
 class PartnerMemoryStore(StateStore):
@@ -97,8 +105,10 @@ class PartnerMemoryStore(StateStore):
         if self.coarse_lock:
             with self._meta_lock:
                 live = list(self._live)
-                cb = self._delta.encode(plane.chunked(blob, min_chunks=len(live)))
-                self._place_locked(step, cb, dict(meta or {}), live)
+                raw_cb = plane.chunked(blob, min_chunks=len(live))
+                crcs = _chunk_crcs(raw_cb)
+                cb = self._delta.encode(raw_cb)
+                self._place_locked(step, cb, dict(meta or {}), live, crcs)
                 self._trim_locked(self.keep)
             self.last_chunked = cb
             return
@@ -106,24 +116,31 @@ class PartnerMemoryStore(StateStore):
             live = list(self._live)
             self._drop_locked(step)
         # the expensive part - chunk, delta-encode, place - runs WITHOUT
-        # the metadata lock: concurrent loads proceed against older steps
-        cb = self._delta.encode(plane.chunked(blob, min_chunks=len(live)))
-        self._place_fine(step, cb, dict(meta or {}), live)
+        # the metadata lock: concurrent loads proceed against older steps.
+        # Chunk fingerprints are taken on the PRE-encode raw chunks (the
+        # submitted bytes - what a partial restore diffs against), never on
+        # delta payloads
+        raw_cb = plane.chunked(blob, min_chunks=len(live))
+        crcs = _chunk_crcs(raw_cb)
+        cb = self._delta.encode(raw_cb)
+        self._place_fine(step, cb, dict(meta or {}), live, crcs)
         with self._meta_lock:
             self._trim_locked(self.keep)
         self.last_chunked = cb
 
     @staticmethod
-    def _entry(cb: ChunkedBlob, meta: Dict) -> Dict:
+    def _entry(cb: ChunkedBlob, meta: Dict,
+               crcs: Optional[List[int]] = None) -> Dict:
         return {
             "n_chunks": cb.n_chunks,
             "layout": cb.layout,
             "chunk_bytes": cb.chunk_bytes,
+            "crcs": list(crcs) if crcs is not None else None,
             "meta": meta,
         }
 
     def _place_locked(self, step: int, cb: ChunkedBlob, meta: Dict,
-                      live: List[int]) -> None:
+                      live: List[int], crcs: Optional[List[int]] = None) -> None:
         """Whole-submit placement under the metadata lock (the pre-xfer
         behavior, kept behind ``coarse_lock`` for contention A/B runs)."""
         self._drop_locked(step)
@@ -132,17 +149,17 @@ class PartnerMemoryStore(StateStore):
                 mem = self._mem.get(peer)
                 if mem is not None:
                     mem[(step, chunk.index)] = chunk
-        self._manifest[step] = self._entry(cb, meta)
+        self._manifest[step] = self._entry(cb, meta, crcs)
 
     def _place_fine(self, step: int, cb: ChunkedBlob, meta: Dict,
-                    live: List[int]) -> None:
+                    live: List[int], crcs: Optional[List[int]] = None) -> None:
         """Per-chunk placement (no metadata lock held), manifest installed
         LAST so gathers see the placement complete or not at all."""
         for chunk in cb.chunks:
             for peer in stripe_holders(chunk.index, live, self.redundancy):
                 self._store_chunk(peer, (step, chunk.index), chunk)
         with self._meta_lock:
-            self._manifest[step] = self._entry(cb, meta)
+            self._manifest[step] = self._entry(cb, meta, crcs)
 
     def _store_chunk(self, peer: int, key: Tuple[int, int], chunk: Chunk) -> None:
         """Place ONE chunk under that peer's lock (the fine-grained unit).
@@ -216,6 +233,51 @@ class PartnerMemoryStore(StateStore):
         return ChunkedBlob(
             layout=entry["layout"], chunk_bytes=cb_size, chunks=chunks
         ).to_blob(raws)
+
+    # ---- chunk-addressed reads (repro.scrub digest-guided partial restore) --
+    def chunk_manifest(self, step: Optional[int] = None
+                       ) -> Optional[Tuple[int, Dict]]:
+        """(step, manifest entry) of the newest (or requested) submit that
+        recorded per-chunk fingerprints - the diff target of a partial
+        restore. Entries predating the crc field (or rebalanced onto a
+        different chunk count) return None: partial restore then falls
+        back to the full-blob walk."""
+        with self._meta_lock:
+            candidates = (
+                [step] if step is not None else sorted(self._manifest, reverse=True)
+            )
+            for s in candidates:
+                entry = self._manifest.get(s)
+                if entry is not None and entry.get("crcs") is not None:
+                    return s, dict(entry)
+        return None
+
+    def load_chunks(self, step: int, indices: Sequence[int]
+                    ) -> Optional[Dict[int, np.ndarray]]:
+        """Raw bytes of just the requested chunks of ``step`` - the unit a
+        digest-guided partial restore actually moves. Same holder walk and
+        size validation as :meth:`_gather`; None if the step is unknown or
+        any requested chunk lost every copy."""
+        with self._meta_lock:
+            entry = self._manifest.get(step)
+            mems = list(self._mem.values())
+        if entry is None:
+            return None
+        total = sum(s.nbytes for s in entry["layout"])
+        cb_size = entry["chunk_bytes"]
+        out: Dict[int, np.ndarray] = {}
+        for ci in indices:
+            ci = int(ci)
+            if not 0 <= ci < entry["n_chunks"]:
+                return None
+            part = next((m.get((step, ci)) for m in mems if (step, ci) in m), None)
+            if part is None:
+                return None
+            raw = part.raw()
+            if raw.nbytes != min(cb_size, total - ci * cb_size):
+                return None
+            out[ci] = raw
+        return out
 
     def recoverable(self, step: int) -> bool:
         """True if every chunk of ``step`` still has a surviving holder."""
@@ -296,11 +358,13 @@ class PartnerMemoryStore(StateStore):
             blob = self._gather(step, entries[step])
             if blob is None:
                 continue
+            crcs = entries[step].get("crcs")
             if self.coarse_lock:
                 with self._meta_lock:
                     live = list(self._live)
                     cb = plane.chunked(blob, min_chunks=len(live))
-                    self._place_locked(step, cb, entries[step]["meta"], live)
+                    self._place_locked(step, cb, entries[step]["meta"], live,
+                                       crcs if cb.n_chunks == len(crcs or []) else None)
             else:
                 # same discipline as submit_blob: purge under the short
                 # lock, chunk + place outside it, manifest installed last
@@ -308,6 +372,7 @@ class PartnerMemoryStore(StateStore):
                     live = list(self._live)
                     self._drop_locked(step)
                 cb = plane.chunked(blob, min_chunks=len(live))
-                self._place_fine(step, cb, entries[step]["meta"], live)
+                self._place_fine(step, cb, entries[step]["meta"], live,
+                                 crcs if cb.n_chunks == len(crcs or []) else None)
             replaced.append(step)
         return replaced

@@ -1,13 +1,21 @@
 """On-device state digests via the fused checksum kernel.
 
-Replaces the per-leaf host ``_checksum`` loop: the whole tree is cast to
+Replaces the per-leaf host ``_checksum`` loop: the whole tree is viewed as
 one fp32 stream (leaf path order) and digested per chunk in a single
 fused pass (:func:`repro.kernels.checksum_ops.chunk_digests`). Two
 digests are compared chunk-wise, so corruption localized to any chunk is
-caught even when the old global abs-sum would have averaged it away."""
+caught even when the old global abs-sum would have averaged it away.
+
+The stream is fed to the kernel in bounded *segments* (a few chunks at a
+time) instead of one ``jnp.concatenate`` over the whole tree: the old
+path materialized a full fp32 copy of the state - a memory spike that
+was tightest exactly during heals, when the clone target's buffers are
+already resident. Segment boundaries are chunk-aligned, so the segmented
+stream produces digests bit-identical to the single-concat form.
+"""
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Iterator, List
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +26,10 @@ PyTree = Any
 #: default digest granularity: 64Ki fp32 = 256 KiB per chunk
 DIGEST_CHUNK_ELEMS = 1 << 16
 
+#: chunks digested per kernel feed: bounds the transient fp32 copy at
+#: ``SEGMENT_CHUNKS * chunk_elems`` elements (16 MiB at the defaults)
+SEGMENT_CHUNKS = 64
+
 
 def _chunk_elems(n: int, chunk_elems: int) -> int:
     """Shrink the chunk to the (128-aligned) stream size for small trees,
@@ -25,28 +37,76 @@ def _chunk_elems(n: int, chunk_elems: int) -> int:
     return max(128, min(chunk_elems, n + ((-n) % 128)))
 
 
-def tree_digests(tree: PyTree, *, chunk_elems: int = DIGEST_CHUNK_ELEMS) -> np.ndarray:
-    """(n_chunks, 2) [abs-sum, sum] digests of the tree's fp32 stream."""
+def _segments(leaves: List, seg_elems: int) -> Iterator[jnp.ndarray]:
+    """The tree's fp32 stream as <= ``seg_elems``-long segments: leaf
+    slices are buffered until a segment fills, so no intermediate ever
+    exceeds one segment (plus the source leaf being sliced)."""
+    buf: List[jnp.ndarray] = []
+    buf_n = 0
+    for x in leaves:
+        flat = jnp.ravel(x)
+        size, off = flat.shape[0], 0
+        while off < size:
+            take = min(seg_elems - buf_n, size - off)
+            buf.append(flat[off : off + take].astype(jnp.float32))
+            buf_n += take
+            off += take
+            if buf_n == seg_elems:
+                yield buf[0] if len(buf) == 1 else jnp.concatenate(buf)
+                buf, buf_n = [], 0
+    if buf_n:
+        yield buf[0] if len(buf) == 1 else jnp.concatenate(buf)
+
+
+def tree_digests(tree: PyTree, *, chunk_elems: int = DIGEST_CHUNK_ELEMS,
+                 segment_chunks: int = SEGMENT_CHUNKS) -> np.ndarray:
+    """(n_chunks, 2) [abs-sum, sum] digests of the tree's fp32 stream.
+
+    Streams the tree through the kernel ``segment_chunks`` chunks at a
+    time; every segment boundary is a chunk boundary, so the result is
+    bit-identical for any ``segment_chunks`` (only the transient memory
+    differs)."""
     from repro.kernels.checksum_ops import chunk_digests
 
     leaves = [x for x in jax.tree.leaves(tree) if hasattr(x, "dtype")]
-    if not leaves:
+    n = sum(int(np.prod(x.shape)) for x in leaves)
+    if n == 0:
         return np.zeros((0, 2), np.float32)
-    flat = jnp.concatenate([jnp.ravel(x).astype(jnp.float32) for x in leaves])
-    out = chunk_digests(flat, chunk_elems=_chunk_elems(flat.shape[0], chunk_elems))
-    return np.asarray(out)
+    ce = _chunk_elems(n, chunk_elems)
+    assert segment_chunks >= 1, segment_chunks
+    parts = [
+        chunk_digests(seg, chunk_elems=ce)
+        for seg in _segments(leaves, segment_chunks * ce)
+    ]
+    return np.concatenate([np.asarray(p) for p in parts], axis=0)
+
+
+def digest_tolerance(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """The relative tolerance the old global checksum used (fp32 reduction
+    order may differ between a sharded source and its gathered clone) -
+    SYMMETRIC in its arguments: the scale is ``max(|a|, |b|)``, so
+    ``verify_tree(src, dst) == verify_tree(dst, src)`` even when one side
+    sits just past the other's boundary."""
+    return 1e-6 * np.maximum(1.0, np.maximum(np.abs(a), np.abs(b)))
 
 
 def digests_match(a: np.ndarray, b: np.ndarray) -> bool:
-    """Chunk-wise comparison with the relative tolerance the old global
-    checksum used (fp32 reduction order may differ between a sharded
-    source and its gathered clone)."""
+    """Chunk-wise comparison under the symmetric relative tolerance."""
     if a.shape != b.shape:
         return False
     if a.size == 0:
         return True
-    tol = 1e-6 * np.maximum(1.0, np.abs(a))
-    return bool(np.all(np.abs(a - b) <= tol))
+    return bool(np.all(np.abs(a - b) <= digest_tolerance(a, b)))
+
+
+def diff_chunks(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Indices of chunks whose digests differ beyond the symmetric
+    tolerance (the digest-guided unit of partial restore / vote)."""
+    assert a.shape == b.shape, (a.shape, b.shape)
+    if a.size == 0:
+        return np.zeros((0,), np.int64)
+    bad = np.abs(a - b) > digest_tolerance(a, b)
+    return np.nonzero(np.any(bad, axis=-1))[0]
 
 
 def verify_tree(src: PyTree, dst: PyTree, *,

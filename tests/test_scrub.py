@@ -1,0 +1,476 @@
+"""repro.scrub: the online SDC scrubbing plane.
+
+Fast units run in-process (1 device): the sign-blindness regression the
+old sum-of-squares checksum provably missed, the symmetric digest
+tolerance, digest edge cases across the streaming rewrite, the in-graph
+bit-flip port, the majority vote, the deterministic injector, and the
+chunk-addressed partner reads + digest-guided partial restore.
+
+The slow subprocess integration drives the whole lifecycle through
+``SimCluster.run``: a single injected bit flip is detected within one
+step, the vote names the victim, the repair moves only the poisoned
+chunks, and the trajectory stays bit-identical to a failure-free run.
+"""
+import numpy as np
+import pytest
+
+from conftest import run_subprocess
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: the sign-blindness bugfix
+# ---------------------------------------------------------------------------
+
+
+def test_sign_flip_regression_old_formula_blind_new_digest_not():
+    """``sum(x**2)`` is invariant under ``x -> -x`` of any element (the
+    old sdc_check scalar) - a flipped sign bit sailed through. The
+    [abs-sum, sum] rows catch it: the sum column moves by 2|x| while the
+    abs-sum column stays pinned."""
+    from repro.scrub.digest import leaf_digest_matrix
+
+    x = np.linspace(0.5, 2.0, 256).astype(np.float32)
+    flipped = x.copy()
+    flipped[37] *= -1.0  # exactly the sign bit: |x| unchanged
+
+    # the OLD formula: bitwise identical on the corrupted copy
+    old_a = np.sum(x * x)
+    old_b = np.sum(flipped * flipped)
+    assert old_a == old_b, "old sum-of-squares must miss (that's the bug)"
+
+    da = np.asarray(leaf_digest_matrix({"w": x}, 128))
+    db = np.asarray(leaf_digest_matrix({"w": flipped}, 128))
+    assert da.shape == (2, 2)
+    row = 37 // 128
+    assert da[row, 0] == db[row, 0], "abs-sum column pinned under sign flip"
+    assert abs(da[row, 1] - db[row, 1]) == pytest.approx(
+        2.0 * abs(x[37]), rel=1e-5
+    )
+    # and the other chunk is untouched (localization)
+    assert np.array_equal(da[1 - row], db[1 - row])
+
+
+def test_xfer_digest_sign_column_catches_sign_flip():
+    """Same regression through the fused-kernel xfer path."""
+    from repro.xfer.digest import tree_digests, verify_tree
+
+    a = {"w": np.linspace(0.5, 2.0, 256).astype(np.float32)}
+    b = {"w": a["w"].copy()}
+    b["w"][37] *= -1.0
+    da, db = tree_digests(a), tree_digests(b)
+    assert np.array_equal(da[:, 0], db[:, 0])  # abs-sum blind here...
+    assert not np.array_equal(da[:, 1], db[:, 1])  # ...sum column is not
+    assert not verify_tree(a, b)
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: symmetric digest tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_digest_tolerance_symmetric_in_arguments():
+    """The old tolerance scaled by |a| only, so verify(src, dst) and
+    verify(dst, src) could disagree when one side sat just past the
+    other's boundary. The scale is now max(|a|, |b|) - pinned here by an
+    asymmetric pair that the a-scaled bound accepts one way and rejects
+    the other."""
+    from repro.xfer.digest import digest_tolerance, digests_match
+
+    a = np.array([[1e8, 1e8]], np.float32)
+    b = a * (1.0 + 5e-7)  # within 1e-6 relative of max(|a|,|b|)
+    # the old a-scaled bound: tol(a) accepts, tol(b) would too, but an
+    # a-scaled bound with a the SMALLER side shrinks: make it asymmetric
+    small = np.array([[1.0, 1.0]], np.float32)
+    big = np.array([[1.0 + 3e-6, 1.0 + 3e-6]], np.float32) * 1e7
+    t_ab = digest_tolerance(small * 1e7, big)
+    t_ba = digest_tolerance(big, small * 1e7)
+    assert np.array_equal(t_ab, t_ba), "tolerance must be symmetric"
+    assert digests_match(a, b) and digests_match(b, a)
+    assert not digests_match(small * 1e7, big)
+    assert not digests_match(big, small * 1e7)  # same verdict both ways
+
+
+def test_digests_match_shape_guard_and_empty():
+    from repro.xfer.digest import digests_match
+
+    z = np.zeros((0, 2), np.float32)
+    assert digests_match(z, z)
+    assert not digests_match(z, np.zeros((1, 2), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# satellite 4: digest edge cases, bit-stable across the streaming rewrite
+# ---------------------------------------------------------------------------
+
+
+def _reference_digests(tree, chunk_elems):
+    """The pre-rewrite semantics: ONE concatenate of the whole fp32
+    stream, digested in a single kernel feed."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.checksum_ops import chunk_digests
+    from repro.xfer.digest import _chunk_elems
+
+    leaves = [x for x in jax.tree.leaves(tree) if hasattr(x, "dtype")]
+    n = sum(int(np.prod(x.shape)) for x in leaves)
+    if n == 0:
+        return np.zeros((0, 2), np.float32)
+    flat = jnp.concatenate([jnp.ravel(x).astype(jnp.float32) for x in leaves])
+    return np.asarray(chunk_digests(flat, chunk_elems=_chunk_elems(n, chunk_elems)))
+
+
+@pytest.mark.parametrize("segment_chunks", [1, 2, 64])
+def test_tree_digests_segmented_bit_identical_to_concat(segment_chunks):
+    """Segment boundaries are chunk-aligned, so the streaming rewrite is
+    bit-identical to the old full-concat pass for ANY segment size -
+    including segments that straddle leaf boundaries."""
+    from repro.xfer.digest import tree_digests
+
+    rng = np.random.default_rng(0)
+    # 200 + 100 + 31 elements with 128-elem chunks: chunk 1 straddles the
+    # a/b leaf boundary, chunk 2 straddles b/c and is a partial tail
+    tree = {
+        "a": rng.standard_normal(200).astype(np.float32),
+        "b": rng.standard_normal(100).astype(np.float32) * 50.0,
+        "c": rng.standard_normal(31).astype(np.float32),
+    }
+    ref = _reference_digests(tree, 128)
+    got = tree_digests(tree, chunk_elems=128, segment_chunks=segment_chunks)
+    assert got.shape == ref.shape == (3, 2)
+    assert np.array_equal(got, ref), "streaming must be bit-identical"
+
+
+def test_tree_digests_mixed_dtypes_and_small_trees():
+    """bf16 / int8 / bool leaves, an empty pytree, and a tree smaller
+    than one segment all digest without crashing and stay bit-stable
+    across segment sizes."""
+    import jax.numpy as jnp
+
+    from repro.xfer.digest import tree_digests
+
+    tree = {
+        "bf16": jnp.asarray(np.arange(40, dtype=np.float32), jnp.bfloat16),
+        "i8": np.arange(-8, 8, dtype=np.int8),
+        "flag": np.array([True, False, True]),
+        "f32": np.linspace(-1, 1, 300, dtype=np.float32),
+    }
+    d1 = tree_digests(tree, chunk_elems=128, segment_chunks=1)
+    d64 = tree_digests(tree, chunk_elems=128, segment_chunks=64)
+    assert d1.shape[1] == 2 and d1.shape[0] >= 1
+    assert np.array_equal(d1, d64)
+    assert np.array_equal(d1, _reference_digests(tree, 128))
+
+    assert tree_digests({}).shape == (0, 2)
+    assert tree_digests({"e": np.zeros((0,), np.float32)}).shape == (0, 2)
+    # scalar / sub-chunk tree: the chunk shrinks, one row comes back
+    tiny = tree_digests({"s": np.float32(3.0)})
+    assert tiny.shape == (1, 2) and tiny[0, 1] == 3.0
+
+
+def test_scrub_digest_chunks_never_straddle_leaves():
+    """The scrub-space chunking pads each leaf to whole chunks, so a
+    poisoned chunk names its leaf exactly; non-float leaves are skipped
+    (they are replicated control state, not compute output)."""
+    from repro.scrub.digest import (
+        chunk_leaf_map,
+        leaf_digest_matrix,
+        n_scrub_chunks,
+    )
+
+    tree = {
+        "a": np.ones(200, np.float32),
+        "flags": np.array([1, 2], np.int8),
+        "z": np.ones((2, 70), np.float32),
+    }
+    # leaves order: a, flags, z -> float leaves at full-tree idx 0 and 2
+    assert n_scrub_chunks(tree, 128) == 2 + 2
+    assert chunk_leaf_map(tree, 128).tolist() == [0, 0, 2, 2]
+    d = np.asarray(leaf_digest_matrix(tree, 128))
+    assert d.shape == (4, 2)
+    # padded tail chunk of "a" holds elements 128..199 -> abs-sum 72
+    assert d[1, 0] == 72.0
+    assert np.asarray(leaf_digest_matrix({}, 128)).shape == (0, 2)
+    assert np.asarray(
+        leaf_digest_matrix({"i": np.ones(4, np.int32)}, 128)
+    ).shape == (0, 2)
+
+
+# ---------------------------------------------------------------------------
+# the in-graph bit-flip port
+# ---------------------------------------------------------------------------
+
+
+def test_inject_bitflip_gated_on_slice_target_and_armed():
+    import jax.numpy as jnp
+
+    from repro.scrub.digest import (
+        NULL_SPEC,
+        TARGET_GRAD,
+        TARGET_PARAM,
+        encode_spec,
+        inject_bitflip,
+    )
+
+    tree = {"w": np.linspace(0.5, 2.0, 64).astype(np.float32)}
+    spec = jnp.asarray(encode_spec(victim=2, target="param", leaf=0, elem=5, bit=31))
+
+    hit = inject_bitflip(tree, spec, jnp.int32(2), TARGET_PARAM)
+    miss_slice = inject_bitflip(tree, spec, jnp.int32(1), TARGET_PARAM)
+    miss_target = inject_bitflip(tree, spec, jnp.int32(2), TARGET_GRAD)
+    disarmed = inject_bitflip(tree, jnp.asarray(NULL_SPEC), jnp.int32(2), TARGET_PARAM)
+
+    want = tree["w"].copy()
+    want[5] *= -1.0  # bit 31 IS the sign bit
+    assert np.array_equal(np.asarray(hit["w"]), want)
+    for t in (miss_slice, miss_target, disarmed):
+        assert np.array_equal(np.asarray(t["w"]), tree["w"])
+
+
+def test_inject_bitflip_clamps_out_of_range_spec():
+    import jax.numpy as jnp
+
+    from repro.scrub.digest import TARGET_PARAM, encode_spec, inject_bitflip
+
+    tree = {"w": np.ones(8, np.float32)}
+    spec = jnp.asarray(encode_spec(0, "param", leaf=0, elem=10_000, bit=99))
+    out = inject_bitflip(tree, spec, jnp.int32(0), TARGET_PARAM)
+    # clamped to last element / bit 31: exactly one element changed
+    w = np.asarray(out["w"])
+    assert (w != tree["w"]).sum() == 1 and w[7] == -1.0
+
+
+# ---------------------------------------------------------------------------
+# the majority vote
+# ---------------------------------------------------------------------------
+
+
+def _table(rows):
+    return np.asarray(rows, np.float32)
+
+
+def test_mismatched_pairs_and_rows_differ():
+    from repro.scrub.vote import mismatched_pairs, rows_differ
+
+    good = [[4.0, 1.0], [8.0, 2.0]]
+    bad = [[4.0, 1.5], [8.0, 2.0]]
+    table = _table([good, bad, good, good])
+    assert rows_differ(_table(good), _table(bad)).tolist() == [True, False]
+    assert mismatched_pairs(table, [(0, 1), (2, 3)]) == [(0, 1)]
+    assert mismatched_pairs(table, [(0, 2), (3,)]) == []  # singleton skipped
+
+
+def test_majority_vote_names_victim_and_poisoned_chunks():
+    from repro.scrub.vote import majority_vote
+
+    good = [[4.0, 1.0], [8.0, 2.0]]
+    bad = [[4.0, 1.5], [8.0, 2.0]]
+    table = _table([good, bad, good, good])
+    v = majority_vote(table, (0, 1))
+    assert v.conclusive and v.victim == 1
+    assert v.poisoned_chunks.tolist() == [0]
+    assert v.holders == 2
+
+
+def test_majority_vote_two_slice_tie_broken_by_reference():
+    """A mirrored pair alone cannot name the victim (RedMPI's blind
+    spot): without a third holder the vote is inconclusive; the scrub
+    plane's last-submit reference breaks the tie - under a relative
+    tolerance, because host and in-step reductions may associate
+    differently."""
+    from repro.scrub.vote import majority_vote
+
+    good = np.asarray([[4.0, 1.0]], np.float32)
+    bad = np.asarray([[4.0, 1.5]], np.float32)
+    table = np.stack([good, bad])
+    v = majority_vote(table, (0, 1))
+    assert not v.conclusive and v.victim is None
+
+    # reference a last-ulp off the good row still votes for slice 0
+    ref = good * (1.0 + 1e-7)
+    v = majority_vote(table, (0, 1), reference=ref)
+    assert v.conclusive and v.victim == 1 and v.holders == 1
+
+    # a reference of the wrong shape (layout drift) is ignored
+    v = majority_vote(table, (0, 1), reference=np.zeros((3, 2), np.float32))
+    assert not v.conclusive
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: deterministic injection scheduling
+# ---------------------------------------------------------------------------
+
+
+def test_sdc_schedule_parse():
+    from repro.core.fault_injector import SDCSchedule
+
+    s = SDCSchedule.parse("3:1, 7:0:grad, 9:2:param:4:100:31")
+    assert s.pending() == 3
+    e = s.take(3)
+    assert (e.victim, e.target, e.resolved) == (1, "param", False)
+    e = s.take(7)
+    assert (e.victim, e.target) == (0, "grad")
+    e = s.take(9)
+    assert (e.leaf, e.elem, e.bit) == (4, 100, 31) and e.resolved
+    assert s.take(9) is None  # consumed
+    assert not SDCSchedule.parse("")
+    for bad in ("5", "5:1:oops", "5:1:param:2", "x:y"):
+        with pytest.raises(ValueError):
+            SDCSchedule.parse(bad)
+
+
+def test_sdc_injector_deterministic_and_respects_given_fields():
+    from repro.core.fault_injector import SDCEvent, SDCInjector
+
+    sizes = [(0, 1000), (3, 4096)]
+    a = SDCInjector(seed=7).resolve(SDCEvent(5, 1), sizes)
+    b = SDCInjector(seed=7).resolve(SDCEvent(5, 1), sizes)
+    assert (a.leaf, a.elem, a.bit) == (b.leaf, b.elem, b.bit)
+    assert a.leaf in (0, 3) and 0 <= a.bit < 32
+    assert a.elem < dict(sizes)[a.leaf]
+    c = SDCInjector(seed=7).resolve(SDCEvent(5, 1, "grad", leaf=3, bit=31), sizes)
+    assert c.leaf == 3 and c.bit == 31 and c.elem < 4096
+    with pytest.raises(AssertionError):
+        SDCInjector().resolve(SDCEvent(5, 1, leaf=2), sizes)  # not flippable
+
+
+# ---------------------------------------------------------------------------
+# chunk-addressed partner reads + digest-guided partial restore
+# ---------------------------------------------------------------------------
+
+
+def _state(scale=1.0):
+    return {
+        "w": (np.arange(4096, dtype=np.float32) * scale),
+        "b": (np.ones(1024, np.float32) * scale),
+    }
+
+
+def _ladder(**plane_kw):
+    from repro.store import PartnerMemoryStore, RecoveryLadder
+    from repro.xfer import TransferPlane
+
+    plane_kw.setdefault("chunk_bytes", 4096)
+    plane_kw.setdefault("pipeline", False)
+    return RecoveryLadder(
+        [PartnerMemoryStore(range(4))], xfer=TransferPlane(**plane_kw)
+    )
+
+
+def test_partner_chunk_manifest_and_load_chunks():
+    lad = _ladder()
+    lad.submit(2, _state(), {"step": 2})
+    store = lad.store(1)
+    got = store.chunk_manifest()
+    assert got is not None
+    step, entry = got
+    assert step == 2 and len(entry["crcs"]) == entry["n_chunks"]
+    fetched = store.load_chunks(2, [0, 3])
+    assert set(fetched) == {0, 3}
+    assert all(r.nbytes == 4096 for r in fetched.values())
+    # exact bytes: chunk 0 is the first 1024 floats of "b" (path order)
+    assert store.load_chunks(2, [entry["n_chunks"]]) is None  # out of range
+    assert store.load_chunks(99, [0]) is None  # unknown step
+    # entries without fingerprints (pre-crc submits) opt out of partial
+    store._manifest[2]["crcs"] = None
+    assert store.chunk_manifest() is None
+
+
+def test_restore_partial_moves_only_stale_chunks():
+    lad = _ladder()
+    clean = _state()
+    lad.submit(2, clean, {"step": 2})
+
+    current = {k: v.copy() for k, v in clean.items()}
+    current["w"][100] *= -1.0  # one poisoned element -> one stale chunk
+    got = lad.restore_partial(current)
+    assert got is not None and got.step == 2
+    assert got.moved_chunks == 1 and got.n_chunks == got.total_bytes // 4096
+    assert got.moved_bytes == 4096 < got.total_bytes
+    for k in clean:
+        assert np.array_equal(got.state[k], clean[k]), k
+
+    # an uncorrupted view moves NOTHING
+    got = lad.restore_partial({k: v.copy() for k, v in clean.items()})
+    assert got.moved_chunks == 0 and got.moved_bytes == 0
+
+    # layout drift (shape change since the submit) -> None (full-walk
+    # fallback is the caller's job)
+    assert lad.restore_partial({"w": np.ones(8, np.float32)}) is None
+
+
+def test_restore_partial_through_delta_encoded_submits():
+    """Fingerprints are recorded on the PRE-encode raw chunks, so partial
+    restore stays byte-exact when the partner level delta-encodes."""
+    lad = _ladder(delta="bf16")
+    lad.submit(2, _state(1.0), {"step": 2})
+    lad.submit(4, _state(1.001), {"step": 4})
+    want = _state(1.001)
+    current = {k: v.copy() for k, v in want.items()}
+    current["b"][5] += 7.0
+    got = lad.restore_partial(current)
+    assert got is not None and got.step == 4
+    assert 1 <= got.moved_chunks < got.n_chunks
+    for k in want:
+        assert np.array_equal(got.state[k], want[k]), k
+
+
+# ---------------------------------------------------------------------------
+# the full lifecycle: detect -> vote -> partial restore -> bit-identical
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_sdc_lifecycle_detect_vote_partial_restore_bit_identity():
+    out = run_subprocess(
+        """
+        import numpy as np, jax
+        from repro.configs.registry import smoke_config
+        from repro.core.fault_injector import SDCEvent, SDCSchedule
+        from repro.core.simulator import SimCluster
+
+        model = smoke_config("qwen2.5-3b")
+        KW = dict(n_slices=4, model_shards=2, rdegree=1.0, seq_len=16,
+                  per_slice_batch=2, checkpoint_every=2,
+                  chunk_bytes=64 * 1024, sdc_check=True)
+
+        def tree_eq(a, b):
+            return all(np.array_equal(np.asarray(x), np.asarray(y))
+                       for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+        base = SimCluster(model, **KW)
+        rb = base.run(6)
+        assert rb.sdc_detected == 0, "healthy mirrors must scrub clean"
+        base_params = base.params_replica()
+
+        # persistent param-space flip one step after a checkpoint: the
+        # vote must name physical slice 2 and the repair must move less
+        # than the blob
+        sim = SimCluster(model, sdc_inject=True, **KW)
+        rep = sim.run(6, sdc=SDCSchedule(
+            [SDCEvent(step=3, victim=2, target="param")]))
+        assert rep.sdc_detected == 1 and rep.sdc_repairs == 1, (
+            rep.sdc_detected, rep.sdc_repairs)
+        assert rep.restarts == 0, "partial restore must serve this"
+        assert 0 < rep.sdc_bytes_moved < 0.5 * rep.sdc_bytes_full, (
+            rep.sdc_bytes_moved, rep.sdc_bytes_full)
+        assert any("[partial:" in s for s in rep.restored_from), rep.restored_from
+        assert any("victim=" in e for e in rep.events), rep.events
+        assert rep.losses == rb.losses
+        assert tree_eq(sim.params_replica(), base_params)
+
+        # transient grad-space sign flip: param tables stay clean, one
+        # retry resolves it, nothing is restored
+        sim2 = SimCluster(model, sdc_inject=True, **KW)
+        r2 = sim2.run(6, sdc=SDCSchedule(
+            [SDCEvent(step=3, victim=1, target="grad", bit=31)]))
+        assert r2.sdc_detected == 1 and r2.sdc_transient == 1, (
+            r2.sdc_detected, r2.sdc_transient)
+        assert r2.sdc_repairs == 0 and r2.restarts == 0 and not r2.restored_from
+        assert r2.losses == rb.losses
+        assert tree_eq(sim2.params_replica(), base_params)
+        print("SCRUB_LIFECYCLE_OK")
+        """,
+        devices=8,
+    )
+    assert "SCRUB_LIFECYCLE_OK" in out
