@@ -1,0 +1,169 @@
+"""Chaos-matrix benchmarks: what gray failures COST the liveness layer.
+
+Four scenarios, each priced against a failure-free reference run and
+required to end bit-identical to it (recovery must not perturb the
+trajectory):
+
+- ``hang-detect``: a slice beats without progress; the stall detector
+  convicts it within the suspicion window. Headline numbers: detection
+  latency (ticks from injection to conviction - the FTHP-MPI timeout
+  figure of merit) and ``stalled_units`` (how long the world was wedged
+  before the conviction - the cost a report-driven detector never pays
+  because it never fires).
+- ``drop-detect``: heartbeats stop while the slice otherwise runs; pure
+  silence conviction (the crash-shaped path).
+- ``slow-quarantine``: a fail-slow peer left as sole holder of a dead
+  pair's chunks is quarantined mid-restore within the rung deadline and
+  the ladder falls L1 -> L2 instead of wedging the recovery window.
+- ``flap``: a drop shorter than the window; the detector must soft-suspect
+  and recover it at ZERO cost - no failures, no shrinks, no restarts (the
+  false-positive guard: a wrong shrink is strictly worse than a flap).
+
+``--tiny`` runs the CI smoke shape (6 slices, 6 steps).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+_CHILD = """
+import json, tempfile
+import jax, numpy as np
+from repro.configs.registry import smoke_config
+from repro.core.simulator import SimCluster
+from repro.store import DurableStore, PartnerMemoryStore, RecoveryLadder
+
+TINY = {tiny}
+STEPS = 6 if TINY else 10
+WINDOW = 4.0
+cfg = smoke_config("qwen2.5-3b")
+results = []
+
+def cluster(stores=None, rung_deadline=0.0, live=True):
+    return SimCluster(
+        cfg, n_slices=6, model_shards=1, rdegree=1.0, spares=2,
+        heal="eager", seq_len=32, stores=stores,
+        checkpoint_every=0 if stores is None else 2,
+        suspicion_window=WINDOW if live else 0.0,
+        rung_deadline_s=rung_deadline,
+    )
+
+ref = cluster(live=False)
+ref_rep = ref.run(STEPS)
+ref_leaves = jax.tree.leaves(ref.params_replica())
+
+def bit_identical(sim, rep):
+    diff = max(
+        float(np.max(np.abs(a - b)))
+        for a, b in zip(ref_leaves, jax.tree.leaves(sim.params_replica()))
+    )
+    return diff == 0.0 and rep.losses[-1] == ref_rep.losses[-1]
+
+# --- hang: beat-without-progress, stall conviction -------------------------
+sim = cluster()
+rep = sim.run(STEPS, chaos="3:hang:3")
+results.append({{
+    "case": "hang-detect", "steps": STEPS, "window": WINDOW,
+    "detections": rep.detections, "detect_latency": rep.detect_latency,
+    "stalled_units": rep.stalled_units, "failures": rep.failures,
+    "restarts": rep.restarts, "handler_us": rep.handler_seconds * 1e6,
+    "bit_identical": bit_identical(sim, rep),
+}})
+
+# --- drop: pure-silence conviction -----------------------------------------
+sim = cluster()
+rep = sim.run(STEPS, chaos="1:drop:2")
+results.append({{
+    "case": "drop-detect", "steps": STEPS, "window": WINDOW,
+    "detections": rep.detections, "detect_latency": rep.detect_latency,
+    "failures": rep.failures, "restarts": rep.restarts,
+    "handler_us": rep.handler_seconds * 1e6,
+    "bit_identical": bit_identical(sim, rep),
+}})
+
+# --- fail-slow peer: quarantine mid-restore, L1 -> L2 fall-through ---------
+ps = PartnerMemoryStore(range(6), redundancy=2)
+ladder = RecoveryLadder(
+    [ps, DurableStore(tempfile.mkdtemp())], rung_deadline_s=0.5)
+sim = cluster(stores=ladder, rung_deadline=0.5)
+rep = sim.run(STEPS, failures={{3: [0, 2]}}, chaos="2:slow:1")
+results.append({{
+    "case": "slow-quarantine", "steps": STEPS, "rung_deadline_s": 0.5,
+    "quarantines": rep.quarantines, "restored_from": rep.restored_from,
+    "l1_detail": ladder.attempts[0].detail, "restarts": rep.restarts,
+    "handler_us": rep.handler_seconds * 1e6,
+    "bit_identical": bit_identical(sim, rep),
+}})
+
+# --- flap: soft-suspect then recover, no shrink ----------------------------
+sim = cluster()
+rep = sim.run(STEPS, chaos="2:flap:1:3")
+results.append({{
+    "case": "flap", "steps": STEPS, "window": WINDOW,
+    "flaps": rep.flaps, "failures": rep.failures, "restarts": rep.restarts,
+    "promotes": rep.promotes, "detections": rep.detections,
+    "bit_identical": bit_identical(sim, rep),
+}})
+
+print("RESULTS_JSON:" + json.dumps(results))
+"""
+
+
+def run(tiny: bool = False):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=6"
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_CHILD.format(tiny=tiny))],
+        capture_output=True, text=True, env=env, timeout=3000,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-3000:])
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULTS_JSON:")][0]
+    return json.loads(line[len("RESULTS_JSON:"):])
+
+
+def rows(results):
+    out = []
+    for r in results:
+        bit = "bitwise" if r["bit_identical"] else "DIVERGED"
+        if r["case"] == "hang-detect":
+            out.append((
+                "chaos/hang-detect", r["handler_us"],
+                f"latency={r['detect_latency'][0]:g}/window={r['window']:g} "
+                f"wedged={r['stalled_units']}u {bit}",
+            ))
+        elif r["case"] == "drop-detect":
+            out.append((
+                "chaos/drop-detect", r["handler_us"],
+                f"latency={r['detect_latency'][0]:g}/window={r['window']:g} "
+                f"{bit}",
+            ))
+        elif r["case"] == "slow-quarantine":
+            out.append((
+                "chaos/slow-quarantine", r["handler_us"],
+                f"quarantines={len(r['quarantines'])} "
+                f"restored={r['restored_from'][0] if r['restored_from'] else '-'} "
+                f"{bit}",
+            ))
+        else:
+            out.append((
+                "chaos/flap", 0.0,
+                f"flaps={r['flaps']} failures={r['failures']} "
+                f"restarts={r['restarts']} {bit}",
+            ))
+    return out
+
+
+if __name__ == "__main__":
+    results = run(tiny="--tiny" in sys.argv)
+    from perf_json import update_perf_json
+
+    update_perf_json("chaos", results)
+    for name, us, d in rows(results):
+        print(f"{name},{us:.0f},{d}")

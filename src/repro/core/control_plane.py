@@ -12,6 +12,36 @@ plane is a host-side service that NEVER touches the compiled XLA program:
   next step and enters the error handler on mismatch (error propagation)
 - ``agree()``               <- the shrink-time agreement on the failed set
 
+Gray failures (the FTHP-MPI / GASPI-FT timeout model): fail-stop is only
+the clean half of the fault space. A slice can be alive-but-hung - its
+liveness daemon keeps beating while its dispatch progress freezes - or
+silently wedged. Heartbeats therefore carry a monotonically increasing
+*progress* mark (the slice's dispatch step), and suspicion accrues from
+two independent signals:
+
+- **silence**: no heartbeat for longer than ``heartbeat_timeout`` - the
+  crash-shaped suspicion (daemon/host gone);
+- **stall**: beating, but progress pinned BEHIND the world's frontier
+  (the max progress any slice reported) for longer than
+  ``progress_timeout`` - the hang-shaped suspicion. Slices AT the
+  frontier are never stall-suspected: when the whole world blocks on one
+  hung member, only the laggard accrues suspicion, so attribution names
+  the culprit, not its victims.
+
+A suspicion score is the larger of the two ratios; a score in
+[``suspect_fraction``, 1.0] is a *soft* suspect (observability + cheap
+quarantine decisions - a flap that recovers here costs nothing), a score
+past 1.0 is an agreed failure: :meth:`detect` includes it and the
+:meth:`check` dispatch guard raises it into the error handler exactly
+like a reported crash - a hung slice can no longer stall the world
+forever.
+
+Zombie fencing: once :meth:`shrink_complete` evicts a slice, the slice id
+is fenced at that generation - a late heartbeat or re-register stamped
+with the old generation is rejected, so a recovered-then-returning
+process cannot resurrect itself into the liveness tables of a world that
+already shrank past it.
+
 In a multi-controller deployment this runs over an out-of-band transport
 (etcd/TCP heartbeats); the in-process implementation below is used by the
 simulator and tests, with identical semantics and thread-safety.
@@ -41,26 +71,89 @@ class ProcessFailed(Exception):
         self.failed = set(failed)
 
 
+@dataclass(frozen=True)
+class Suspicion:
+    """One slice's gray-failure score at a point in time.
+
+    ``score`` >= 1.0 means the suspicion window elapsed (the slice is in
+    :meth:`ControlPlane.detect`'s failed set); scores in
+    [suspect_fraction, 1.0) are soft suspects - watched, quarantinable,
+    but NOT yet grounds for a shrink (the flap-tolerance band)."""
+
+    slice_id: int
+    score: float
+    silent_for: float
+    stalled_for: float
+    reason: str  # "silence" | "stall"
+
+
 @dataclass
 class ControlPlane:
     heartbeat_timeout: float = 5.0
     clock: Callable[[], float] = time.monotonic
+    #: stall (zero-progress-while-beating) window; None = heartbeat_timeout
+    progress_timeout: Optional[float] = None
+    #: scores at/above this fraction of the window are soft suspects
+    suspect_fraction: float = 0.5
 
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
     _last_beat: Dict[int, float] = field(default_factory=dict, repr=False)
+    _last_progress: Dict[int, float] = field(default_factory=dict, repr=False)
+    _progress_time: Dict[int, float] = field(default_factory=dict, repr=False)
+    #: slice -> generation at which it was shrunk out (zombie fence)
+    _fenced: Dict[int, int] = field(default_factory=dict, repr=False)
     _reported: Set[int] = field(default_factory=set, repr=False)
     _acked: Set[int] = field(default_factory=set, repr=False)
     _generation: int = 0
     _revoked: bool = False
 
     # ---- liveness ----------------------------------------------------------
-    def register(self, slice_id: int) -> None:
-        with self._lock:
-            self._last_beat[slice_id] = self.clock()
+    def _fenced_locked(self, slice_id: int, generation: Optional[int]) -> bool:
+        """True when a beat/register must be rejected: the slice was shrunk
+        out and the sender's generation stamp does not post-date the fence
+        (an unstamped message from a fenced slice is always a zombie)."""
+        fence = self._fenced.get(slice_id)
+        if fence is None:
+            return False
+        return generation is None or generation <= fence
 
-    def heartbeat(self, slice_id: int) -> None:
+    def register(self, slice_id: int, generation: Optional[int] = None,
+                 progress: Optional[float] = None) -> bool:
+        """Admit a slice into the liveness tables. Generation-aware: a
+        re-register of a fenced (already shrunk-out) slice with a stale
+        generation stamp is rejected, so re-registration racing the
+        generation bump cannot re-enter ``detect()``'s expired set.
+        Returns False when fenced off."""
         with self._lock:
-            self._last_beat[slice_id] = self.clock()
+            if self._fenced_locked(slice_id, generation):
+                return False
+            if generation is not None and generation > self._fenced.get(
+                    slice_id, -1):
+                self._fenced.pop(slice_id, None)
+            now = self.clock()
+            self._last_beat[slice_id] = now
+            if progress is not None:
+                self._last_progress[slice_id] = progress
+                self._progress_time[slice_id] = now
+            return True
+
+    def heartbeat(self, slice_id: int, progress: Optional[float] = None,
+                  generation: Optional[int] = None) -> bool:
+        """One liveness beat, optionally carrying the slice's dispatch
+        progress mark (monotonic; stale marks are kept, not regressed).
+        Returns False for fenced zombies - the beat is dropped."""
+        with self._lock:
+            if self._fenced_locked(slice_id, generation):
+                return False
+            now = self.clock()
+            self._last_beat[slice_id] = now
+            if progress is not None and (
+                slice_id not in self._last_progress
+                or progress > self._last_progress[slice_id]
+            ):
+                self._last_progress[slice_id] = progress
+                self._progress_time[slice_id] = now
+            return True
 
     def report_failure(self, slice_id: int) -> None:
         """Direct failure report (the SIGCHLD/ptrace path - e.g. a device
@@ -68,14 +161,57 @@ class ControlPlane:
         with self._lock:
             self._reported.add(slice_id)
 
+    def reported(self) -> Set[int]:
+        with self._lock:
+            return set(self._reported)
+
+    def _scores_locked(self, now: float) -> List[Suspicion]:
+        hb = self.heartbeat_timeout
+        pt = self.progress_timeout if self.progress_timeout is not None else hb
+        frontier = max(self._last_progress.values(), default=None)
+        out = []
+        for s, beat in self._last_beat.items():
+            silent = now - beat
+            stalled = 0.0
+            if (
+                frontier is not None
+                and s in self._last_progress
+                and self._last_progress[s] < frontier
+            ):
+                stalled = now - self._progress_time[s]
+            silence_score = silent / hb if hb > 0 else 0.0
+            stall_score = stalled / pt if pt > 0 else 0.0
+            score = max(silence_score, stall_score)
+            if score <= 0:
+                continue
+            out.append(Suspicion(
+                slice_id=s, score=score, silent_for=silent,
+                stalled_for=stalled,
+                reason="silence" if silence_score >= stall_score else "stall",
+            ))
+        out.sort(key=lambda x: (-x.score, x.slice_id))
+        return out
+
+    def suspects(self) -> List[Suspicion]:
+        """Every slice scoring at/above ``suspect_fraction``, worst first.
+        Soft suspects (score < 1.0) are the flap band: watch, maybe
+        quarantine as a state source, but do NOT shrink - a slice that
+        resumes beating with progress drops back out at no cost."""
+        now = self.clock()
+        with self._lock:
+            return [
+                s for s in self._scores_locked(now)
+                if s.score >= self.suspect_fraction
+            ]
+
     def detect(self) -> Set[int]:
-        """Failed = explicitly reported + heartbeat-expired."""
+        """Failed = explicitly reported + suspicion-expired (silence OR
+        progress-stall strictly past its window - exactly at the window is
+        still alive)."""
         now = self.clock()
         with self._lock:
             expired = {
-                s
-                for s, t in self._last_beat.items()
-                if now - t > self.heartbeat_timeout
+                s.slice_id for s in self._scores_locked(now) if s.score > 1.0
             }
             return set(self._reported) | expired
 
@@ -113,21 +249,30 @@ class ControlPlane:
             return set(self._reported)
 
     def shrink_complete(self, recovered: Set[int]) -> None:
-        """Called by the error handler once the world is repaired: clears the
-        revocation so dispatch resumes at the new generation."""
+        """Called by the error handler once the world is repaired: clears
+        the revocation so dispatch resumes at the new generation, and
+        FENCES the evicted slices at that generation - their late
+        heartbeats/registers are rejected from here on (zombie fencing)."""
         with self._lock:
             self._reported -= recovered
             for s in recovered:
                 self._last_beat.pop(s, None)
+                self._last_progress.pop(s, None)
+                self._progress_time.pop(s, None)
+                self._fenced[s] = self._generation
             self._revoked = False
 
     # ---- dispatch guard ------------------------------------------------------
     def check(self, my_generation: int) -> None:
         """Fast-path guard the host loop calls before dispatching a step
         (the analogue of interleaving EMPI_Test with failure checks in the
-        paper's Fig. 7 loop - but host-side, off the XLA hot path)."""
+        paper's Fig. 7 loop - but host-side, off the XLA hot path).
+        Folds liveness expiry into the guard: a hung or silent slice past
+        its suspicion window raises here exactly like a reported crash,
+        instead of stalling the world forever."""
         with self._lock:
             if self._revoked or self._generation != my_generation:
                 raise CommunicatorRevoked(self._generation)
-            if self._reported:
-                raise ProcessFailed(set(self._reported))
+        failed = self.detect()
+        if failed:
+            raise ProcessFailed(failed)

@@ -14,7 +14,8 @@ these into in-graph flips via ``scrub.digest.encode_spec``).
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Tuple, Union
+from typing import (Dict, Iterator, List, Mapping, Optional, Sequence, Set,
+                    Tuple, Union)
 
 import numpy as np
 
@@ -36,6 +37,10 @@ class FaultInjector:
     _rng: np.random.Generator = field(init=False, repr=False)
 
     def __post_init__(self):
+        if not (self.scale > 0):
+            raise ValueError(f"scale must be > 0, got {self.scale}")
+        if not (self.shape > 0):
+            raise ValueError(f"shape must be > 0, got {self.shape}")
         self._rng = np.random.default_rng(np.random.Philox(key=self.seed))
 
     def next_event(self, alive: List[int]) -> Tuple[float, int]:
@@ -45,9 +50,14 @@ class FaultInjector:
         victim = int(self._rng.choice(alive))
         return dt, victim
 
-    def schedule(self, horizon: float, alive: List[int]) -> List[Tuple[float, int]]:
+    def schedule(self, horizon: float, alive: List[int],
+                 max_events: int = 1_000_000) -> List[Tuple[float, int]]:
         """All failure events in [0, horizon) assuming no repairs change the
-        alive set (callers re-draw after repairs if they do)."""
+        alive set (callers re-draw after repairs if they do).
+
+        ``max_events`` bounds the draw loop: a degenerate Weibull draw of
+        exactly 0.0 (possible at float32 resolution for tiny shapes) would
+        otherwise never advance ``t`` and spin forever."""
         events = []
         t = 0.0
         while True:
@@ -56,6 +66,13 @@ class FaultInjector:
             if t >= horizon:
                 return events
             events.append((t, victim))
+            if len(events) >= max_events:
+                raise RuntimeError(
+                    f"degenerate fault schedule: {max_events} events before "
+                    f"horizon {horizon} (scale={self.scale}, "
+                    f"shape={self.shape}) - inter-failure draws are not "
+                    "advancing time"
+                )
 
 
 # ---------------------------------------------------------------------------
@@ -83,7 +100,9 @@ class SDCEvent:
     bit: Optional[int] = None
 
     def __post_init__(self):
-        assert self.target in ("grad", "param"), self.target
+        if self.target not in ("grad", "param"):
+            raise ValueError(
+                f"SDC target must be 'grad' or 'param', got {self.target!r}")
 
     @property
     def resolved(self) -> bool:
@@ -140,8 +159,11 @@ class SDCSchedule:
         else:
             self._by_step = {}
             for e in events or []:
-                assert e.step not in self._by_step, (
-                    f"duplicate SDC event at step {e.step}")
+                if e.step in self._by_step:
+                    # Not an assert: must survive `python -O`, and parse()
+                    # reaches here outside its per-item try/except so the
+                    # CLI sees this exact message.
+                    raise ValueError(f"duplicate SDC event at step {e.step}")
                 self._by_step[e.step] = e
 
     @classmethod
@@ -181,3 +203,176 @@ class SDCSchedule:
 
     def __bool__(self) -> bool:
         return bool(self._by_step)
+
+
+# ---------------------------------------------------------------------------
+# gray failures (the chaos plane): hangs, slowdowns, drops, flaps
+# ---------------------------------------------------------------------------
+
+_CHAOS_KINDS = ("hang", "slow", "drop", "flap")
+
+
+@dataclass(frozen=True)
+class ChaosEvent:
+    """One gray-failure injection, starting at a dispatch step.
+
+    Kinds (the fault model beyond fail-stop + SDC):
+
+    - ``hang``: the victim keeps heartbeating but its progress mark
+      freezes - the alive-but-wedged process. ``duration=inf`` means it
+      never comes back on its own (the detector must fire).
+    - ``slow``: the victim's store operations are served ``factor``x
+      slower - the fail-slow peer. Applied as a per-peer latency
+      multiplier on gathers, it should trip rung deadlines, not shrinks.
+    - ``drop``: the victim's heartbeats stop arriving while it otherwise
+      runs - a partitioned liveness channel. Pure-silence suspicion.
+    - ``flap``: a short drop (default ``duration=2.0``) that recovers
+      before the suspicion window expires - the false-positive probe.
+      A correct detector soft-suspects it and never shrinks.
+
+    ``victim`` is a PHYSICAL slice id, like FailureSchedule's victims.
+    ``duration``/``factor`` are on the injection clock (the FTSession's
+    logical clock in simulation: 1.0 per dispatch-loop iteration).
+    """
+
+    step: int
+    kind: str
+    victim: int
+    duration: float = float("inf")
+    factor: float = 100.0
+
+    def __post_init__(self):
+        if self.kind not in _CHAOS_KINDS:
+            raise ValueError(
+                f"chaos kind must be one of {_CHAOS_KINDS}, got {self.kind!r}")
+        if not (self.duration > 0):
+            raise ValueError(f"chaos duration must be > 0, got {self.duration}")
+        if self.kind == "slow" and not (self.factor > 0):
+            raise ValueError(f"slow factor must be > 0, got {self.factor}")
+
+
+class ChaosSchedule:
+    """Deterministic gray-failure plan: dispatch step -> [ChaosEvent].
+    Mirrors ``FailureSchedule``'s contract: input copied, events consumed
+    by :meth:`take` (a replay never re-injects a step it already
+    survived)."""
+
+    _FLAP_DEFAULT_DURATION = 2.0
+
+    def __init__(self, events: Union[None, "ChaosSchedule",
+                                     Sequence[ChaosEvent],
+                                     Mapping[int, Sequence[ChaosEvent]]] = None):
+        self._by_step: Dict[int, List[ChaosEvent]] = {}
+        if isinstance(events, ChaosSchedule):
+            self._by_step = {s: list(evs) for s, evs in events._by_step.items()}
+        elif isinstance(events, Mapping):
+            self._by_step = {int(s): list(evs) for s, evs in events.items()}
+        else:
+            for e in events or []:
+                self._by_step.setdefault(e.step, []).append(e)
+
+    @classmethod
+    def parse(cls, spec: str) -> "ChaosSchedule":
+        """CLI syntax: comma list of ``step:kind:victim[:duration[:factor]]``
+        with kind in hang/slow/drop/flap; duration accepts ``inf``.
+        E.g. ``--chaos 5:hang:2,10:slow:1:20:50,30:flap:0``."""
+        events = []
+        for item in filter(None, (s.strip() for s in (spec or "").split(","))):
+            parts = item.split(":")
+            try:
+                if not 3 <= len(parts) <= 5:
+                    raise ValueError(len(parts))
+                step, kind, victim = int(parts[0]), parts[1], int(parts[2])
+                if len(parts) >= 4:
+                    duration = float(parts[3])
+                elif kind == "flap":
+                    duration = cls._FLAP_DEFAULT_DURATION
+                else:
+                    duration = float("inf")
+                factor = float(parts[4]) if len(parts) == 5 else 100.0
+                events.append(ChaosEvent(step, kind, victim, duration, factor))
+            except ValueError:
+                raise ValueError(
+                    f"bad chaos injection {item!r}: expected "
+                    "step:kind:victim[:duration[:factor]] with kind in "
+                    f"{'/'.join(_CHAOS_KINDS)} "
+                    "(e.g. --chaos 5:hang:2 or 10:slow:1:inf:50)"
+                ) from None
+        return cls(events)
+
+    def take(self, step: int) -> List[ChaosEvent]:
+        return self._by_step.pop(step, [])
+
+    def pending(self) -> int:
+        return sum(len(v) for v in self._by_step.values())
+
+    def __bool__(self) -> bool:
+        return bool(self._by_step)
+
+
+class ChaosState:
+    """Active gray-failure tracker: which injections are live *now*.
+
+    The injection side of the chaos plane: the FTSession activates events
+    as its dispatch loop crosses their step, then consults this to shape
+    heartbeats (hung -> beat without progress, dropped -> no beat) and
+    store latency (slow -> factor). Events age out on the same clock the
+    detector reads, so flaps recover deterministically."""
+
+    def __init__(self):
+        self._active: List[Tuple[ChaosEvent, float]] = []
+        self._started: Dict[int, float] = {}
+
+    def activate(self, event: ChaosEvent, now: float) -> None:
+        self._active.append((event, now))
+        # first injection time per victim: detection latency is measured
+        # against the moment the gray failure began, not when it was seen
+        self._started.setdefault(event.victim, now)
+
+    def _live(self, now: float) -> Iterator[ChaosEvent]:
+        self._active = [
+            (e, t0) for e, t0 in self._active if now < t0 + e.duration
+        ]
+        return (e for e, _ in self._active)
+
+    def hung(self, now: float) -> Set[int]:
+        return {e.victim for e in self._live(now) if e.kind == "hang"}
+
+    def dropped(self, now: float) -> Set[int]:
+        """Victims whose heartbeats are being swallowed (drop + flap:
+        a flap IS a short drop)."""
+        return {e.victim for e in self._live(now) if e.kind in ("drop", "flap")}
+
+    def slow_factor(self, peer: int, now: float) -> float:
+        f = 1.0
+        for e in self._live(now):
+            if e.kind == "slow" and e.victim == peer:
+                f = max(f, e.factor)
+        return f
+
+    def start_time(self, victim: int) -> Optional[float]:
+        return self._started.get(victim)
+
+    def any_active(self, now: float) -> bool:
+        return any(True for _ in self._live(now))
+
+
+class ChaosLatency:
+    """Adapter handing per-peer injected latency to the store plane.
+
+    Stores call :meth:`read_delay` per gather touch; the returned seconds
+    are *virtual* - charged to the active Deadline's budget rather than
+    slept, so chaos tests stay fast and deterministic while still
+    exercising the deadline/quarantine machinery with realistic
+    magnitudes (``base_s`` ~ one healthy shard fetch)."""
+
+    def __init__(self, state: ChaosState, clock, base_s: float = 0.05):
+        self.state = state
+        self.clock = clock
+        self.base_s = base_s
+
+    def read_delay(self, peer: int) -> float:
+        factor = self.state.slow_factor(peer, self.clock())
+        if factor <= 1.0:
+            return 0.0
+        return self.base_s * factor

@@ -34,7 +34,12 @@ import numpy as np
 from repro.compat import set_mesh
 from repro.configs.base import ModelConfig, ReplicationConfig, TrainConfig
 from repro.core import data_plane as DP
-from repro.core.fault_injector import SDCEvent, SDCInjector, SDCSchedule
+from repro.core.fault_injector import (
+    ChaosSchedule,
+    SDCEvent,
+    SDCInjector,
+    SDCSchedule,
+)
 from repro.data.pipeline import TokenPipeline
 from repro.dist.sharding import opt_shardings, param_shardings
 from repro.ft import FailureSchedule, FTReport, FTSession, ResilientProgram
@@ -84,6 +89,10 @@ class SimCluster(ResilientProgram):
         sdc_tol: float = 0.0,
         sdc_chunk_elems: int = 1 << 12,
         sdc_seed: int = 0,
+        suspicion_window: float = 0.0,
+        progress_window: Optional[float] = None,
+        rung_deadline_s: float = 0.0,
+        chaos_base_latency_s: float = 0.05,
     ):
         self.model_cfg = model_cfg
         self.repl = ReplicationConfig(
@@ -163,13 +172,17 @@ class SimCluster(ResilientProgram):
             rdegree=rdegree,
             n_spares=spares,
             heal=heal,
-            heartbeat_timeout=1e9,  # report-driven in sim
+            heartbeat_timeout=1e9,  # report-driven unless liveness is on
             stores=stores,
             checkpoint_every=checkpoint_every,
             replay="log",
             report=SimReport(),
             unit="step",
             scrub=scrub,
+            suspicion_window=suspicion_window,
+            progress_window=progress_window,
+            rung_deadline_s=rung_deadline_s,
+            chaos_base_latency_s=chaos_base_latency_s,
         )
 
     # ---- convenience views over the session --------------------------------
@@ -348,6 +361,7 @@ class SimCluster(ResilientProgram):
         failures: Optional[Dict[int, List[int]]] = None,
         warmup_compile: bool = True,
         sdc=None,
+        chaos=None,
     ) -> SimReport:
         """Run ``steps`` training steps through the session's dispatch loop.
         ``failures`` maps step index -> physical slices to kill *during*
@@ -355,7 +369,21 @@ class SimCluster(ResilientProgram):
         communication-time detection); the schedule is copied, never
         mutated. ``sdc`` is an :class:`SDCSchedule` (or anything its
         constructor accepts) of bit flips to arm - requires the cluster
-        to be built with ``sdc_inject=True``."""
+        to be built with ``sdc_inject=True``. ``chaos`` is a
+        :class:`ChaosSchedule` (or spec string / event list) of gray
+        failures - requires ``suspicion_window > 0`` at construction so
+        the liveness layer can detect them."""
+        if chaos is not None:
+            self.session.chaos = (
+                ChaosSchedule.parse(chaos) if isinstance(chaos, str)
+                else chaos if isinstance(chaos, ChaosSchedule)
+                else ChaosSchedule(chaos)
+            )
+            if self.session.chaos and not self.session._liveness:
+                raise ValueError(
+                    "a chaos schedule needs suspicion_window > 0 at "
+                    "SimCluster construction (the liveness layer detects it)"
+                )
         if sdc is not None:
             assert self._sdc_inject, (
                 "an SDC schedule needs sdc_inject=True at construction "

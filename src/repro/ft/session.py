@@ -47,6 +47,7 @@ from repro.core.control_plane import (
     ProcessFailed,
 )
 from repro.core.elastic import shrink_mesh
+from repro.core.fault_injector import ChaosLatency, ChaosSchedule, ChaosState
 from repro.core.recovery import ReplayPlan, StepLog, StepRecord, replay_plan
 from repro.core.replication import WorldState
 from repro.heal import Healer, HealPolicy
@@ -96,6 +97,21 @@ class FTReport:
     #: equivalent full-blob restores would have moved
     sdc_bytes_moved: int = 0
     sdc_bytes_full: int = 0
+    #: gray failures (the chaos plane): units the world spent stalled
+    #: behind a hung slice before the detector fired ...
+    stalled_units: int = 0
+    #: ... soft-suspects that recovered before the window expired (the
+    #: false-positive path: a flap must never cause a shrink) ...
+    flaps: int = 0
+    #: ... failures found by suspicion expiry, NOT an explicit report:
+    #: "hang:3" / "silence:5", one per detected slice ...
+    detections: List[str] = field(default_factory=list)
+    #: ... detection latency per entry above, in liveness-clock units
+    #: (dispatch-loop iterations in simulation) from injection to the
+    #: error handler firing ...
+    detect_latency: List[float] = field(default_factory=list)
+    #: ... and fail-slow peers quarantined out of store rings mid-restore
+    quarantines: List[str] = field(default_factory=list)
 
 
 # ---------------------------------------------------------------------------
@@ -186,6 +202,12 @@ class FTSession:
         report: Optional[FTReport] = None,
         unit: str = "step",
         scrub=None,
+        chaos: Union[None, ChaosSchedule, str] = None,
+        suspicion_window: float = 0.0,
+        progress_window: Optional[float] = None,
+        rung_deadline_s: float = 0.0,
+        chaos_base_latency_s: float = 0.05,
+        suspect_fraction: float = 0.5,
     ):
         assert replay in ("log", "none"), replay
         import jax  # deferred: callers set XLA_FLAGS before first jax use
@@ -209,7 +231,35 @@ class FTSession:
         self.healer = Healer(heal)
         self.last_repair: Dict = {}
         self.last_heal = None
-        self.control = ControlPlane(heartbeat_timeout=heartbeat_timeout)
+        # ---- gray-failure layer ------------------------------------------
+        # suspicion_window > 0 turns the liveness half of the control plane
+        # ON: the dispatch loop drives a deterministic logical clock (1.0
+        # per iteration), every live slice heartbeats with its dispatch
+        # step as the progress mark, and check() raises on suspicion
+        # expiry - a hung slice enters the SAME error handler as a crash.
+        self._now = 0.0
+        self._liveness = suspicion_window > 0
+        self._suspected: set = set()
+        self.chaos = (
+            ChaosSchedule.parse(chaos) if isinstance(chaos, str)
+            else chaos if isinstance(chaos, ChaosSchedule)
+            else ChaosSchedule(chaos)
+        )
+        self.chaos_state = ChaosState()
+        if self.chaos and not self._liveness:
+            raise ValueError(
+                "a chaos schedule needs the liveness layer: set "
+                "suspicion_window > 0 so gray failures can be detected"
+            )
+        if self._liveness:
+            self.control = ControlPlane(
+                heartbeat_timeout=suspicion_window,
+                progress_timeout=progress_window,
+                suspect_fraction=suspect_fraction,
+                clock=lambda: self._now,
+            )
+        else:
+            self.control = ControlPlane(heartbeat_timeout=heartbeat_timeout)
         if stores is None:
             self.ladder = RecoveryLadder([])
         elif isinstance(stores, RecoveryLadder):
@@ -233,6 +283,96 @@ class FTSession:
         self.reset_logs()
         self.mesh = None
         self._regenerate()
+        # deadline-bounded recovery: per-rung restore budget, and the
+        # chaos plane's per-peer latency handed to every store that can
+        # spend it against the armed deadline
+        if rung_deadline_s > 0:
+            self.ladder.rung_deadline_s = float(rung_deadline_s)
+        self._known_quarantines: set = set()
+        if self._liveness:
+            latency = ChaosLatency(
+                self.chaos_state, lambda: self._now,
+                base_s=chaos_base_latency_s,
+            )
+            for s in self.ladder:
+                set_lat = getattr(s, "set_latency", None)
+                if set_lat is not None:
+                    set_lat(latency)
+            self._register_liveness(progress=-1.0)
+
+    # ------------------------------------------------------------------
+    # the liveness loop (gray-failure detection)
+    # ------------------------------------------------------------------
+    def _register_liveness(self, progress: float) -> None:
+        """(Re-)admit every live slice into the liveness tables at the
+        CURRENT clock: on start, and after each shrink - survivors' beat
+        times aged by a stall must not trip the detector the instant
+        dispatch resumes. Mesh slices carry a progress mark; spares beat
+        without one (a standby has no dispatch frontier to fall behind),
+        so only silence can convict it."""
+        if not self._liveness:
+            return
+        gen = self.control.generation
+        for p in self.world.live_physicals():
+            self.control.register(p, generation=gen, progress=progress)
+        for p in self.world.spares:
+            self.control.register(p, generation=gen)
+
+    def _liveness_tick(self, step: int) -> bool:
+        """One liveness round per dispatch-loop iteration: activate chaos
+        events scheduled for ``step``, advance the logical clock, and beat
+        every live slice the way its active injections allow - a dropped
+        victim stays silent, a hung victim beats WITHOUT progress (the
+        alive-but-wedged signature), everyone else beats at ``step``.
+        Returns True when a live mesh slice is hung: the world cannot
+        dispatch this iteration (the loop spins on the detector instead of
+        running the step - exactly what a real hang does to its
+        collective partners)."""
+        if not self._liveness:
+            return False
+        for ev in self.chaos.take(step):
+            self.chaos_state.activate(ev, self._now)
+            self.report.events.append(
+                f"{self.unit} {step}: chaos {ev.kind} victim={ev.victim} "
+                f"duration={ev.duration} factor={ev.factor}"
+            )
+        self._now += 1.0
+        live = set(self.world.live_physicals())
+        spares = set(self.world.spares)
+        hung = self.chaos_state.hung(self._now) & live
+        dropped = self.chaos_state.dropped(self._now) & (live | spares)
+        gen = self.control.generation
+        for p in sorted(live | spares):
+            if p in dropped:
+                continue  # the liveness channel is eating this one's beats
+            if p in hung or p in spares:
+                self.control.heartbeat(p, generation=gen)
+            else:
+                self.control.heartbeat(p, progress=float(step), generation=gen)
+        # flap accounting: a soft suspect that cleared before its window
+        # expired was a false positive the detector correctly did NOT
+        # shrink on
+        current = {s.slice_id for s in self.control.suspects()}
+        recovered = self._suspected - current - self.control.reported()
+        for p in sorted(recovered):
+            self.report.flaps += 1
+            self.report.events.append(
+                f"{self.unit} {step}: flap slice={p} recovered before the "
+                "suspicion window expired (no shrink)"
+            )
+        self._suspected = (self._suspected | current) - recovered
+        return bool(hung)
+
+    def _collect_quarantines(self, step: int) -> None:
+        """Surface store-level fail-slow quarantines into the report."""
+        for s in self.ladder:
+            for peer, reason in dict(getattr(s, "quarantined", {}) or {}).items():
+                key = (s.name, peer)
+                if key not in self._known_quarantines:
+                    self._known_quarantines.add(key)
+                    self.report.quarantines.append(
+                        f"{self.unit} {step}: {s.name} peer={peer} ({reason})"
+                    )
 
     # ------------------------------------------------------------------
     # lifecycle pieces
@@ -317,10 +457,35 @@ class FTSession:
         # the recovery window reuses the transfer plane's barrier: any
         # pipelined submit still in flight lands BEFORE on_failure drops
         # dead holders and the restore walk consults the levels (the same
-        # ordering the old synchronous submit gave for free)
-        self.ladder.drain()
+        # ordering the old synchronous submit gave for free). With the
+        # gray-failure layer on, the barrier is BOUNDED by the rung
+        # deadline: a wedged background submit must not eat the recovery
+        # window - the walk restores from what already persisted.
+        drain_timeout = (
+            self.ladder.rung_deadline_s or None if self._liveness else None
+        )
+        if not self.ladder.drain(drain_timeout):
+            self.report.events.append(
+                f"{self.unit} {step}: stager wedged past {drain_timeout}s "
+                "- recovering from already-persisted snapshots"
+            )
+        explicit = self.control.reported()
         self.control.revoke()
         failed = self.control.agree()
+        # suspicion-expired failures (no explicit report): record what the
+        # detector found and how long it took from injection to here
+        for f in sorted(failed - explicit):
+            self.report.failures += 1
+            sus = next(
+                (s for s in self.control.suspects() if s.slice_id == f), None)
+            reason = sus.reason if sus is not None else "silence"
+            self.report.detections.append(
+                f"{'hang' if reason == 'stall' else 'silence'}:{f}")
+            t_inj = self.chaos_state.start_time(f)
+            self.report.detect_latency.append(
+                self._now - t_inj if t_inj is not None else -1.0
+            )
+        self._suspected -= failed
         old_world = self.world
         # spare backfill preserves a lost role only if its state can be
         # re-established: trainers replay deterministically even from a
@@ -404,6 +569,11 @@ class FTSession:
         self._regenerate()
         self.control.shrink_complete(failed)
         self.generation = new_world.generation
+        # survivors re-enter the liveness tables at the CURRENT clock (a
+        # stall aged their last beats; the new window starts now), and any
+        # fail-slow peer the restore walk quarantined is surfaced
+        self._register_liveness(progress=float(step))
+        self._collect_quarantines(step)
         # recovery-window notification (the serving gateway's failover
         # hook): the program sees the repair outcome + replay plan BEFORE
         # replay, so it can requeue in-flight requests from lost roles,
@@ -539,6 +709,7 @@ class FTSession:
         for log in self.logs.values():
             log.applied.update(range(0, plan.start_step))
         self.program.replay_inputs(plan)
+        self._collect_quarantines(step)
         self.report.handler_seconds += time.perf_counter() - t0
         return max(plan.start_step, 0)
 
@@ -563,6 +734,12 @@ class FTSession:
         step = start_step
         while step < steps:
             self.inject(schedule.take(step))
+            # one liveness round per iteration: chaos events activate,
+            # the logical clock ticks, live slices beat. A hung mesh
+            # slice stalls the world (no dispatch this iteration) - the
+            # loop spins on the detector until suspicion expires and
+            # check() raises, exactly like its collective partners would
+            stalled = self._liveness_tick(step)
             try:
                 self.control.check(self.generation)
             except (CommunicatorRevoked, ProcessFailed):
@@ -570,6 +747,9 @@ class FTSession:
                 replay_from = max(plan.start_step, 0)
                 self.report.replayed_steps += max(0, step - replay_from)
                 step = replay_from
+                continue
+            if stalled:
+                self.report.stalled_units += 1
                 continue
 
             t0 = time.perf_counter()

@@ -66,6 +66,12 @@ def main() -> None:
     ap.add_argument("--max-batch-slots", type=int, default=0,
                     help="gateway cap on concurrently decoding slots "
                          "(0 = every (cmp, lane) slot the world offers)")
+    ap.add_argument("--stall-window", type=int, default=0,
+                    help="gateway fail-slow watchdog: a cmp role whose "
+                         "bound slots stop advancing for more than this "
+                         "many serve steps is evicted through the ordinary "
+                         "recovery window and its requests requeued "
+                         "(0 = crash detection only)")
     args = ap.parse_args()
 
     if os.environ.get("_REPRO_REEXEC") != "1":
@@ -150,7 +156,8 @@ def serve_gateway(args, model, failures, max_slots) -> None:
         seed=args.seed,
         slot_granular=True,
     )
-    gw = ServeGateway(eng, max_queue=args.max_queue, max_batch_slots=max_slots)
+    gw = ServeGateway(eng, max_queue=args.max_queue, max_batch_slots=max_slots,
+                      stall_window=args.stall_window or None)
     print(
         f"gateway serving {model.name}: {eng.world.topo.n_comp} cmp + "
         f"{eng.world.topo.n_rep} rep slices + {len(eng.world.spares)} spares, "

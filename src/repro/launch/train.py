@@ -84,6 +84,21 @@ def main() -> None:
     ap.add_argument("--sdc-tol", type=float, default=0.0,
                     help="digest comparison tolerance (0.0: mirrored pairs "
                          "are bit-identical, any difference is corruption)")
+    ap.add_argument("--chaos", default="",
+                    help="comma list of step:kind:victim[:duration[:factor]] "
+                         "gray-failure injections (kind hang|slow|drop|flap; "
+                         "duration/factor on the liveness clock, 'inf' ok); "
+                         "needs --suspicion-window")
+    ap.add_argument("--suspicion-window", type=float, default=0.0,
+                    help="turn the liveness detector ON: heartbeats carry "
+                         "dispatch progress, and a slice silent or stalled "
+                         "longer than this many loop iterations is treated "
+                         "as failed (0 = report-driven detection only)")
+    ap.add_argument("--rung-deadline", type=float, default=0.0,
+                    help="per-rung restore budget in seconds: a stalled or "
+                         "fail-slow store gather is quarantined/abandoned "
+                         "within this budget and the recovery ladder falls "
+                         "to the next level (0 = unbounded)")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N fake host devices (subprocess re-exec)")
     args = ap.parse_args()
@@ -98,7 +113,7 @@ def main() -> None:
     import jax  # noqa: E402  (after XLA_FLAGS)
 
     from repro.configs.registry import get_arch, smoke_config
-    from repro.core.fault_injector import SDCSchedule
+    from repro.core.fault_injector import ChaosSchedule, SDCSchedule
     from repro.core.simulator import SimCluster
     from repro.ft import FailureSchedule
 
@@ -106,6 +121,10 @@ def main() -> None:
     failures = FailureSchedule.parse(args.inject_failure)
     sdc = SDCSchedule.parse(args.sdc_inject)
     sdc_check = args.sdc_check or bool(sdc)
+    chaos = ChaosSchedule.parse(args.chaos)
+    if chaos and args.suspicion_window <= 0:
+        ap.error("--chaos needs --suspicion-window > 0 (the liveness "
+                 "detector is what catches gray failures)")
 
     sim = SimCluster(
         model,
@@ -132,6 +151,8 @@ def main() -> None:
         sdc_inject=bool(sdc),
         sdc_tol=args.sdc_tol,
         sdc_seed=args.seed,
+        suspicion_window=args.suspicion_window,
+        rung_deadline_s=args.rung_deadline,
     )
     print(
         f"world: {sim.world.topo.n_comp} computational + {sim.world.topo.n_rep} "
@@ -144,8 +165,13 @@ def main() -> None:
     if sdc_check:
         print(f"scrub: sdc_check on (tol={args.sdc_tol:g}), "
               f"{sdc.pending() if sdc else 0} injection(s) scheduled")
+    if args.suspicion_window > 0:
+        print(f"liveness: suspicion_window={args.suspicion_window:g} "
+              f"rung_deadline={args.rung_deadline:g}s, "
+              f"{chaos.pending() if chaos else 0} chaos injection(s) scheduled")
     t0 = time.time()
-    report = sim.run(args.steps, failures=failures, sdc=sdc or None)
+    report = sim.run(args.steps, failures=failures, sdc=sdc or None,
+                     chaos=chaos or None)
     dt = time.time() - t0
     for i, loss in enumerate(report.losses):
         if i % 10 == 0 or i == len(report.losses) - 1:
@@ -156,6 +182,11 @@ def main() -> None:
         print("RESTORED:", src)
     for h in report.heals:
         print("HEALED:", h)
+    for i, det in enumerate(report.detections):
+        lat = report.detect_latency[i] if i < len(report.detect_latency) else -1
+        print(f"DETECTED: {det} latency={lat:g}")
+    for q in report.quarantines:
+        print("QUARANTINED:", q)
     print(
         f"done: {report.steps_completed} steps in {dt:.1f}s "
         f"(app {report.app_seconds:.1f}s, error-handler {report.handler_seconds:.1f}s) "
@@ -164,6 +195,12 @@ def main() -> None:
         f"healed={report.healed_replicas} exposure={report.exposure_steps} "
         f"final_rdegree={sim.world.topo.rdegree:.2f}"
     )
+    if args.suspicion_window > 0:
+        print(
+            f"liveness: detections={len(report.detections)} "
+            f"stalled_units={report.stalled_units} flaps={report.flaps} "
+            f"quarantines={len(report.quarantines)}"
+        )
     if sdc_check:
         print(
             f"scrub: detected={report.sdc_detected} "

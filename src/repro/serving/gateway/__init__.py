@@ -21,7 +21,7 @@ from repro.serving.gateway.queue import (
     Request,
     RequestStream,
 )
-from repro.serving.gateway.registry import Worker, WorkerRegistry
+from repro.serving.gateway.registry import StallSentinel, Worker, WorkerRegistry
 
 __all__ = [
     "AdmissionQueue",
@@ -30,6 +30,7 @@ __all__ = [
     "Request",
     "RequestStream",
     "ServeGateway",
+    "StallSentinel",
     "Worker",
     "WorkerRegistry",
     "validate_bounds",

@@ -41,7 +41,7 @@ from repro.serving.gateway.queue import (
     Request,
     RequestStream,
 )
-from repro.serving.gateway.registry import WorkerRegistry
+from repro.serving.gateway.registry import StallSentinel, WorkerRegistry
 
 
 def validate_bounds(max_queue: int, max_batch_slots: Optional[int]) -> None:
@@ -62,6 +62,7 @@ class GatewayStats:
     completed: int = 0
     requeues: int = 0
     recoveries: int = 0
+    stall_evictions: int = 0
 
 
 class ServeGateway(ResilientProgram):
@@ -76,6 +77,7 @@ class ServeGateway(ResilientProgram):
         max_queue: int = 64,
         max_batch_slots: Optional[int] = None,
         verify_replay: bool = True,
+        stall_window: Optional[int] = None,
     ):
         validate_bounds(max_queue, max_batch_slots)
         assert engine.slot_granular, (
@@ -99,6 +101,12 @@ class ServeGateway(ResilientProgram):
             engine, self.registry, max_slots=max_batch_slots,
             verify_replay=verify_replay,
         )
+        #: fail-slow eviction: a cmp role whose bound slots stop advancing
+        #: for > stall_window serve steps is reported to the control plane
+        #: as failed - the SAME recovery window that handles crashes then
+        #: requeues its requests (deadline-bounded failover for gray
+        #: workers). None = crash-detection only.
+        self.sentinel = StallSentinel(stall_window) if stall_window else None
         self.stats = GatewayStats()
         self.streams: Dict[int, RequestStream] = {}
         self._next_rid = 0
@@ -190,7 +198,25 @@ class ServeGateway(ResilientProgram):
         out = self.engine.step_slots(fed)
         finished = self.batcher.consume(out, t)
         self.stats.completed += len(finished)
+        if self.sentinel is not None:
+            self._observe_stalls()
         self.registry.check()
+
+    def _observe_stalls(self) -> None:
+        """One stall observation per serve step: max ``fed`` per bound cmp
+        role. A role the sentinel convicts is reported to the control
+        plane as its PHYSICAL slice - ``session.run``'s next dispatch
+        guard then opens the ordinary recovery window (repack, requeue,
+        spare backfill), evicting the slow worker exactly like a dead
+        one."""
+        progress: Dict[int, int] = {}
+        for st in self.batcher.states.values():
+            role = st.slot[0]
+            progress[role] = max(progress.get(role, -1), st.fed)
+        for role in self.sentinel.observe(progress):
+            phys = self.engine.world.assignment[role]
+            self.session.control.report_failure(phys)
+            self.stats.stall_evictions += 1
 
     def snapshot(self):
         """No ladder snapshots: the gateway's recovery currency is the
@@ -250,6 +276,8 @@ class ServeGateway(ResilientProgram):
             self.queue.requeue(req)
         self.stats.requeues += len(victims)
         self.stats.recoveries += 1
+        if self.sentinel is not None:
+            self.sentinel.reset()  # roles renumbered: stall marks are stale
         self.registry.check()
 
     # ---- reporting ---------------------------------------------------------
@@ -267,6 +295,7 @@ class ServeGateway(ResilientProgram):
             "rejected": self.queue.rejected,
             "requeues": self.stats.requeues,
             "recoveries": self.stats.recoveries,
+            "stall_evictions": self.stats.stall_evictions,
             "tokens_decoded": rep.tokens_decoded,
             "requeued_requests": rep.requeued_requests,
             "ttft_p50_steps": float(np.percentile(ttfts, 50)) if ttfts else 0.0,

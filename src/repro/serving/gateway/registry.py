@@ -30,6 +30,52 @@ class Worker:
     kind: str  # "cmp" | "replica" | "spare"
 
 
+class StallSentinel:
+    """Fail-slow watchdog over the decode pool: one observation per serve
+    step maps each cmp role WITH bound slots to a progress mark (the max
+    ``fed`` across its slots). A role whose mark stops advancing for more
+    than ``window`` consecutive observations is stalled - the gray-failure
+    analogue of a crashed worker. The gateway reports it to the control
+    plane so the ordinary recovery/requeue machinery evicts it instead of
+    letting its streams wedge forever.
+
+    Deliberately clock-free (the observation count IS the clock) and pure
+    over its inputs, so the stall policy is unit-testable without a
+    gateway. Roles absent from an observation (no bound slots) are
+    forgotten: an idle role is not a stalled one.
+    """
+
+    def __init__(self, window: int):
+        if window < 1:
+            raise ValueError(f"stall window must be >= 1, got {window}")
+        self.window = int(window)
+        self._marks: Dict[int, Tuple[int, int]] = {}  # role -> (mark, obs last advanced)
+        self._obs = 0
+
+    def observe(self, role_progress: Dict[int, int]) -> List[int]:
+        self._obs += 1
+        stalled: List[int] = []
+        for role, mark in role_progress.items():
+            last = self._marks.get(role)
+            if last is None or mark > last[0]:
+                self._marks[role] = (mark, self._obs)
+            elif self._obs - last[1] > self.window:
+                stalled.append(role)
+                # re-arm: one conviction per elapsed window, not one per
+                # observation (recovery usually intervenes first anyway)
+                self._marks[role] = (mark, self._obs)
+        for role in list(self._marks):
+            if role not in role_progress:
+                del self._marks[role]
+        return sorted(stalled)
+
+    def reset(self) -> None:
+        """Recovery window: the repair renumbered roles, every mark is
+        stale - restart the stall clock for the new world."""
+        self._marks = {}
+        self._obs = 0
+
+
 class WorkerRegistry:
     def __init__(self, lanes: int):
         assert lanes >= 1, lanes

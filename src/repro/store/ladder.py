@@ -27,6 +27,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.store.base import PyTree, StateStore, unflatten_like
 from repro.xfer.chunking import ChunkedBlob, chunk_blob
+from repro.xfer.deadline import Deadline
 from repro.xfer.plane import TransferPlane, capture_tree, stage_tree
 
 
@@ -76,11 +77,17 @@ class PartialRestore:
 
 class RecoveryLadder:
     def __init__(self, stores: Sequence[StateStore],
-                 *, xfer: Optional[TransferPlane] = None):
+                 *, xfer: Optional[TransferPlane] = None,
+                 rung_deadline_s: float = 0.0):
         self.stores: List[StateStore] = sorted(stores, key=lambda s: s.level)
         levels = [s.level for s in self.stores]
         assert len(set(levels)) == len(levels), f"duplicate ladder levels: {levels}"
         self.attempts: List[RestoreAttempt] = []  # last restore's walk
+        #: per-rung restore budget in seconds (0 = unbounded, the
+        #: pre-gray-failure behavior): each rung's load gets its own fresh
+        #: Deadline, so one stalled rung falls through instead of eating
+        #: the whole recovery window
+        self.rung_deadline_s = float(rung_deadline_s)
         # ONE transfer plane per ladder: chunk-consuming levels adopt it so
         # a submit's striping/delta/pipelining config is set in one place
         self.xfer = xfer if xfer is not None else TransferPlane()
@@ -139,14 +146,19 @@ class RecoveryLadder:
             lambda: self.submit(step, captured, meta, levels, _private=True)
         )
 
-    def drain(self) -> None:
+    def drain(self, timeout: Optional[float] = None) -> bool:
         """Barrier: every pipelined submit has executed and every store
         has persisted what it was handed. Reused by ``FTSession.run``'s
         teardown and by the recovery window BEFORE ``on_failure``/restore
-        consult the stores."""
-        self.xfer.drain()
+        consult the stores. A ``timeout`` bounds the stager half of the
+        barrier (the gray-failure guard against a wedged background
+        submit); returns False when submits were still in flight at the
+        timeout - the stores are then drained best-effort and the caller
+        restores from whatever is already persisted."""
+        ok = self.xfer.drain(timeout)
         for s in self.stores:
             s.wait()
+        return ok
 
     def wait(self) -> None:
         self.drain()
@@ -164,19 +176,35 @@ class RecoveryLadder:
     def restore(self, template: PyTree, step: Optional[int] = None
                 ) -> Optional[LadderRestore]:
         """First recoverable snapshot, cheapest level first. ``None`` means
-        every rung came up empty (the caller's fresh-init of last resort)."""
+        every rung came up empty (the caller's fresh-init of last resort).
+
+        With ``rung_deadline_s`` set, each rung's load is armed with a
+        fresh :class:`~repro.xfer.Deadline` (stores that accept one via
+        ``set_deadline``): a stalled or fail-slow gather surfaces as a
+        DeadlineExceeded on that rung - caught here like any torn rung -
+        and the walk falls through to the next level within the budget
+        instead of wedging the recovery window."""
         self.attempts = []
         for s in self.stores:
             t0 = time.perf_counter()
+            set_dl = getattr(s, "set_deadline", None)
+            if set_dl is not None and self.rung_deadline_s > 0:
+                set_dl(Deadline(self.rung_deadline_s))
+            if hasattr(s, "last_restore_info"):
+                s.last_restore_info = ""  # don't report a stale detail
             try:
                 got = s.load(template, step=step)
                 err = ""
             except Exception as e:  # a torn rung must not mask deeper ones
                 got, err = None, f"{type(e).__name__}: {e}"
+            finally:
+                if set_dl is not None:
+                    set_dl(None)
             dt = time.perf_counter() - t0
             if got is None:
                 self.attempts.append(RestoreAttempt(
-                    level=s.level, store=s.name, ok=False, seconds=dt, error=err
+                    level=s.level, store=s.name, ok=False, seconds=dt, error=err,
+                    detail=str(getattr(s, "last_restore_info", "") or ""),
                 ))
                 continue
             rstep, state, meta = got

@@ -29,6 +29,7 @@ so a concurrent gather either sees the complete placement or none of it.
 from __future__ import annotations
 
 import threading
+import time
 import zlib
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -36,6 +37,7 @@ import numpy as np
 
 from repro.store.base import PyTree, Restored, StateStore, flatten_with_paths, unflatten_like
 from repro.xfer.chunking import Chunk, ChunkedBlob, stripe_holders
+from repro.xfer.deadline import Deadline, DeadlineExceeded, backoff_delays
 from repro.xfer.plane import TransferPlane
 
 
@@ -44,6 +46,18 @@ def _chunk_crcs(cb: ChunkedBlob) -> List[int]:
     fingerprints a digest-guided partial restore diffs against (the
     in-step fp digests detect and vote; these name the bytes to move)."""
     return [zlib.crc32(c.raw()) for c in cb.chunks]
+
+
+class _SlowHolder(Exception):
+    """Internal: every surviving holder of some chunk is too slow to
+    serve it within the gather's remaining deadline budget. Carries the
+    culprit so ``load`` can quarantine by NAME, then retry against the
+    ring minus the culprit."""
+
+    def __init__(self, peer: int, delay_s: float):
+        super().__init__(f"peer {peer} too slow ({delay_s:.3f}s/chunk)")
+        self.peer = peer
+        self.delay_s = delay_s
 
 
 class PartnerMemoryStore(StateStore):
@@ -75,6 +89,43 @@ class PartnerMemoryStore(StateStore):
         self.name = f"partner[k{redundancy}]"
         #: accounting of the last submit (the xfer benchmarks read these)
         self.last_chunked: Optional[ChunkedBlob] = None
+        #: peer -> reason, for peers evicted as fail-slow (not dead: their
+        #: chunks are purged like a death, but heal re-admission forgives)
+        self.quarantined: Dict[int, str] = {}
+        #: what the last load did beyond the happy path (ladder detail)
+        self.last_restore_info: str = ""
+        # gray-failure plumbing: injected/observed per-peer latency and the
+        # per-rung deadline the RecoveryLadder arms around a restore
+        self._latency = None  # object with read_delay(peer) -> seconds
+        self._deadline: Optional[Deadline] = None
+
+    # ---- gray-failure plumbing ---------------------------------------------
+    def set_latency(self, latency) -> None:
+        """Install a per-peer latency source (``read_delay(peer) ->
+        seconds``) - the chaos plane's fail-slow injection, or a real
+        deployment's observed per-peer fetch ewma."""
+        self._latency = latency
+
+    def set_deadline(self, deadline: Optional[Deadline]) -> None:
+        """Arm/disarm the deadline the next gathers spend against (the
+        RecoveryLadder sets this around a rung's restore)."""
+        self._deadline = deadline
+
+    def quarantine(self, peer: int, reason: str) -> None:
+        """Evict a fail-slow peer from the ring: purge its placements via
+        the same path a death takes (ring-shrink), but record it as
+        quarantined - the peer is alive, and :meth:`register_peers` can
+        re-admit it (heal forgives; the next slow gather re-convicts)."""
+        with self._meta_lock:
+            p = int(peer)
+            self.quarantined[p] = reason
+            # never shrink the ring to zero: a lone slow peer is recorded
+            # (and its gathers keep failing to the next rung) but future
+            # submits still need SOMEWHERE to stripe
+            if p in self._mem and len(self._mem) > 1:
+                self._mem.pop(p, None)
+                self._peer_locks.pop(p, None)
+                self._live = [q for q in self._live if q in self._mem]
 
     # ---- plane plumbing ----------------------------------------------------
     def adopt_plane(self, plane: TransferPlane) -> None:
@@ -178,10 +229,29 @@ class PartnerMemoryStore(StateStore):
         """Newest (or requested) recoverable snapshot. Gathers run without
         the metadata lock, so a concurrent submit/trim can invalidate a
         candidate mid-gather; a failed gather whose manifest entry was
-        REPLACED meanwhile is transient (retried against the fresh
-        manifest), while one whose entry is intact is a genuine chunk loss
-        (a dead holder) and falls through to older candidates."""
-        for _ in range(5):
+        REPLACED meanwhile is transient (retried with exponential backoff
+        against the fresh manifest), while one whose entry is intact is a
+        genuine chunk loss (a dead holder) and falls through to older
+        candidates.
+
+        Gray failures: when a rung deadline is armed (:meth:`set_deadline`)
+        each gather spends chunk-fetch latency against its budget. A chunk
+        whose every holder is too slow to serve within the remaining
+        budget QUARANTINES the slow peer (ring-shrink purge, by name) and
+        retries against the survivors - redundancy K >= 2 then serves from
+        a healthy holder; K = 1 degrades to chunk loss and the ladder
+        falls to the next rung. A hard-blown budget raises
+        :class:`DeadlineExceeded` naming the quarantined culprits."""
+        self.last_restore_info = ""
+        quarantined_now: List[int] = []
+        delays = backoff_delays(5)
+        for attempt in range(5):
+            if self._deadline is not None and self._deadline.exceeded():
+                raise DeadlineExceeded(
+                    f"partner gather blew its deadline "
+                    f"({self._deadline.budget_s:.3f}s) at attempt {attempt}",
+                    culprits=quarantined_now,
+                )
             with self._meta_lock:
                 candidates = (
                     [step] if step is not None
@@ -194,7 +264,27 @@ class PartnerMemoryStore(StateStore):
                 return None
             transient = False
             for cand, entry in entries.items():
-                blob = self._gather(cand, entry)
+                try:
+                    blob = self._gather(cand, entry)
+                except _SlowHolder as slow:
+                    self.quarantine(
+                        slow.peer,
+                        f"fail-slow: {slow.delay_s:.3f}s/chunk vs deadline",
+                    )
+                    if slow.peer in quarantined_now:
+                        # still the only holder after quarantine (the ring
+                        # can't purge its last member): retrying can never
+                        # help and the budget can't pay its latency
+                        raise DeadlineExceeded(
+                            f"sole holder peer {slow.peer} too slow "
+                            f"({slow.delay_s:.3f}s/chunk) for the "
+                            f"{self._deadline.budget_s:.3f}s budget",
+                            culprits=quarantined_now,
+                        ) from None
+                    quarantined_now.append(slow.peer)
+                    self.last_restore_info = f"quarantined:{quarantined_now}"
+                    transient = True
+                    break  # ring changed: re-list candidates and retry
                 if blob is not None:
                     return cand, unflatten_like(template, blob), dict(entry["meta"])
                 with self._meta_lock:
@@ -203,6 +293,8 @@ class PartnerMemoryStore(StateStore):
                 transient = True
             if not transient:
                 return None
+            if attempt < len(delays):
+                time.sleep(delays[attempt])
         return None
 
     def _gather(self, step: int, entry: Dict) -> Optional[Dict[str, np.ndarray]]:
@@ -214,15 +306,22 @@ class PartnerMemoryStore(StateStore):
         manifest entry; every chunk's byte size is validated against the
         entry's layout before reassembly, so a torn gather degrades to
         None (``load`` then retries against the fresh manifest) instead
-        of reconstructing misaligned bytes."""
+        of reconstructing misaligned bytes.
+
+        Holder choice is latency-aware: each chunk is fetched from its
+        healthiest surviving holder, and the injected/observed fetch
+        latency is charged to the armed deadline. A chunk that can ONLY
+        be served slower than the remaining budget raises
+        :class:`_SlowHolder` *before* paying the cost, keeping the
+        unspent budget for the post-quarantine retry."""
         with self._meta_lock:
-            mems = list(self._mem.values())
+            mems = list(self._mem.items())
         total = sum(s.nbytes for s in entry["layout"])
         cb_size = entry["chunk_bytes"]
         chunks: List[Chunk] = []
         raws: List[np.ndarray] = []  # decoded ONCE: validated then reused
         for ci in range(entry["n_chunks"]):
-            part = next((m.get((step, ci)) for m in mems if (step, ci) in m), None)
+            part = self._fetch_chunk(mems, (step, ci))
             if part is None:
                 return None
             raw = part.raw()
@@ -233,6 +332,26 @@ class PartnerMemoryStore(StateStore):
         return ChunkedBlob(
             layout=entry["layout"], chunk_bytes=cb_size, chunks=chunks
         ).to_blob(raws)
+
+    def _fetch_chunk(self, mems: List[Tuple[int, Dict[Tuple[int, int], Chunk]]],
+                     key: Tuple[int, int]) -> Optional[Chunk]:
+        """One chunk from the healthiest holder that fits the budget."""
+        holders = [(p, m[key]) for p, m in mems if key in m]
+        if not holders:
+            return None
+        if self._latency is None:
+            return holders[0][1]
+        costed = sorted(
+            ((self._latency.read_delay(p), p, c) for p, c in holders),
+            key=lambda x: x[0],
+        )
+        delay, peer, chunk = costed[0]
+        if (self._deadline is not None and delay > 0
+                and self._deadline.would_exceed(delay)):
+            raise _SlowHolder(peer, delay)
+        if self._deadline is not None and delay > 0:
+            self._deadline.charge(delay)
+        return chunk
 
     # ---- chunk-addressed reads (repro.scrub digest-guided partial restore) --
     def chunk_manifest(self, step: Optional[int] = None
@@ -260,7 +379,7 @@ class PartnerMemoryStore(StateStore):
         any requested chunk lost every copy."""
         with self._meta_lock:
             entry = self._manifest.get(step)
-            mems = list(self._mem.values())
+            mems = list(self._mem.items())
         if entry is None:
             return None
         total = sum(s.nbytes for s in entry["layout"])
@@ -270,7 +389,17 @@ class PartnerMemoryStore(StateStore):
             ci = int(ci)
             if not 0 <= ci < entry["n_chunks"]:
                 return None
-            part = next((m.get((step, ci)) for m in mems if (step, ci) in m), None)
+            try:
+                part = self._fetch_chunk(mems, (step, ci))
+            except _SlowHolder as slow:
+                # partial restore has a cheap fallback (the full-blob
+                # walk): quarantine the culprit and bail rather than retry
+                self.quarantine(
+                    slow.peer,
+                    f"fail-slow: {slow.delay_s:.3f}s/chunk vs deadline",
+                )
+                self.last_restore_info = f"quarantined:[{slow.peer}]"
+                return None
             if part is None:
                 return None
             raw = part.raw()
@@ -326,6 +455,7 @@ class PartnerMemoryStore(StateStore):
             for p in dead_physicals:
                 self._mem.pop(p, None)
                 self._peer_locks.pop(p, None)
+                self.quarantined.pop(int(p), None)  # dead trumps slow
             self._live = [p for p in self._live if p in self._mem]
 
     # ---- heal plumbing (repro.heal pair re-registration) --------------------
@@ -337,6 +467,7 @@ class PartnerMemoryStore(StateStore):
         with self._meta_lock:
             for p in peers:
                 p = int(p)
+                self.quarantined.pop(p, None)  # re-admission forgives
                 if p not in self._mem:
                     self._mem[p] = {}
                     self._peer_locks[p] = threading.Lock()

@@ -29,6 +29,7 @@ from repro.xfer.delta import (
     payload_from_parts,
     payload_parts,
 )
+from repro.xfer.deadline import Deadline, DeadlineExceeded, backoff_delays
 from repro.xfer.digest import digests_match, tree_digests, verify_tree
 from repro.xfer.plane import (
     DEFAULT_CHUNK_BYTES,
@@ -43,7 +44,10 @@ __all__ = [
     "Chunk",
     "ChunkedBlob",
     "DEFAULT_CHUNK_BYTES",
+    "Deadline",
+    "DeadlineExceeded",
     "DeltaEncoder",
+    "backoff_delays",
     "LeafSpec",
     "TransferPlane",
     "capture_tree",

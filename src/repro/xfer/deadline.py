@@ -1,0 +1,80 @@
+"""Deadline-bounded operations (the GASPI-FT timeout pattern).
+
+Every communication that can hang gets a deadline, and exceeding it is a
+first-class failure signal that feeds the same recovery path as a crash.
+The :class:`Deadline` below tracks a budget in seconds against BOTH real
+elapsed time and *charged* virtual cost: the chaos plane injects per-peer
+latency as virtual seconds (``Deadline.charge``) instead of sleeping, so
+a fail-slow peer deterministically exhausts the budget in tests and
+benchmarks without actually wedging the process running them. On a real
+deployment the real-elapsed half does the same job against genuine slow
+I/O.
+
+``backoff_delays`` is the retry companion: bounded exponential backoff
+for the transient-race path (retry as today), distinct from deadline
+exhaustion (quarantine the culprit, fall to the next rung).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Sequence
+
+
+class DeadlineExceeded(RuntimeError):
+    """An operation blew its budget. ``culprits`` names the peers whose
+    injected/observed latency consumed the budget, when attributable -
+    the quarantine decision needs a name, not just a timeout."""
+
+    def __init__(self, msg: str, culprits: Sequence[int] = ()):
+        super().__init__(msg)
+        self.culprits = list(culprits)
+
+
+class Deadline:
+    """A spend-down budget: ``budget_s`` seconds of (real + charged
+    virtual) time. Strict semantics match the control plane's suspicion
+    windows: exactly-at-budget is NOT exceeded, strictly past it is."""
+
+    def __init__(self, budget_s: float,
+                 clock: Callable[[], float] = time.perf_counter):
+        if not (budget_s > 0):
+            raise ValueError(f"deadline budget must be > 0, got {budget_s}")
+        self.budget_s = float(budget_s)
+        self.clock = clock
+        self._t0 = clock()
+        self._charged = 0.0
+
+    def charge(self, seconds: float) -> None:
+        """Commit virtual cost (injected latency) against the budget."""
+        if seconds < 0:
+            raise ValueError(f"cannot charge negative time: {seconds}")
+        self._charged += seconds
+
+    def elapsed(self) -> float:
+        return (self.clock() - self._t0) + self._charged
+
+    def remaining(self) -> float:
+        return self.budget_s - self.elapsed()
+
+    def exceeded(self) -> bool:
+        return self.elapsed() > self.budget_s
+
+    def would_exceed(self, seconds: float) -> bool:
+        """True if committing ``seconds`` more would blow the budget -
+        lets a gather abort BEFORE 'sleeping' on a slow peer, keeping the
+        uncommitted budget for retries against healthy holders."""
+        return self.elapsed() + seconds > self.budget_s
+
+
+def backoff_delays(attempts: int, base_s: float = 0.001,
+                   factor: float = 2.0, cap_s: float = 0.05) -> List[float]:
+    """Delays to sleep between retries: base, base*factor, ... capped.
+    Length ``attempts - 1`` (no sleep after the last attempt)."""
+    if attempts < 1:
+        raise ValueError(f"attempts must be >= 1, got {attempts}")
+    out = []
+    d = base_s
+    for _ in range(attempts - 1):
+        out.append(min(d, cap_s))
+        d *= factor
+    return out

@@ -27,6 +27,7 @@ step buffers should construct the plane with ``pipeline=False``.
 from __future__ import annotations
 
 import threading
+import time
 from collections import deque
 from typing import Any, Dict, Optional
 
@@ -103,12 +104,26 @@ class AsyncStager:
                 self._worker.start()
             self._cv.notify_all()
 
-    def drain(self) -> None:
-        """Barrier: every enqueued submit has fully executed."""
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Barrier: every enqueued submit has fully executed. With a
+        ``timeout`` the barrier is *bounded* - a wedged background submit
+        (the gray-failure case) returns False after ~timeout seconds
+        instead of blocking the recovery window forever; the caller
+        decides whether a stale snapshot level is survivable. Returns
+        True when fully drained."""
         with self._cv:
-            while self._inflight:
-                self._cv.wait()
+            if timeout is None:
+                while self._inflight:
+                    self._cv.wait()
+            else:
+                t_end = time.monotonic() + timeout
+                while self._inflight:
+                    left = t_end - time.monotonic()
+                    if left <= 0:
+                        return False
+                    self._cv.wait(timeout=left)
             self._raise_locked()
+            return True
 
     @property
     def inflight(self) -> int:
@@ -201,5 +216,5 @@ class TransferPlane:
     def submit_async(self, fn) -> None:
         self.stager.submit(fn)
 
-    def drain(self) -> None:
-        self.stager.drain()
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        return self.stager.drain(timeout)

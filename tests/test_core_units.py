@@ -14,7 +14,7 @@ from repro.core.control_plane import (
     ProcessFailed,
 )
 from repro.core.elastic import rebalance_batch
-from repro.core.fault_injector import FaultInjector
+from repro.core.fault_injector import FaultInjector, SDCEvent, SDCSchedule
 from repro.core.mtti import (
     daly_interval,
     efficiency,
@@ -132,6 +132,36 @@ def test_fault_injector_deterministic():
     a = FaultInjector(8, scale=10, seed=42).schedule(100.0, list(range(8)))
     b = FaultInjector(8, scale=10, seed=42).schedule(100.0, list(range(8)))
     assert a == b and len(a) > 0
+
+
+def test_fault_injector_rejects_degenerate_params():
+    with pytest.raises(ValueError):
+        FaultInjector(8, scale=0.0)
+    with pytest.raises(ValueError):
+        FaultInjector(8, scale=-10.0)
+    with pytest.raises(ValueError):
+        FaultInjector(8, shape=0.0)
+
+
+def test_fault_injector_schedule_bounded_against_spin():
+    """A draw stream that stops advancing time must raise instead of
+    spinning forever (max_events is the loop bound)."""
+    inj = FaultInjector(8, scale=1e-12, shape=0.7, seed=0)
+    with pytest.raises(RuntimeError, match="degenerate fault schedule"):
+        inj.schedule(100.0, list(range(8)), max_events=1000)
+
+
+def test_sdc_schedule_duplicate_step_rejected_both_paths():
+    """One pending corruption per step is the schedule's contract: a
+    duplicate raises from BOTH construction paths (events list and CLI
+    parse) - and survives ``python -O``, unlike the old bare assert."""
+    with pytest.raises(ValueError, match="duplicate SDC event at step 5"):
+        SDCSchedule([SDCEvent(5, 2), SDCEvent(5, 3)])
+    with pytest.raises(ValueError, match="duplicate SDC event at step 5"):
+        SDCSchedule.parse("5:2,5:3")
+    # non-duplicates still construct through both paths
+    assert SDCSchedule([SDCEvent(5, 2), SDCEvent(6, 2)]).pending() == 2
+    assert SDCSchedule.parse("5:2,6:3").pending() == 2
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,582 @@
+"""Gray-failure resilience: suspicion-scoring detection, deadline-bounded
+recovery, chaos injection, and the serving stall sentinel.
+
+Unit tests run in-process on the injectable-clock APIs; the slow tests
+drive full chaos scenarios in subprocesses (the flagship bit-identity
+proofs: a hang and a fail-slow peer are detected by the liveness layer
+alone - no ``report_failure`` - quarantined, and recovered with the
+trajectory bit-identical to failure-free, while a flap never shrinks).
+"""
+import threading
+import time
+import types
+
+import numpy as np
+import pytest
+
+from conftest import run_subprocess
+
+from repro.core.control_plane import (
+    CommunicatorRevoked,
+    ControlPlane,
+    ProcessFailed,
+)
+from repro.core.fault_injector import (
+    ChaosEvent,
+    ChaosLatency,
+    ChaosSchedule,
+    ChaosState,
+)
+from repro.serving.gateway.registry import StallSentinel
+from repro.xfer import Deadline, DeadlineExceeded, backoff_delays
+from repro.xfer.plane import AsyncStager
+
+
+# ---------------------------------------------------------------------------
+# suspicion-scoring detection (hang vs crash, windows, fencing)
+# ---------------------------------------------------------------------------
+
+
+def _plane(window=4.0, **kw):
+    t = [0.0]
+    cp = ControlPlane(heartbeat_timeout=window, clock=lambda: t[0], **kw)
+    return cp, t
+
+
+def test_silence_vs_stall_suspicion_distinguished():
+    """A crashed slice (no beats) reads as silence; a hung slice (beats
+    without progress while the frontier advances) reads as stall."""
+    cp, t = _plane()
+    for s in (0, 1, 2):
+        cp.register(s, progress=0.0)
+    for step in range(1, 8):
+        t[0] = float(step)
+        cp.heartbeat(0, progress=float(step))  # healthy
+        cp.heartbeat(1)                        # hung: beats, no progress
+        # slice 2: crashed - no beats at all
+    sus = {s.slice_id: s for s in cp.suspects()}
+    assert sus[1].reason == "stall" and sus[1].stalled_for == 7.0
+    assert sus[2].reason == "silence" and sus[2].silent_for == 7.0
+    assert 0 not in sus
+    assert cp.detect() == {1, 2}
+
+
+def test_frontier_relative_stall_spares_victims():
+    """When the world blocks on one hung member, only the slice BEHIND
+    the progress frontier accrues stall suspicion - the blocked healthy
+    slices (pinned AT the frontier) stay clean, so attribution names the
+    culprit, not its victims."""
+    cp, t = _plane()
+    for s in (0, 1):
+        cp.register(s, progress=0.0)
+    # slice 0 reached step 3 then the world wedged on slice 1; both keep
+    # beating, neither advances further
+    for step in range(1, 4):
+        t[0] = float(step)
+        cp.heartbeat(0, progress=float(step))
+        cp.heartbeat(1, progress=0.0)
+    for step in range(4, 12):
+        t[0] = float(step)
+        cp.heartbeat(0, progress=3.0)
+        cp.heartbeat(1, progress=0.0)
+    assert cp.detect() == {1}
+    sus = {s.slice_id for s in cp.suspects()}
+    assert sus == {1}, "the frontier slice must not be suspected"
+
+
+def test_expiry_boundary_exactly_at_window_is_alive():
+    """Strict-> semantics: silent for EXACTLY the window is still alive;
+    strictly past it is expired (mirrors Deadline.exceeded)."""
+    cp, t = _plane(window=5.0)
+    cp.register(0)
+    t[0] = 5.0
+    assert cp.detect() == set()
+    cp.check(0)  # guard agrees: not failed yet
+    t[0] = 5.0 + 1e-9
+    assert cp.detect() == {0}
+    with pytest.raises(ProcessFailed) as ei:
+        cp.check(0)
+    assert ei.value.failed == {0}
+
+
+def test_check_folds_liveness_expiry_into_guard():
+    """The dispatch guard raises on suspicion expiry WITHOUT any
+    report_failure - the hung-world fix (a pure-timeout conviction)."""
+    cp, t = _plane(window=3.0)
+    cp.register(0, progress=0.0)
+    cp.register(1, progress=0.0)
+    t[0] = 2.0
+    cp.heartbeat(0, progress=2.0)
+    cp.heartbeat(1, progress=2.0)
+    cp.check(0)  # everyone within window
+    t[0] = 6.0
+    cp.heartbeat(0, progress=6.0)  # 1 now silent for 4 > 3
+    with pytest.raises(ProcessFailed) as ei:
+        cp.check(0)
+    assert ei.value.failed == {1}
+    # revocation still outranks the failed set
+    cp.revoke()
+    with pytest.raises(CommunicatorRevoked):
+        cp.check(0)
+
+
+def test_flap_soft_suspect_then_recovery_clears():
+    """A short drop enters the soft-suspect band (score in
+    [suspect_fraction, 1.0)) but resuming beats clears it - the
+    false-positive path costs nothing."""
+    cp, t = _plane(window=6.0, suspect_fraction=0.5)
+    cp.register(0, progress=0.0)
+    cp.register(1, progress=0.0)
+    for step in range(1, 5):  # slice 1 silent for 4 of window 6
+        t[0] = float(step)
+        cp.heartbeat(0, progress=float(step))
+    sus = {s.slice_id: s for s in cp.suspects()}
+    assert 1 in sus and 0.5 <= sus[1].score < 1.0
+    assert cp.detect() == set()  # soft suspect, NOT failed
+    t[0] = 5.0
+    cp.heartbeat(1, progress=5.0)  # the flap ends
+    t[0] = 6.0
+    cp.heartbeat(0, progress=6.0)
+    cp.heartbeat(1, progress=6.0)
+    assert cp.suspects() == []
+    cp.check(0)  # never raised, never shrank
+
+
+def test_zombie_fencing_rejects_stale_generation():
+    """After shrink_complete, a late heartbeat/register stamped at (or
+    before) the generation that shrank the slice out is dropped; only a
+    stamp from a strictly NEWER generation re-admits it."""
+    cp, t = _plane(window=2.0)
+    cp.register(0, generation=0, progress=0.0)
+    cp.register(1, generation=0, progress=0.0)
+    t[0] = 5.0
+    cp.heartbeat(0, progress=5.0, generation=0)
+    assert 1 in cp.detect()
+    gen = cp.revoke()  # the fence generation
+    failed = cp.agree()
+    cp.shrink_complete(failed)
+    assert not cp.heartbeat(1, progress=99.0, generation=0)  # zombie beat
+    assert not cp.register(1, generation=gen)  # a zombie OF the shrink gen
+    assert cp.detect() == set(), "a fenced zombie must not re-enter detect()"
+    assert cp.register(1, generation=gen + 1, progress=6.0)  # re-admitted
+    t[0] = 6.0
+    assert cp.heartbeat(1, progress=6.0, generation=gen + 1)
+
+
+def test_reregister_expired_slice_before_generation_bump():
+    """Regression: a slice that was reported AND liveness-expired, then
+    re-registered with a pre-shrink generation stamp while the recovery
+    window is still open, must not re-enter detect() after the shrink."""
+    cp, t = _plane(window=2.0)
+    cp.register(3, generation=0)
+    t[0] = 10.0  # expired
+    cp.report_failure(3)  # also explicitly reported
+    assert cp.detect() == {3}
+    cp.revoke()
+    failed = cp.agree()
+    cp.shrink_complete(failed)  # fence at the bumped generation
+    # the zombie races its re-register with the old stamp
+    assert not cp.register(3, generation=0)
+    assert cp.detect() == set()
+    cp.check(cp.generation)  # dispatch resumes clean
+
+
+def test_register_and_heartbeat_monotonic_progress():
+    cp, t = _plane(window=100.0)
+    cp.register(0, progress=5.0)
+    t[0] = 1.0
+    cp.heartbeat(0, progress=3.0)  # stale mark: kept, not regressed
+    assert cp._last_progress[0] == 5.0
+    cp.heartbeat(0, progress=7.0)
+    assert cp._last_progress[0] == 7.0
+
+
+# ---------------------------------------------------------------------------
+# chaos plane (injector + state)
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_event_validation():
+    with pytest.raises(ValueError):
+        ChaosEvent(1, "melt", 0)
+    with pytest.raises(ValueError):
+        ChaosEvent(1, "hang", 0, duration=0.0)
+    with pytest.raises(ValueError):
+        ChaosEvent(1, "slow", 0, factor=0.0)
+    e = ChaosEvent(1, "slow", 0, duration=float("inf"), factor=50.0)
+    assert e.factor == 50.0
+
+
+def test_chaos_schedule_parse_take_and_copy():
+    cs = ChaosSchedule.parse("5:hang:2,5:drop:1,10:slow:3:20:50,30:flap:0")
+    assert cs.pending() == 4
+    flap = cs.take(30)[0]
+    assert flap.kind == "flap" and flap.duration == 2.0  # the flap default
+    evs = cs.take(5)
+    assert {e.kind for e in evs} == {"hang", "drop"}
+    assert cs.take(5) == []  # consumed: a replay never re-injects
+    slow = cs.take(10)[0]
+    assert (slow.duration, slow.factor) == (20.0, 50.0)
+    assert not cs
+    # constructor copies: consuming the copy leaves the source intact
+    src = ChaosSchedule.parse("1:hang:0")
+    copy = ChaosSchedule(src)
+    copy.take(1)
+    assert src.pending() == 1 and copy.pending() == 0
+    with pytest.raises(ValueError):
+        ChaosSchedule.parse("5:hang")  # missing victim
+    with pytest.raises(ValueError):
+        ChaosSchedule.parse("5:melt:1")
+
+
+def test_chaos_state_lifecycle_and_latency():
+    st = ChaosState()
+    st.activate(ChaosEvent(0, "hang", 2, duration=3.0), now=10.0)
+    st.activate(ChaosEvent(0, "flap", 1, duration=2.0), now=10.0)
+    st.activate(ChaosEvent(0, "slow", 4, duration=float("inf"), factor=40.0),
+                now=10.0)
+    assert st.hung(11.0) == {2}
+    assert st.dropped(11.0) == {1}  # a flap IS a short drop
+    assert st.slow_factor(4, 11.0) == 40.0
+    assert st.slow_factor(2, 11.0) == 1.0
+    assert st.hung(13.0) == set() and st.dropped(12.5) == set()  # aged out
+    assert st.slow_factor(4, 1e9) == 40.0  # inf never ages out
+    assert st.start_time(2) == 10.0 and st.start_time(9) is None
+    lat = ChaosLatency(st, clock=lambda: 11.0, base_s=0.05)
+    assert lat.read_delay(4) == pytest.approx(2.0)  # 0.05 * 40
+    assert lat.read_delay(2) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# deadlines + backoff (the GASPI-FT timeout pattern)
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_algebra():
+    t = [0.0]
+    dl = Deadline(2.0, clock=lambda: t[0])
+    assert not dl.exceeded() and dl.remaining() == 2.0
+    dl.charge(2.0)
+    assert not dl.exceeded(), "exactly-at-budget is NOT exceeded"
+    assert dl.would_exceed(0.001)
+    dl.charge(0.5)
+    assert dl.exceeded() and dl.remaining() == pytest.approx(-0.5)
+    t[0] = 1.0  # real elapsed time counts too
+    assert dl.elapsed() == pytest.approx(3.5)
+    with pytest.raises(ValueError):
+        dl.charge(-1.0)
+    with pytest.raises(ValueError):
+        Deadline(0.0)
+
+
+def test_deadline_would_exceed_preserves_budget():
+    """would_exceed lets a gather abort BEFORE paying a slow peer's cost:
+    the budget survives for retries against healthy holders."""
+    dl = Deadline(1.0, clock=lambda: 0.0)
+    assert dl.would_exceed(5.0)
+    assert not dl.exceeded()  # nothing was committed
+    assert not dl.would_exceed(0.9)
+    dl.charge(0.9)
+    assert not dl.exceeded()
+
+
+def test_backoff_delays():
+    d = backoff_delays(5, base_s=0.001, factor=2.0, cap_s=0.005)
+    assert d == [0.001, 0.002, 0.004, 0.005]  # capped, len attempts-1
+    assert backoff_delays(1) == []
+    with pytest.raises(ValueError):
+        backoff_delays(0)
+
+
+# ---------------------------------------------------------------------------
+# bounded stager drain (a wedged background submit can't eat the window)
+# ---------------------------------------------------------------------------
+
+
+def test_stager_drain_timeout_returns_false_on_wedged_submit():
+    stager = AsyncStager()
+    release = threading.Event()
+    stager.submit(release.wait)
+    t0 = time.monotonic()
+    assert stager.drain(timeout=0.05) is False
+    assert time.monotonic() - t0 < 5.0
+    release.set()
+    assert stager.drain(timeout=5.0) is True
+    assert stager.drain() is True  # unbounded on an idle stager
+
+
+def test_stager_drain_unbounded_still_raises_submit_errors():
+    stager = AsyncStager()
+
+    def boom():
+        raise RuntimeError("torn submit")
+
+    stager.submit(boom)
+    with pytest.raises(RuntimeError, match="torn submit"):
+        stager.drain()
+
+
+# ---------------------------------------------------------------------------
+# partner-store quarantine + ladder rung deadlines (pure numpy, no jax)
+# ---------------------------------------------------------------------------
+
+
+def _template():
+    return {"w": np.arange(64, dtype=np.float32),
+            "b": np.ones((8,), dtype=np.float32)}
+
+
+class _FixedLatency:
+    def __init__(self, delays):
+        self.delays = delays
+
+    def read_delay(self, peer):
+        return self.delays.get(peer, 0.0)
+
+
+def test_partner_slow_peer_avoided_when_coholders_healthy():
+    """K=2 redundancy: the latency-aware holder pick routes every chunk
+    fetch around the slow peer - L1 serves the restore with ZERO
+    quarantines (quarantine is for peers we cannot route around)."""
+    from repro.store import PartnerMemoryStore
+
+    ps = PartnerMemoryStore(range(4), redundancy=2)
+    ps.submit(3, _template())
+    ps.set_latency(_FixedLatency({1: 5.0}))
+    ps.set_deadline(Deadline(0.5, clock=lambda: 0.0))
+    got = ps.load(_template())
+    ps.set_deadline(None)
+    assert got is not None and got[0] == 3
+    assert ps.quarantined == {}
+    np.testing.assert_array_equal(got[1]["w"], _template()["w"])
+
+
+def test_partner_sole_slow_holder_quarantined():
+    """When the slow peer is the ONLY holder of some chunk, the deadline
+    aborts before paying its cost, the peer is quarantined (purged like a
+    death, but recorded as alive), and the restore step fails - the
+    ladder's next rung takes over."""
+    from repro.store import PartnerMemoryStore
+
+    ps = PartnerMemoryStore(range(2), redundancy=2)  # K=2 over 2 peers:
+    ps.submit(3, _template())                        # peer 1 co-holds all
+    ps.on_failure([0])  # peer 0 dies -> peer 1 becomes the sole holder
+    ps.set_latency(_FixedLatency({1: 5.0}))
+    ps.set_deadline(Deadline(0.5, clock=lambda: 0.0))
+    try:
+        with pytest.raises(DeadlineExceeded) as ei:
+            ps.load(_template())
+    finally:
+        ps.set_deadline(None)
+    assert ei.value.culprits == [1]
+    assert 1 in ps.quarantined and "fail-slow" in ps.quarantined[1]
+    # dead trumps slow; re-admission forgives
+    ps.register_peers([1])
+    assert ps.quarantined == {}
+
+
+def test_ladder_rung_deadline_falls_through_to_next_level():
+    """A stalled L1 gather burns its per-rung budget and the walk falls
+    to L2 within the deadline instead of wedging the recovery window."""
+    import tempfile
+
+    from repro.store import DurableStore, PartnerMemoryStore, RecoveryLadder
+
+    ps = PartnerMemoryStore(range(2), redundancy=2)
+    ladder = RecoveryLadder(
+        [ps, DurableStore(tempfile.mkdtemp())], rung_deadline_s=0.5)
+    ladder.submit(3, _template())
+    ladder.drain()
+    ps.on_failure([0])
+    ps.set_latency(_FixedLatency({1: 5.0}))  # sole holder, 10x the budget
+    got = ladder.restore(_template())
+    assert got is not None and got.level == 2 and got.step == 3
+    np.testing.assert_array_equal(got.state["w"], _template()["w"])
+    l1, l2 = ladder.attempts
+    assert not l1.ok and "DeadlineExceeded" in l1.error
+    assert "quarantined:[1]" in l1.detail
+    assert l2.ok
+    assert 1 in ps.quarantined
+
+
+# ---------------------------------------------------------------------------
+# serving stall sentinel
+# ---------------------------------------------------------------------------
+
+
+def test_stall_sentinel_convicts_frozen_role():
+    sen = StallSentinel(window=2)
+    assert sen.observe({0: 5, 1: 5}) == []
+    assert sen.observe({0: 6, 1: 5}) == []   # 1 frozen for 1 obs
+    assert sen.observe({0: 7, 1: 5}) == []   # frozen for 2 == window: alive
+    assert sen.observe({0: 8, 1: 5}) == [1]  # 3 > window: convicted
+    # conviction re-arms: no re-report until another full window elapses
+    assert sen.observe({0: 9, 1: 5}) == []
+    assert sen.observe({0: 10, 1: 5}) == []
+    assert sen.observe({0: 11, 1: 5}) == [1]
+
+
+def test_stall_sentinel_idle_and_reset():
+    sen = StallSentinel(window=1)
+    sen.observe({0: 3})
+    sen.observe({})      # role 0 released its slots: forgotten, not stalled
+    sen.observe({0: 3})  # re-bound at the same mark: the clock restarts
+    assert sen.observe({0: 3}) == []
+    assert sen.observe({0: 3}) == [0]
+    sen.reset()
+    assert sen.observe({0: 3}) == []  # post-recovery: marks are stale
+    with pytest.raises(ValueError):
+        StallSentinel(0)
+
+
+def test_gateway_observe_stalls_reports_physical_slice():
+    """The gateway wiring: a convicted cmp role is reported to the
+    control plane as its PHYSICAL slice, so the ordinary recovery window
+    (shrink/backfill/requeue) evicts the gray worker."""
+    from repro.serving.gateway.gateway import GatewayStats, ServeGateway
+
+    gw = ServeGateway.__new__(ServeGateway)  # wiring test: skip the ctor
+    gw.sentinel = StallSentinel(window=1)
+    gw.stats = GatewayStats()
+    st0 = types.SimpleNamespace(slot=(0, 0), fed=3)
+    st1 = types.SimpleNamespace(slot=(1, 0), fed=7)
+    gw.batcher = types.SimpleNamespace(states={10: st0, 11: st1})
+    reported = []
+    gw.session = types.SimpleNamespace(
+        control=types.SimpleNamespace(report_failure=reported.append))
+    gw.engine = types.SimpleNamespace(
+        world=types.SimpleNamespace(assignment={0: 4, 1: 6}))
+    for _ in range(3):
+        gw._observe_stalls()
+        st1.fed += 1  # role 1 advances; role 0 is wedged
+    assert reported == [4]
+    assert gw.stats.stall_evictions == 1
+
+
+# ---------------------------------------------------------------------------
+# flagship chaos scenarios (slow, subprocess): detection by liveness alone,
+# recovery bit-identical to failure-free
+# ---------------------------------------------------------------------------
+
+_CHAOS_CHILD = """
+    import jax, numpy as np, tempfile
+    from repro.configs.registry import smoke_config
+    from repro.core.simulator import SimCluster
+    from repro.store import DurableStore, PartnerMemoryStore, RecoveryLadder
+
+    CFG = smoke_config("qwen2.5-3b")
+    STEPS = 6
+    WINDOW = 4.0
+
+    def cluster(stores=None, ckpt_dir=None, rung_deadline=0.0, live=True):
+        return SimCluster(
+            CFG, n_slices=6, model_shards=1, rdegree=1.0, spares=2,
+            heal="eager", seq_len=32, stores=stores,
+            checkpoint_dir=ckpt_dir,
+            checkpoint_every=0 if (stores is None and ckpt_dir is None) else 2,
+            suspicion_window=WINDOW if live else 0.0,
+            rung_deadline_s=rung_deadline,
+        )
+
+    ref = cluster(live=False)
+    ref_rep = ref.run(STEPS)
+    ref_leaves = jax.tree.leaves(ref.params_replica())
+
+    def bitwise(sim, rep, cell):
+        diff = max(
+            float(np.max(np.abs(a - b)))
+            for a, b in zip(ref_leaves, jax.tree.leaves(sim.params_replica()))
+        )
+        assert diff == 0.0, f"{cell}: diverged by {diff}"
+        assert rep.losses[-1] == ref_rep.losses[-1], f"{cell}: loss"
+        assert sim.world.topo.n_comp == ref.world.topo.n_comp, cell
+"""
+
+
+@pytest.mark.slow
+def test_chaos_hang_detected_and_recovered_bitwise():
+    """A hung slice (beating, zero progress, no report_failure) is
+    convicted by the stall detector within the suspicion window, shrunk
+    out through the ordinary promote path, and the trajectory stays
+    bit-identical to failure-free."""
+    out = run_subprocess(_CHAOS_CHILD + """
+    sim = cluster()
+    rep = sim.run(STEPS, chaos="3:hang:3")
+    assert rep.failures == 1 and rep.restarts == 0, (rep.failures, rep.restarts)
+    assert len(rep.detections) == 1 and rep.detections[0].startswith("hang:")
+    assert 0 < rep.detect_latency[0] <= WINDOW + 1, rep.detect_latency
+    assert rep.stalled_units > 0  # the world really did wedge first
+    bitwise(sim, rep, "hang")
+    print("HANG-OK", rep.detections, rep.detect_latency)
+    """, devices=6)
+    assert "HANG-OK" in out
+
+
+@pytest.mark.slow
+def test_chaos_drop_detected_as_silence_bitwise():
+    """A dropped-heartbeat slice is convicted on pure silence (the
+    crash-shaped path) and recovered bit-identically."""
+    out = run_subprocess(_CHAOS_CHILD + """
+    sim = cluster()
+    rep = sim.run(STEPS, chaos="1:drop:2")  # early: silence must outlive
+                                            # the window within STEPS ticks
+    assert rep.failures == 1, rep.failures
+    assert rep.detections == ["silence:2"], rep.detections
+    assert 0 < rep.detect_latency[0] <= WINDOW + 1, rep.detect_latency
+    bitwise(sim, rep, "drop")
+    print("DROP-OK", rep.detections)
+    """, devices=6)
+    assert "DROP-OK" in out
+
+
+@pytest.mark.slow
+def test_chaos_flap_never_shrinks():
+    """A flap (drop shorter than the suspicion window) enters the
+    soft-suspect band and recovers: zero failures, zero shrinks, and the
+    trajectory is untouched."""
+    out = run_subprocess(_CHAOS_CHILD + """
+    sim = cluster()
+    rep = sim.run(STEPS, chaos="2:flap:1:3")
+    assert rep.flaps == 1, rep.flaps
+    assert rep.failures == 0 and rep.restarts == 0 and rep.promotes == 0
+    assert rep.detections == [], rep.detections
+    bitwise(sim, rep, "flap")
+    print("FLAP-OK")
+    """, devices=6)
+    assert "FLAP-OK" in out
+
+
+@pytest.mark.slow
+def test_chaos_fail_slow_peer_routed_around_then_quarantined():
+    """The flagship fail-slow cells. (1) K=2 partner redundancy + a slow
+    peer with healthy co-holders: the latency-aware pick serves L1 with
+    no quarantine. (2) The slow peer left as SOLE holder of a dead
+    pair's chunks: quarantined mid-restore within the rung deadline, L1
+    fails, L2 serves - both bit-identical to failure-free."""
+    out = run_subprocess(_CHAOS_CHILD + """
+    # (1) routed around: kill the mirrored pair {1,3}; peer 5 is slow but
+    # every chunk has a healthy co-holder
+    ps = PartnerMemoryStore(range(6), redundancy=2)
+    sim = cluster(stores=RecoveryLadder([ps], rung_deadline_s=0.5),
+                  rung_deadline=0.5)
+    rep = sim.run(STEPS, failures={3: [1, 3]}, chaos="2:slow:5")
+    assert rep.restored_from and rep.restored_from[0].startswith("L1"), rep.restored_from
+    assert not rep.quarantines, rep.quarantines
+    bitwise(sim, rep, "slow-routed")
+    print("SLOW-ROUTED-OK", rep.restored_from)
+
+    # (2) sole holder: kill {0,2} with peer 1 slow -> peer 1 alone holds
+    # some chunks -> quarantine within the 0.5s rung budget -> L2 serves
+    ps = PartnerMemoryStore(range(6), redundancy=2)
+    ladder = RecoveryLadder(
+        [ps, DurableStore(tempfile.mkdtemp())], rung_deadline_s=0.5)
+    sim = cluster(stores=ladder, rung_deadline=0.5)
+    rep = sim.run(STEPS, failures={3: [0, 2]}, chaos="2:slow:1")
+    assert rep.restored_from and rep.restored_from[0].startswith("L2"), rep.restored_from
+    assert len(rep.quarantines) == 1 and "fail-slow" in rep.quarantines[0], rep.quarantines
+    l1 = ladder.attempts[0]
+    assert not l1.ok and "quarantined:[1]" in l1.detail, ladder.attempts
+    bitwise(sim, rep, "slow-quarantined")
+    print("SLOW-QUARANTINE-OK", rep.quarantines)
+    """, devices=6)
+    assert "SLOW-ROUTED-OK" in out and "SLOW-QUARANTINE-OK" in out
