@@ -19,6 +19,20 @@ The acceptance row ``gateway/speedup`` asserts continuous batching
 completes the workload in no more serve steps than the fixed-batch
 baseline (it should be strictly fewer whenever generation lengths vary).
 
+The ``paging/*`` rows measure the paged decode state (pages ARE the
+transfer chunks) against the dense whole-tree layout at rdegree=0.5:
+
+- ``paging/snapshot-bytes``: bytes actually shipped per cadence tick,
+  paged vs dense - asserts a >=5x reduction AND that a mid-decode kill +
+  snapshot restore on the paged layout stays bit-identical to the dense
+  failure-free oracle;
+- ``paging/capacity``: host bytes the store retains per snapshot - the
+  max-concurrent-requests multiplier at fixed host memory;
+- ``paging/heal-warm``: bytes moved warming a spare-backfilled role
+  (live pages only) vs the dense full-row copy;
+- ``paging/prefix-dedupe``: sealed-page references served per distinct
+  shared prompt-prefix page for a same-prompt cohort.
+
 Usage: ``python benchmarks/serving_bench.py [--tiny]`` - ``--tiny`` is
 the CI smoke shape. Results merge into the repo-root ``BENCH_perf.json``
 under ``suites["serving"]``.
@@ -54,10 +68,10 @@ def workload(gw):
         for i in range(R)
     ]
 
-def mk_gateway():
+def mk_gateway(page_tokens=128):
     eng = ServeEngine(cfg, n_slices=N, model_shards=1, rdegree=0.0,
                       spares=1, heal="eager", max_len=64,
-                      slot_granular=True)
+                      slot_granular=True, page_tokens=page_tokens)
     return ServeGateway(eng, max_queue=2 * R)
 
 def stats(gw, wall):
@@ -115,6 +129,83 @@ assert row0["steps"] <= rowb["steps"], (
 )
 results.append({{"path": "gateway/speedup", "steps_ratio": steps_ratio,
                 "req_s_ratio": row0["req_s"] / max(rowb["req_s"], 1e-9)}})
+
+# --- paged decode state: pages ARE the transfer chunks -----------------------
+# lockstep engines with a snapshot cadence at rdegree=0.5 (2 cmp + 1 rep
+# slices): count the bytes each cadence submit actually moves into the
+# partner store, paged (page_tokens=4) vs dense (page_tokens=0)
+SNAP_T = 10 if TINY else 16
+
+def snap_run(pt, failures=None):
+    eng = ServeEngine(cfg, n_slices=3, model_shards=1, rdegree=0.5,
+                      max_len=64, snapshot_every=2, page_tokens=pt)
+    store = eng.session.ladder.stores[0]
+    acc = {{"moved": 0, "total": 0, "n": 0}}
+    orig = store.submit_blob
+    def counting(step, blob, meta=None):
+        orig(step, blob, meta)
+        cb = store.last_chunked
+        acc["moved"] += cb.moved_bytes
+        acc["total"] += cb.total_bytes
+        acc["n"] += 1
+    store.submit_blob = counting
+    toks = eng.decode(SNAP_T, failures=failures)
+    eng.session.ladder.drain()
+    return eng, toks, acc
+
+e_d, t_d, acc_d = snap_run(0)                        # dense oracle
+e_p, t_p, acc_p = snap_run(4)                        # paged, failure-free
+e_k, t_k, acc_k = snap_run(4, failures={{SNAP_T - 3: [1]}})  # paged + kill
+ids = e_k._streams  # request streams that survived the loss
+bit_identical = bool(
+    np.array_equal(t_p, t_d) and np.array_equal(t_k, t_d[ids])
+)
+assert bit_identical, "paged decode diverged from the dense oracle"
+dense_per_snap = acc_d["moved"] / max(acc_d["n"], 1)
+paged_per_snap = acc_p["moved"] / max(acc_p["n"], 1)
+reduction = dense_per_snap / max(paged_per_snap, 1.0)
+assert reduction >= 5.0, (
+    f"paged snapshots must ship >=5x fewer bytes: {{reduction:.2f}}x "
+    f"({{dense_per_snap:.0f}} vs {{paged_per_snap:.0f}})"
+)
+results.append({{"path": "paging/snapshot-bytes",
+                "dense_bytes_per_snap": dense_per_snap,
+                "paged_bytes_per_snap": paged_per_snap,
+                "reduction": reduction, "bit_identical": bit_identical}})
+
+# host memory the store retains per snapshot = the max-concurrent-
+# requests multiplier at fixed host memory
+dense_host = acc_d["total"] / max(acc_d["n"], 1)
+paged_host = acc_p["total"] / max(acc_p["n"], 1)
+results.append({{"path": "paging/capacity",
+                "dense_snap_host_bytes": dense_host,
+                "paged_snap_host_bytes": paged_host,
+                "max_concurrent_ratio": dense_host / max(paged_host, 1.0)}})
+
+# heal warm-up: gw1's kill + eager heal backfilled a spare; the paged
+# repack warmed its rows by moving live pages only
+ek = gw1.engine
+assert 0 < ek.heal_warm_bytes < ek.heal_warm_bytes_full, (
+    ek.heal_warm_bytes, ek.heal_warm_bytes_full)
+results.append({{"path": "paging/heal-warm",
+                "paged_bytes": ek.heal_warm_bytes,
+                "dense_bytes": ek.heal_warm_bytes_full,
+                "saving_pct": round(100.0 * (1 - ek.heal_warm_bytes
+                                             / ek.heal_warm_bytes_full), 1)}})
+
+# prefix dedupe: a same-prompt cohort shares ONE sealed prompt page per
+# leaf (page_tokens=8 so the 8-token prompt fills a page exactly)
+gwp = mk_gateway(page_tokens=8)
+PROMPT = list(range(11, 19))
+for _ in range(4):
+    gwp.submit(np.asarray(PROMPT), max_new=4)
+t, dedupe = 0, 0.0
+while gwp.pending() and t < 300:
+    gwp.run_step(t); t += 1
+    dedupe = max(dedupe, gwp.summary().get("prefix_dedupe_ratio", 0.0))
+assert dedupe >= 2.0, dedupe
+results.append({{"path": "paging/prefix-dedupe", "ratio": dedupe}})
+
 print("RESULTS_JSON:" + json.dumps(results))
 """
 
@@ -140,6 +231,13 @@ def run(tiny: bool = False):
 def rows(results):
     out = []
     for r in results:
+        if r["path"].startswith("paging/"):
+            extra = " ".join(
+                f"{k}={v:.2f}" if isinstance(v, float) else f"{k}={v}"
+                for k, v in r.items() if k != "path"
+            )
+            out.append((f"serving/{r['path']}", 0.0, extra))
+            continue
         if "steps_ratio" in r:
             extra = (f"steps_ratio={r['steps_ratio']:.2f}x "
                      f"req_s_ratio={r['req_s_ratio']:.2f}x")

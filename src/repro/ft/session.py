@@ -52,6 +52,7 @@ from repro.core.recovery import ReplayPlan, StepLog, StepRecord, replay_plan
 from repro.core.replication import WorldState
 from repro.heal import Healer, HealPolicy
 from repro.store import RecoveryLadder, StateStore
+from repro.xfer.chunking import PagedBlob
 
 PyTree = Any
 
@@ -112,6 +113,9 @@ class FTReport:
     detect_latency: List[float] = field(default_factory=list)
     #: ... and fail-slow peers quarantined out of store rings mid-restore
     quarantines: List[str] = field(default_factory=list)
+    #: cadence ticks whose snapshot was a no-op (paged serving state with
+    #: an empty dirty-page set: nothing decoded since the last submit)
+    snapshots_skipped: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -411,8 +415,15 @@ class FTSession:
             )
 
     def _checkpoint(self, step: int) -> None:
-        snap = self.program.snapshot()
-        if snap is None or not self.ladder:
+        # programs with dirty tracking (the paged serving engine) submit
+        # only what changed - and skip the tick entirely when nothing did
+        dirty = getattr(self.program, "snapshot_dirty", None)
+        snap = dirty() if dirty is not None else self.program.snapshot()
+        if not self.ladder:
+            return
+        if snap is None:
+            if dirty is not None:
+                self.report.snapshots_skipped += 1
             return
         state, meta = snap
         # pipelined: mutable leaves are captured synchronously, the
@@ -423,7 +434,11 @@ class FTSession:
             # the scrub plane digests the same submit (the program narrows
             # the tree to what the in-step scrub tables cover, e.g. params)
             view = getattr(self.program, "scrub_view", None)
-            self.scrub.record_submit(step, view(state) if view else state)
+            narrowed = view(state) if view else state
+            if isinstance(narrowed, PagedBlob):
+                self.scrub.record_pages(step, narrowed)
+            else:
+                self.scrub.record_submit(step, narrowed)
 
     def _restore(self) -> Optional[int]:
         """Walk the recovery ladder (cheapest surviving level first).

@@ -66,6 +66,17 @@ def main() -> None:
     ap.add_argument("--max-batch-slots", type=int, default=0,
                     help="gateway cap on concurrently decoding slots "
                          "(0 = every (cmp, lane) slot the world offers)")
+    ap.add_argument("--page-tokens", type=int, default=128,
+                    help="paged decode state: fixed page extent in tokens "
+                         "per (slot, leaf) - pages ARE the transfer-plane "
+                         "chunks, so snapshots/heals move only dirtied "
+                         "tail pages (must be a positive power of two)")
+    ap.add_argument("--prefix-share", dest="prefix_share",
+                    action="store_true", default=True,
+                    help="share prompt-prefix pages copy-on-write across "
+                         "requests with a common prompt (paged mode only)")
+    ap.add_argument("--no-prefix-share", dest="prefix_share",
+                    action="store_false")
     ap.add_argument("--stall-window", type=int, default=0,
                     help="gateway fail-slow watchdog: a cmp role whose "
                          "bound slots stop advancing for more than this "
@@ -87,14 +98,18 @@ def main() -> None:
     model = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
     failures = FailureSchedule.parse(args.inject_failure)
 
-    if args.gateway:
-        from repro.serving.gateway import ServeGateway, validate_bounds
+    from repro.serving.gateway import validate_bounds
 
+    if args.gateway:
         max_slots = args.max_batch_slots or None
-        validate_bounds(args.max_queue, max_slots)
+        validate_bounds(args.max_queue, max_slots,
+                        page_tokens=args.page_tokens)
         serve_gateway(args, model, failures, max_slots)
         return
 
+    # page_tokens is validated on BOTH paths: the lockstep engine pages
+    # its snapshots too
+    validate_bounds(args.max_queue, None, page_tokens=args.page_tokens)
     eng = ServeEngine(
         model,
         n_slices=args.slices,
@@ -111,6 +126,8 @@ def main() -> None:
         checkpoint_dir=args.checkpoint_dir or None,
         durable_delta=args.durable_delta,
         durable_max_chain=args.durable_max_chain,
+        page_tokens=args.page_tokens,
+        prefix_share=args.prefix_share,
     )
     print(
         f"serving {model.name}: {eng.world.topo.n_comp} cmp + "
@@ -155,6 +172,8 @@ def serve_gateway(args, model, failures, max_slots) -> None:
         max_len=args.max_len,
         seed=args.seed,
         slot_granular=True,
+        page_tokens=args.page_tokens,
+        prefix_share=args.prefix_share,
     )
     gw = ServeGateway(eng, max_queue=args.max_queue, max_batch_slots=max_slots,
                       stall_window=args.stall_window or None)

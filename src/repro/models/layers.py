@@ -514,6 +514,30 @@ def attn_decode_forward(p, x, cache, pos, cfg: ModelConfig, *, is_global: bool,
     return o @ p["wo"], {"k": k_cache, "v": v_cache}
 
 
+def gather_cache_page(arr, batch_axis: int, row: int, t0: Optional[int] = None,
+                      t1: Optional[int] = None):
+    """One request row's cache page: slice row ``row`` out of a stacked
+    cache leaf (dropping the batch axis), optionally bounded to time rows
+    ``[t0, t1)`` on the axis right after it. Works on device arrays (a
+    lazy slice the snapshot's host transfer materialises) and on host
+    ndarrays alike - the paged serving snapshot's read path."""
+    idx = (slice(None),) * batch_axis + (row,)
+    if t0 is not None:
+        idx = idx + (slice(t0, t1),)
+    return arr[idx]
+
+
+def scatter_cache_page(arr, batch_axis: int, row: int, page,
+                       t0: Optional[int] = None, t1: Optional[int] = None):
+    """Inverse of :func:`gather_cache_page` for HOST ndarrays: write a
+    gathered page back into row ``row`` of a dense cache leaf (the paged
+    restore's scatter into a zero-initialised cache)."""
+    idx = (slice(None),) * batch_axis + (row,)
+    if t0 is not None:
+        idx = idx + (slice(t0, t1),)
+    arr[idx] = page
+
+
 def cross_attn_forward(p, x, enc_kv, cfg: ModelConfig):
     """Cross-attention (decoder over encoder output). enc_kv = (k, v)."""
     B, S, _ = x.shape

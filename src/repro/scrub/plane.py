@@ -8,11 +8,13 @@ recovery rolls back to.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+import zlib
+from typing import Any, Dict, Optional
 
 import numpy as np
 
 from repro.scrub.digest import SCRUB_CHUNK_ELEMS, leaf_digest_matrix
+from repro.xfer.chunking import leaf_bytes
 
 PyTree = Any
 
@@ -32,12 +34,27 @@ class ScrubPlane:
         self.tol = float(tol)
         self._ref: Optional[np.ndarray] = None
         self._ref_step: Optional[int] = None
+        self._page_ref: Optional[Dict[str, int]] = None
+        self._page_ref_step: Optional[int] = None
 
     def record_submit(self, step: int, tree: PyTree) -> np.ndarray:
         """Digest the just-submitted state; returns the (n_chunks, 2) rows."""
         ref = np.asarray(leaf_digest_matrix(tree, self.chunk_elems))
         self._ref = ref
         self._ref_step = int(step)
+        return ref
+
+    def record_pages(self, step: int, pages: Dict[str, np.ndarray]
+                     ) -> Dict[str, int]:
+        """Fingerprint a PAGED submit: one crc32 per page key. Paged
+        decode state is compared page-by-page (the page IS the chunk the
+        ladder can splice back), so the reference is keyed, not a
+        positional digest matrix. Keys that leave the page set between
+        submits simply age out of the reference with them."""
+        ref = {k: zlib.crc32(leaf_bytes(np.asarray(v)))
+               for k, v in pages.items()}
+        self._page_ref = ref
+        self._page_ref_step = int(step)
         return ref
 
     @property
@@ -48,6 +65,16 @@ class ScrubPlane:
     def reference_step(self) -> Optional[int]:
         return self._ref_step
 
+    @property
+    def page_reference(self) -> Optional[Dict[str, int]]:
+        return self._page_ref
+
+    @property
+    def page_reference_step(self) -> Optional[int]:
+        return self._page_ref_step
+
     def clear(self) -> None:
         self._ref = None
         self._ref_step = None
+        self._page_ref = None
+        self._page_ref_step = None

@@ -19,14 +19,26 @@ to the last snapshot and re-decodes instead of cold-starting decode
 state; the re-decoded tokens are bit-identical - greedy decode is
 deterministic).
 
+The decode state itself is PAGED by default (``page_tokens`` > 0): the
+dense cache stays the compute layout on device, but everything that
+*moves* - snapshots, partner stripes, durable delta chains, heal warm-up,
+corruption splices - moves at the granularity of fixed-size token pages
+tracked by :class:`~repro.serving.paging.PageTable`. Pages ARE the
+transfer plane's chunks (``xfer.chunk_pages``), so an append-only decode
+ships only its dirtied tail pages per cadence tick, a clean tick ships
+nothing at all, and requests sharing a prompt prefix ship ONE copy of the
+prefix pages. ``page_tokens=0`` keeps the legacy whole-tree snapshot path
+(the benchmarks' dense baseline).
+
 The decode step itself has no cross-slice collectives (the model axis is
 GSPMD-managed), so the data plane stays failure-oblivious, exactly like the
 paper's native-MPI plane.
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,8 +55,11 @@ from repro.dist.sharding import (
 )
 from repro.ft import FailureSchedule, FTReport, FTSession, ResilientProgram
 from repro.models import model as M
+from repro.models.layers import gather_cache_page, scatter_cache_page
+from repro.serving.paging import CacheLeaf, PageTable
 from repro.store import DurableStore, PartnerMemoryStore, RecoveryLadder
-from repro.xfer import TransferPlane
+from repro.xfer import PagedBlob, TransferPlane
+from repro.xfer.chunking import leaf_bytes
 
 
 @dataclass
@@ -86,6 +101,9 @@ class ServeEngine(ResilientProgram):
         durable_delta: str = "none",
         durable_max_chain: int = 4,
         slot_granular: bool = False,
+        page_tokens: int = 128,
+        prefix_share: bool = True,
+        scrub=None,
     ):
         self.model_cfg = model_cfg
         self.repl = ReplicationConfig(rdegree=rdegree)
@@ -98,6 +116,18 @@ class ServeEngine(ResilientProgram):
         self._out: List[np.ndarray] = []
         self._out_streams: List[List[int]] = []
         self.snapshot_every = snapshot_every
+        # paged decode state: the page table tracks slot -> page mapping,
+        # dirty pages since the last submit, and shared prompt-prefix
+        # pages; 0 = legacy dense whole-tree snapshots (bench baseline)
+        self.table: Optional[PageTable] = (
+            PageTable(page_tokens, prefix_share=prefix_share)
+            if page_tokens else None
+        )
+        #: repack accounting: bytes actually copied to warm rows that are
+        #: NEW to the world (backfilled/healed spares) vs what copying the
+        #: full dense rows would have moved - the heal warm-up saving
+        self.heal_warm_bytes = 0
+        self.heal_warm_bytes_full = 0
         # slot-granular decode (the serving gateway's substrate): every
         # (cmp role, lane) slot advances its OWN sequence position, so the
         # continuous batcher can free a slot at EOS and admit the next
@@ -148,6 +178,7 @@ class ServeEngine(ResilientProgram):
             replay="none",
             report=ServeReport(),
             unit="token",
+            scrub=scrub,
         )
         # cmp role -> original request-stream id; shrinks with the world,
         # letting decode() align outputs across elastic transitions
@@ -201,6 +232,21 @@ class ServeEngine(ResilientProgram):
             if self.slot_granular:
                 self.slot_pos = np.zeros(shape, dtype=np.int32)
                 self.slot_active[:] = False  # gateway marks slots on bind
+        if self.table is not None and not self.table.leaves:
+            # derive each leaf's paging geometry ONCE (the leaf set is
+            # fixed for the job's life; only the batch extent shrinks)
+            flat, _ = jax.tree_util.tree_flatten_with_path(self.cache)
+            leaves = []
+            for kp, arr in flat:
+                p = path_str(kp)
+                b_ax = cache_batch_axis(p, arr.ndim)
+                timed = p.split("/")[-1] in ("k", "v") and "cross" not in p
+                smax = int(arr.shape[b_ax + 1]) if timed else None
+                leaves.append(CacheLeaf(
+                    path=p, batch_axis=b_ax, smax=smax,
+                    ring=bool(timed and smax < self.max_len),
+                ))
+            self.table.configure(leaves)
 
     def run_step(self, t: int) -> None:
         fed = self._mirror_tokens(self._cur)
@@ -259,13 +305,19 @@ class ServeEngine(ResilientProgram):
         return out
 
     def reset_slots(self, slots: List[tuple]) -> None:
-        """Zero the cache rows of ``slots`` ((cmp_role, lane) pairs) and
-        rewind their positions to 0 - a freed slot becomes a fresh
-        sequence for the next admitted request. The mirror row of each
-        role's replica is zeroed too (mirrored rows must stay
-        bit-identical, and SSM/conv state is recurrent: masking alone
-        cannot hide a previous occupant's state the way the position mask
-        hides stale KV entries)."""
+        """Free ``slots`` ((cmp_role, lane) pairs): rewind their positions
+        to 0 so a freed slot becomes a fresh sequence for the next admitted
+        request. The mirror row of each role's replica is handled too
+        (mirrored rows must stay bit-identical).
+
+        The dense path zeroes every cache row of the slot. The paged path
+        zeroes ONLY the recurrent block leaves (SSM conv/ssm state, cross
+        K/V): masking alone cannot hide a previous occupant's recurrent
+        state, but it hides stale attention K/V entries exactly (masked
+        scores are position-based and underflow to 0.0 weight in fp32
+        regardless of the stale bytes) - so the attention time leaves stay
+        untouched and the reset is a page-table edit, not a full-tree
+        ``at[idx].set(0)`` rebuild."""
         if not slots:
             return
         pos = self.world.mesh_position()
@@ -278,41 +330,271 @@ class ServeEngine(ResilientProgram):
             if partner is not None:
                 rows.append(pos[self.world.assignment[partner]] * b + lane)
         idx = jnp.asarray(sorted(set(rows)))
+        timed = (
+            {leaf.path for leaf in self.table.leaves if leaf.smax is not None}
+            if self.table is not None else frozenset()
+        )
 
         def zero_rows(kp, arr):
-            axis = cache_batch_axis(path_str(kp), arr.ndim)
+            p = path_str(kp)
+            if p in timed:
+                return arr  # masked exactly; the table edit frees the pages
+            axis = cache_batch_axis(p, arr.ndim)
             moved = jnp.moveaxis(arr, axis, 0)
             return jnp.moveaxis(moved.at[idx].set(0), 0, axis)
 
         self.cache = jax.tree_util.tree_map_with_path(zero_rows, self.cache)
+        if self.table is not None:
+            self.table.reset(slots)
+
+    # ---- paged decode state (pages ARE the transfer chunks) ----------------
+    def _slot_row(self, role: int, lane: int) -> int:
+        pos = self.world.mesh_position()
+        return pos[self.world.assignment[role]] * self.per_slice_batch + lane
+
+    def _mirror_row(self, role: int, lane: int) -> int:
+        partner = self.world.topo.partner_of(role)
+        if partner is None:
+            return -1
+        pos = self.world.mesh_position()
+        return pos[self.world.assignment[partner]] * self.per_slice_batch + lane
+
+    def note_prompt(self, slot: Tuple[int, int], tokens: Sequence[int]) -> None:
+        """Pin the prompt a freshly-bound slot is about to prefill, so the
+        page table can content-address (and share) its prefix pages."""
+        if self.table is not None:
+            self.table.note_prompt(slot[0], slot[1], tokens)
+
+    def _sync_counts(self) -> None:
+        """Mirror the engine's position state into the page table (slot
+        entries exist lazily: lockstep engines never bind slots)."""
+        for role in range(self.world.topo.n_comp):
+            for lane in range(self.per_slice_batch):
+                e = self.table.ensure(role, lane)
+                e.count = (
+                    int(self.slot_pos[role, lane])
+                    if self.slot_granular else self.pos
+                )
+
+    def _cache_by_path(self) -> Dict[str, object]:
+        flat, _ = jax.tree_util.tree_flatten_with_path(self.cache)
+        return {path_str(kp): arr for kp, arr in flat}
+
+    def _gather_pages(self) -> None:
+        """Pull every dirty/missing page off the live cache into the
+        table's sealed host page cache. Only the pages the decode loop
+        actually touched since the last gather move over the host link -
+        the append-only common case is ONE tail page per slot per leaf."""
+        by_path = self._cache_by_path()
+        for e in self.table.slots.values():
+            refs = self.table.dirty_refs(e)
+            if not refs:
+                continue
+            row = self._slot_row(e.role, e.lane)
+            for ref in refs:
+                arr = by_path[ref.leaf.path]
+                page = gather_cache_page(
+                    arr, ref.leaf.batch_axis, row, ref.t0, ref.t1
+                )
+                self.table.pages[ref.key] = np.asarray(page)
+        self.table.mark_gathered()
+
+    def _page_blob(self) -> PagedBlob:
+        blob = PagedBlob()
+        for e in self.table.slots.values():
+            for ref in self.table.slot_pages(e):
+                blob[ref.key] = self.table.pages[ref.key]
+        return blob
+
+    def _paged_meta(self) -> Dict:
+        rows, mrows = {}, {}
+        for role, lane in self.table.slots:
+            rows[(role, lane)] = self._slot_row(role, lane)
+            mrows[(role, lane)] = self._mirror_row(role, lane)
+        n_rows = self.world.topo.n_slices * self.per_slice_batch
+        meta: Dict = {
+            "pos": self.pos,
+            "paged": self.table.to_meta(rows, mrows, n_rows),
+        }
+        if self.slot_granular:
+            meta["slot_pos"] = self.slot_pos.tolist()
+        if self._cur is not None:
+            meta["cur"] = np.asarray(self._cur).tolist()
+        return meta
 
     # ---- decode-state snapshots (the repro.store plane) --------------------
     def snapshot(self):
-        """KV cache + in-flight tokens, submitted to the recovery ladder on
-        the ``snapshot_every`` cadence and used as the restore template.
-        Leaves are handed over as-is (device arrays are immutable, ``_cur``
-        is rebound each step): the store's staging pass makes the one host
-        copy, not us."""
+        """Decode state + in-flight tokens: the restore template and the
+        heal plane's clone source - always the FULL state.
+
+        Paged engines return a :class:`~repro.xfer.PagedBlob` of every
+        live page (replica mirror rows are NOT shipped: the restore
+        re-derives them from the computational rows - the mirror
+        invariant); everything positional rides in ``meta``. Dense
+        engines hand the device tree over as-is: the store's staging pass
+        makes the one host copy, not us."""
         if self.cache is None:
             return None
-        state = {"cache": self.cache}
-        if self._cur is not None:
-            state["cur"] = self._cur
-        meta = {"pos": self.pos}
-        if self.slot_granular:
-            meta["slot_pos"] = self.slot_pos.tolist()
-        return state, meta
+        if self.table is None:
+            state = {"cache": self.cache}
+            if self._cur is not None:
+                state["cur"] = self._cur
+            meta = {"pos": self.pos}
+            if self.slot_granular:
+                meta["slot_pos"] = self.slot_pos.tolist()
+            return state, meta
+        self._sync_counts()
+        self._gather_pages()
+        return self._page_blob(), self._paged_meta()
+
+    def snapshot_dirty(self):
+        """The cadence-path snapshot: ``None`` when NOTHING changed since
+        the last submitted snapshot (an idle gateway between admissions) -
+        the session accounts the skip in ``FTReport.snapshots_skipped``.
+        Otherwise the full live page set; the keyed delta encoder
+        zero-encodes the clean pages, so only dirtied tail pages move."""
+        if self.table is None:
+            return self.snapshot()
+        if self.cache is None:
+            return None
+        self._sync_counts()
+        if self.table.clean():
+            return None
+        self._gather_pages()
+        blob, meta = self._page_blob(), self._paged_meta()
+        self.table.mark_submitted()
+        return blob, meta
 
     def restore(self, state, meta) -> None:
         """Adopt a snapshot (host arrays, pre-failure world layout); the
         following ``repack_state``/``build_step`` re-pack and re-place it
-        onto the shrunk world."""
-        self.cache = state["cache"]
-        if "cur" in state:
-            self._cur = np.asarray(state["cur"])
+        onto the shrunk world.
+
+        A paged snapshot scatters its live pages into a zeroed dense host
+        cache at the rows the submit recorded, re-derives every replica
+        mirror row from its computational row, and rebuilds the page
+        table from the manifest - then invalidates the host page cache so
+        the next snapshot re-gathers from ground truth."""
+        if self.table is None or not isinstance(state, PagedBlob):
+            self.cache = state["cache"]
+            if "cur" in state:
+                self._cur = np.asarray(state["cur"])
+            self.pos = int(meta["pos"])
+            if "slot_pos" in meta:
+                self.slot_pos = np.asarray(meta["slot_pos"], dtype=np.int32)
+            return
+        pm = meta["paged"]
+        enc_len = 64 if self.model_cfg.enc_layers else 0
+        host = jax.tree.map(
+            lambda a: np.zeros(a.shape, np.asarray(a).dtype),
+            M.init_cache(self.model_cfg, int(pm["n_rows"]),
+                         max_len=self.max_len, enc_len=enc_len,
+                         dtype=jnp.float32),
+        )
+        flat, _ = jax.tree_util.tree_flatten_with_path(host)
+        by_path = {path_str(kp): arr for kp, arr in flat}
+        self.table.load_meta(pm)
+        for s in pm["slots"]:
+            e = self.table.slots[(int(s["role"]), int(s["lane"]))]
+            row, mrow = int(s["row"]), int(s["mirror_row"])
+            for ref in self.table.slot_pages(e):
+                page = state.get(ref.key)
+                if page is None:
+                    continue
+                arr = by_path[ref.leaf.path]
+                scatter_cache_page(arr, ref.leaf.batch_axis, row,
+                                   np.asarray(page, dtype=arr.dtype),
+                                   ref.t0, ref.t1)
+            if mrow >= 0:
+                for leaf in self.table.leaves:
+                    arr = by_path[leaf.path]
+                    scatter_cache_page(
+                        arr, leaf.batch_axis, mrow,
+                        gather_cache_page(arr, leaf.batch_axis, row),
+                    )
+        self.cache = host
         self.pos = int(meta["pos"])
         if "slot_pos" in meta:
             self.slot_pos = np.asarray(meta["slot_pos"], dtype=np.int32)
+        if meta.get("cur") is not None:
+            self._cur = np.asarray(meta["cur"], dtype=np.int32)
+
+    # ---- SDC scrubbing at page granularity (repro.scrub) -------------------
+    def scrub_kv(self) -> Optional[Dict]:
+        """One scrub pass over the decode state's SETTLED pages: gather
+        them fresh off the live cache (never trust the host page cache
+        here - it is what a snapshot would ship, not ground truth),
+        compare per-page crc32 against the scrub plane's reference from
+        the last ladder submit, and majority-vote each mismatch 2-of-3
+        with the replica's mirror row as the live second voter:
+
+        - cmp != ref, mirror == ref  -> the cmp row is the victim;
+        - cmp != ref, mirror == cmp  -> the rows agree with each other:
+          the reference is the odd one out - counted transient, no repair;
+        - all three differ           -> no majority: repair (safe choice).
+
+        A confirmed corruption is spliced back through
+        ``ladder.restore_partial`` - the keyed page cut means ONLY the
+        poisoned pages (plus pages the submit had that the live state
+        lost) move; the state rolls back to the submit step and re-decodes
+        bit-identically. Mirror-row divergence without a cmp mismatch is
+        the in-step scrub tables' territory, not this pass's.
+
+        Returns a summary dict, or None without a page reference to
+        compare against."""
+        scrub = self.session.scrub
+        if self.table is None or scrub is None or scrub.page_reference is None:
+            return None
+        ref = scrub.page_reference
+        self._sync_counts()
+        by_path = self._cache_by_path()
+        fresh = PagedBlob()
+        corrupt: List[str] = []
+        transient = 0
+        checked = 0
+        for e in self.table.slots.values():
+            row = self._slot_row(e.role, e.lane)
+            for pref in self.table.settled_refs(e):
+                want = ref.get(pref.key)
+                if want is None:
+                    continue
+                arr = by_path[pref.leaf.path]
+                page = np.asarray(gather_cache_page(
+                    arr, pref.leaf.batch_axis, row, pref.t0, pref.t1))
+                fresh[pref.key] = page
+                checked += 1
+                pcrc = zlib.crc32(leaf_bytes(page))
+                if pcrc == want:
+                    continue
+                mrow = self._mirror_row(e.role, e.lane)
+                if mrow >= 0:
+                    mpage = np.asarray(gather_cache_page(
+                        arr, pref.leaf.batch_axis, mrow, pref.t0, pref.t1))
+                    mcrc = zlib.crc32(leaf_bytes(mpage))
+                    if mcrc != want and mcrc == pcrc:
+                        transient += 1
+                        self.report.sdc_transient += 1
+                        continue
+                corrupt.append(pref.key)
+        out = {"checked": checked, "corrupt": list(corrupt),
+               "transient": transient, "repaired": False, "moved_bytes": 0}
+        if not corrupt:
+            return out
+        self.report.sdc_detected += 1
+        self.report.events.append(
+            f"token {self.pos}: kv scrub flagged {len(corrupt)} page(s)")
+        got = (self.session.ladder.restore_partial(fresh)
+               if self.session.ladder else None)
+        if got is None:
+            return out
+        self.restore(got.state, dict(got.meta))
+        self.build_step(self.session.mesh, self.world)
+        self.report.sdc_repairs += 1
+        self.report.sdc_bytes_moved += got.moved_bytes
+        self.report.sdc_bytes_full += got.total_bytes
+        out.update(repaired=True, moved_bytes=got.moved_bytes,
+                   total_bytes=got.total_bytes, step=got.step)
+        return out
 
     def replay_inputs(self, plan) -> None:
         """Drop output tokens past the replay point - re-decode regenerates
@@ -334,6 +616,13 @@ class ServeEngine(ResilientProgram):
         - a BACKFILLED cmp role takes the restored snapshot's rows for the
           old role it continues (the dead physical's rows are still present
           in the old-layout snapshot).
+
+        Paged engines move ONLY each slot's live pages (time leaves trimmed
+        to the slot's position, masked tails zero-filled) and account what
+        warming the world's NEW rows cost in ``heal_warm_bytes`` vs the
+        dense ``heal_warm_bytes_full``; page keys survive the renumbering
+        (uids travel with their slots), so the next cadence submit still
+        zero-encodes everything the failover did not touch.
         """
         cache_host = jax.tree.map(np.asarray, self.cache)
         old_pos = old_world.mesh_position()
@@ -353,15 +642,28 @@ class ServeEngine(ResilientProgram):
             # backfilled cmp: the restored snapshot's rows for the old role
             return old_pos[old_world.assignment[role_map[r]]]
 
-        def repack(kp, arr):
-            axis = cache_batch_axis(path_str(kp), arr.ndim)
-            rows = [
-                np.take(arr, range(src_row(r) * b, (src_row(r) + 1) * b), axis=axis)
-                for r in new_order
-            ]
-            return np.concatenate(rows, axis=axis)
+        # each surviving cmp role keeps ITS stream (the dead role's row is
+        # dropped wherever it sat, not always at the tail; a backfilled
+        # role continues the old role's stream from the restored snapshot)
+        keep = [
+            self._old_cmp_role(old_world, new_world.assignment[r], role_map.get(r))
+            for r in range(new_world.topo.n_comp)
+        ]
+        if self.table is None:
+            def repack(kp, arr):
+                axis = cache_batch_axis(path_str(kp), arr.ndim)
+                rows = [
+                    np.take(arr, range(src_row(r) * b, (src_row(r) + 1) * b),
+                            axis=axis)
+                    for r in new_order
+                ]
+                return np.concatenate(rows, axis=axis)
 
-        self.cache = jax.tree_util.tree_map_with_path(repack, cache_host)
+            self.cache = jax.tree_util.tree_map_with_path(repack, cache_host)
+        else:
+            self.cache = self._repack_paged(
+                cache_host, new_world, new_order, old_pos, src_row, keep
+            )
         # requeue accounting: only LIVE (unfinished) slots on the lost
         # roles re-enter the queue - a slot whose sequence already hit
         # EOS/max-len has nothing left to requeue (the old
@@ -370,19 +672,76 @@ class ServeEngine(ResilientProgram):
         # unchanged.
         lost = self.session.last_repair.get("lost_cmp", [])
         self.report.requeued_requests += int(self.slot_active[lost].sum())
-        # each surviving cmp role keeps ITS stream (the dead role's row is
-        # dropped wherever it sat, not always at the tail; a backfilled
-        # role continues the old role's stream from the restored snapshot)
-        keep = [
-            self._old_cmp_role(old_world, new_world.assignment[r], role_map.get(r))
-            for r in range(new_world.topo.n_comp)
-        ]
         self._streams = [self._streams[r] for r in keep]
         self.slot_active = self.slot_active[keep]
         if self.slot_pos is not None:
             self.slot_pos = self.slot_pos[keep]
         if self._cur is not None:
             self._cur = np.stack([self._cur[r] for r in keep])
+        if self.table is not None:
+            self.table.remap(keep, b)
+            self.table.invalidate()
+
+    def _repack_paged(self, cache_host, new_world, new_order, old_pos,
+                      src_row, keep):
+        """Build the new-world dense cache by scattering each slot's LIVE
+        pages into zeroed rows: time leaves copy ``[0, min(count, smax))``
+        only (the masked tail is zero-filled - stream-identical), block
+        leaves copy whole. Rows whose physical slice is NEW to the world
+        (a backfilled or healed spare) are the heal warm-up traffic the
+        bench prices: live-page bytes moved vs the full dense rows."""
+        b = self.per_slice_batch
+        topo = new_world.topo
+        new_rows = topo.n_slices * b
+
+        def zero_like(kp, arr):
+            axis = cache_batch_axis(path_str(kp), arr.ndim)
+            shp = list(arr.shape)
+            shp[axis] = new_rows
+            return np.zeros(shp, arr.dtype)
+
+        new_cache = jax.tree_util.tree_map_with_path(zero_like, cache_host)
+        old_flat, _ = jax.tree_util.tree_flatten_with_path(cache_host)
+        old_by = {path_str(kp): arr for kp, arr in old_flat}
+        new_flat, _ = jax.tree_util.tree_flatten_with_path(new_cache)
+        new_by = {path_str(kp): arr for kp, arr in new_flat}
+        for i, r in enumerate(new_order):
+            c = r if r < topo.n_comp else topo.replica_of(r)
+            old_c = keep[c]
+            fresh = new_world.assignment[r] not in old_pos
+            for lane in range(b):
+                count = (
+                    int(self.slot_pos[old_c, lane])
+                    if self.slot_granular else self.pos
+                )
+                srow = src_row(r) * b + lane
+                drow = i * b + lane
+                for leaf in self.table.leaves:
+                    src, dst = old_by[leaf.path], new_by[leaf.path]
+                    row_bytes = (
+                        src.size // src.shape[leaf.batch_axis]
+                    ) * src.dtype.itemsize
+                    if leaf.smax is None:
+                        scatter_cache_page(
+                            dst, leaf.batch_axis, drow,
+                            gather_cache_page(src, leaf.batch_axis, srow),
+                        )
+                        moved = row_bytes
+                    else:
+                        live = min(count, leaf.smax)
+                        moved = 0
+                        if live > 0:
+                            page = gather_cache_page(
+                                src, leaf.batch_axis, srow, 0, live
+                            )
+                            scatter_cache_page(
+                                dst, leaf.batch_axis, drow, page, 0, live
+                            )
+                            moved = page.nbytes
+                    if fresh:
+                        self.heal_warm_bytes += moved
+                        self.heal_warm_bytes_full += row_bytes
+        return new_cache
 
     @staticmethod
     def _old_cmp_role(old_world, phys: int, backfilled_from=None) -> int:

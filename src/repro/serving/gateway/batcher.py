@@ -71,19 +71,26 @@ class ContinuousBatcher:
         Returns the rids bound this step."""
         bound: List[int] = []
         free = self.registry.free_slots()
-        fresh: List[Slot] = []
+        fresh: List[Tuple[Slot, Request]] = []
         while queue and free and self._slot_budget() > 0:
             req = queue.pop()
             slot = free.pop(0)
             self.registry.bind(slot, req.rid)
             self.states[req.rid] = SlotState(req=req, slot=slot, bound_step=step)
             req.arrivals.append(step)
-            fresh.append(slot)
+            fresh.append((slot, req))
             bound.append(req.rid)
         if fresh:
-            self.engine.reset_slots(fresh)
-            for slot in fresh:
+            self.engine.reset_slots([s for s, _ in fresh])
+            note = getattr(self.engine, "note_prompt", None)
+            for slot, req in fresh:
                 self.engine.slot_active[slot] = True
+                if note is not None:
+                    # pin the request's full prefix (prompt + pinned
+                    # replay tokens from a previous incarnation) so the
+                    # paged engine can content-address the prefix pages
+                    # and share them across same-prefix requests
+                    note(slot, req.prefix)
             self.refills += len(fresh)
         return bound
 

@@ -44,15 +44,30 @@ from repro.serving.gateway.queue import (
 from repro.serving.gateway.registry import StallSentinel, WorkerRegistry
 
 
-def validate_bounds(max_queue: int, max_batch_slots: Optional[int]) -> None:
+def validate_bounds(max_queue: int, max_batch_slots: Optional[int],
+                    page_tokens: Optional[int] = None) -> None:
     """Reject nonsensical gateway bounds loudly (zero/negative queues or
-    slot caps would deadlock admission or the batcher)."""
+    slot caps would deadlock admission or the batcher; a bad page size
+    would corrupt the slot->page mapping far from the flag that set it).
+    ``page_tokens`` must be a positive power of two (page extents must
+    tile the ring capacities evenly); the dense legacy layout is an
+    engine-API baseline (``ServeEngine(page_tokens=0)`` - the bench
+    oracle), not a CLI mode."""
     if max_queue < 1:
         raise ValueError(f"--max-queue must be >= 1, got {max_queue}")
     if max_batch_slots is not None and max_batch_slots < 1:
         raise ValueError(
             f"--max-batch-slots must be >= 1 (or unset), got {max_batch_slots}"
         )
+    if page_tokens is not None:
+        if page_tokens < 1:
+            raise ValueError(
+                f"--page-tokens must be >= 1, got {page_tokens}"
+            )
+        if page_tokens & (page_tokens - 1):
+            raise ValueError(
+                f"--page-tokens must be a power of two, got {page_tokens}"
+            )
 
 
 @dataclass
@@ -300,4 +315,33 @@ class ServeGateway(ResilientProgram):
             "requeued_requests": rep.requeued_requests,
             "ttft_p50_steps": float(np.percentile(ttfts, 50)) if ttfts else 0.0,
             "ttft_p99_steps": float(np.percentile(ttfts, 99)) if ttfts else 0.0,
+            **self._page_stats(),
+        }
+
+    def _page_stats(self) -> Dict[str, float]:
+        """Paged-state occupancy of the live pool (empty for dense
+        engines): how many pages the bound slots reference, how many of
+        those are shared prompt-prefix pages, and the dedupe ratio
+        (references served per distinct shared page)."""
+        table = getattr(self.engine, "table", None)
+        if table is None:
+            return {}
+        # a gateway without a snapshot ladder never gathers pages, so pull
+        # the live slot positions (and claim shareable prefix pages) here -
+        # idempotent, and exactly what a snapshot gather would have done
+        sync = getattr(self.engine, "_sync_counts", None)
+        if sync is not None:
+            sync()
+        total = shared = 0
+        for e in table.slots.values():
+            table._refresh_sharing(e)
+            for ref in table.slot_pages(e):
+                total += 1
+                shared += bool(ref.shared)
+        distinct = len(table.refs)
+        return {
+            "pages_live": total,
+            "pages_shared_refs": shared,
+            "pages_shared_distinct": distinct,
+            "prefix_dedupe_ratio": (shared / distinct) if distinct else 0.0,
         }

@@ -1,0 +1,434 @@
+"""Paged decode state: the serving KV cache as a table of token pages.
+
+The dense serving cache ships whole per-role blobs every ``snapshot_every``
+tick; this module re-layouts the decode state the way the paper's Sec. V
+splits messages - into fixed-size parts that move independently - and
+makes the parts *literally* the transfer plane's chunks. Every ``(slot,
+leaf-group)`` pair owns a run of fixed-size token pages (``page_tokens``
+positions each); the :class:`PageTable` tracks which pages exist, which
+are dirty since the last submit, and which are shared:
+
+- **append-only decode dirties only the tail page**: a step writes one
+  position per active slot, so between cadence ticks only the page(s)
+  covering ``[snap_count, count)`` change - everything else zero-encodes
+  by key in ``xfer.delta`` and ships nothing (ReStore sub-blocking at the
+  granularity where it actually pays);
+- **windowed (ring) caches page over ring rows**: a leaf whose time
+  capacity is the attention window wraps its writes (``pos % Smax``), so
+  pages cover ring rows and the dirty set follows the modular write
+  window - the same table, no special case downstream;
+- **reset is a table edit**: freeing a slot drops its pages from the
+  table and bumps the slot's owner uid - no full-tree ``at[].set(0)``
+  rebuild (recurrent SSM/conv block leaves still zero on device: masking
+  cannot hide a previous occupant's recurrent state);
+- **prompt-prefix pages are shared**: pages that lie entirely inside a
+  request's prompt are content-addressed by the token prefix that
+  produced them (causal attention: K/V at position t depends only on
+  tokens <= t), so concurrent requests with a common prompt prefix submit
+  ONE copy. Shared pages are sealed by construction (non-ring leaves
+  never rewrite a position) and refcounted across slots.
+
+Page keys are the stable chunk identities the keyed delta encoder and the
+durable chain anchors match on::
+
+    {leaf_path}##u{uid}#p{idx}     private page of a slot (owner uid)
+    {leaf_path}##h{prefix_hash}#p{idx}   shared prompt-prefix page
+    {leaf_path}##u{uid}#blk        a slot's whole non-time block (SSM/cross)
+
+The table also keeps the HOST page cache (``pages``): sealed host copies
+the engine gathered from device. Entries are immutable once stored (dirty
+pages are *rebound* to fresh gathers, never mutated in place), which is
+the contract that lets ``xfer.plane`` stage a :class:`~repro.xfer.PagedBlob`
+by reference instead of copying the whole state every tick.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class CacheLeaf:
+    """One cache leaf's paging geometry. ``smax`` is the time capacity
+    (None for block leaves without a token axis - SSM conv/state, cross
+    K/V); ``ring`` marks windowed leaves whose writes wrap at ``smax``."""
+
+    path: str
+    batch_axis: int
+    smax: Optional[int]
+    ring: bool
+
+
+@dataclass(frozen=True)
+class PageRef:
+    """One page of one slot: where it lives in the dense layout and what
+    key it submits under. ``t0``/``t1`` bound the time slice (None for
+    block pages); ``shared`` marks content-addressed prompt-prefix pages."""
+
+    key: str
+    leaf: CacheLeaf
+    index: int
+    t0: Optional[int]
+    t1: Optional[int]
+    shared: bool
+
+
+@dataclass
+class SlotEntry:
+    role: int
+    lane: int
+    uid: int
+    count: int = 0
+    #: host-page-cache freshness: what the last GATHER saw (dirty tracking)
+    snap_count: int = 0
+    snap_uid: int = -1
+    #: ladder freshness: what the last SUBMIT shipped (settled tracking -
+    #: the scrub plane may only compare pages the reference actually covers)
+    sub_count: int = 0
+    sub_uid: int = -1
+    prompt_len: int = 0
+    #: page index -> prefix hash, for pages shared across same-prompt slots
+    shared: Dict[int, str] = field(default_factory=dict)
+    #: prompt tokens (int list) while known; a restore rebuilds entries
+    #: from meta without them (the recorded ``shared`` hashes keep existing
+    #: shared keys stable; new pages simply stay private)
+    prompt: Optional[List[int]] = None
+
+
+def dirty_page_indices(c0: int, c1: int, smax: int, page: int) -> Set[int]:
+    """Pages whose rows were written advancing a slot from ``c0`` to
+    ``c1`` tokens in a ring of capacity ``smax``. For non-ring leaves
+    (``smax`` >= any count) this is just the tail page(s); a wrap marks
+    the modular write window; advancing a full ring marks every page."""
+    if c1 <= c0:
+        return set()
+    if c1 - c0 >= smax:
+        live_end = min(c1, smax)
+        return set(range(-(-live_end // page)))
+    a, b = c0 % smax, (c1 - 1) % smax
+    spans = [(a, b)] if a <= b else [(0, b), (a, smax - 1)]
+    out: Set[int] = set()
+    for lo, hi in spans:
+        out.update(range(lo // page, hi // page + 1))
+    return out
+
+
+def prefix_hash(tokens: Sequence[int], n: int) -> str:
+    """Content address of the first ``n`` prompt tokens (the pages they
+    produced are identical across slots - causal attention)."""
+    arr = np.asarray(list(tokens[:n]), dtype=np.int64)
+    return hashlib.sha1(arr.tobytes()).hexdigest()[:16]
+
+
+class PageTable:
+    """Slot -> page mapping + the sealed host page cache."""
+
+    def __init__(self, page_tokens: int, *, prefix_share: bool = True):
+        assert page_tokens > 0 and (page_tokens & (page_tokens - 1)) == 0, (
+            f"page_tokens must be a positive power of two, got {page_tokens}"
+        )
+        self.page_tokens = int(page_tokens)
+        self.prefix_share = bool(prefix_share)
+        self.leaves: List[CacheLeaf] = []
+        self.slots: Dict[Tuple[int, int], SlotEntry] = {}
+        #: sealed host pages, keyed; entries are rebound, never mutated
+        self.pages: Dict[str, np.ndarray] = {}
+        #: shared-page refcounts: how many slots list the key in .shared
+        self.refs: Dict[str, int] = {}
+        self._uid_next = 0
+        self._snap_sig: Optional[Tuple] = None
+
+    # ---- geometry ----------------------------------------------------------
+    def configure(self, leaves: Iterable[CacheLeaf]) -> None:
+        self.leaves = list(leaves)
+
+    # ---- slot lifecycle ----------------------------------------------------
+    def ensure(self, role: int, lane: int) -> SlotEntry:
+        e = self.slots.get((role, lane))
+        if e is None:
+            e = SlotEntry(role=role, lane=lane, uid=self._uid_next)
+            self._uid_next += 1
+            self.slots[(role, lane)] = e
+        return e
+
+    def note_prompt(self, role: int, lane: int, tokens: Sequence[int]) -> None:
+        """Record a freshly-admitted request's prompt so pages fully inside
+        it can be content-addressed and shared."""
+        e = self.ensure(role, lane)
+        e.prompt = [int(t) for t in tokens]
+        e.prompt_len = len(e.prompt)
+
+    def reset(self, slots: Iterable[Tuple[int, int]]) -> None:
+        """Free slots: drop their private pages, release shared refs, bump
+        the owner uid so the next occupant's pages get fresh keys."""
+        for role, lane in slots:
+            e = self.ensure(role, lane)
+            self._drop_entry_pages(e)
+            e.uid = self._uid_next
+            self._uid_next += 1
+            e.count = 0
+            e.snap_count = 0
+            e.snap_uid = -1
+            e.sub_count = 0
+            e.sub_uid = -1
+            e.prompt_len = 0
+            e.prompt = None
+            e.shared = {}
+
+    def _drop_entry_pages(self, e: SlotEntry) -> None:
+        own = f"#u{e.uid}#"
+        for k in [k for k in self.pages if own in k]:
+            del self.pages[k]
+        for p, h in e.shared.items():
+            for leaf in self.leaves:
+                key = self._shared_key(leaf, h, p)
+                n = self.refs.get(key, 0) - 1
+                if n <= 0:
+                    self.refs.pop(key, None)
+                    self.pages.pop(key, None)
+                else:
+                    self.refs[key] = n
+
+    def remap(self, keep: Sequence[int], lanes: int) -> None:
+        """Re-key slots after an elastic repack: new cmp role ``r``
+        continues old role ``keep[r]``'s slots (uids - and therefore page
+        keys - survive the renumbering, so the next submit still
+        zero-encodes everything the failover did not touch). Slots of
+        roles that did not survive drop their pages."""
+        old = dict(self.slots)
+        kept: Dict[Tuple[int, int], SlotEntry] = {}
+        used: Set[Tuple[int, int]] = set()
+        for r, old_r in enumerate(keep):
+            for lane in range(lanes):
+                e = old.get((old_r, lane))
+                if e is not None:
+                    used.add((old_r, lane))
+                    e.role = r
+                    kept[(r, lane)] = e
+        for key, e in old.items():
+            if key not in used:
+                self._drop_entry_pages(e)
+        self.slots = kept
+
+    def invalidate(self) -> None:
+        """Drop every sealed host page and force a full re-gather at the
+        next snapshot: a repack/restore rewrote dense rows underneath the
+        page cache (live bytes unchanged, masked tails zero-filled), so
+        cached copies can no longer stand in for the device truth."""
+        self.pages.clear()
+        self._snap_sig = None
+        for e in self.slots.values():
+            e.snap_count = 0
+            e.snap_uid = -1
+            e.sub_count = 0
+            e.sub_uid = -1
+
+    # ---- keys --------------------------------------------------------------
+    @staticmethod
+    def _shared_key(leaf: CacheLeaf, h: str, index: int) -> str:
+        return f"{leaf.path}##h{h}#p{index}"
+
+    def _page_key(self, leaf: CacheLeaf, e: SlotEntry, index: int) -> Tuple[str, bool]:
+        if (
+            self.prefix_share
+            and not leaf.ring
+            and leaf.smax is not None
+            and index in e.shared
+        ):
+            return self._shared_key(leaf, e.shared[index], index), True
+        return f"{leaf.path}##u{e.uid}#p{index}", False
+
+    # ---- page enumeration --------------------------------------------------
+    def slot_pages(self, e: SlotEntry) -> List[PageRef]:
+        """Every live page of one slot, in layout order."""
+        P = self.page_tokens
+        out: List[PageRef] = []
+        for leaf in self.leaves:
+            if leaf.smax is None:
+                if e.count > 0:
+                    out.append(PageRef(
+                        key=f"{leaf.path}##u{e.uid}#blk", leaf=leaf,
+                        index=0, t0=None, t1=None, shared=False,
+                    ))
+                continue
+            live_end = min(e.count, leaf.smax)
+            for p in range(-(-live_end // P)):
+                key, shared = self._page_key(leaf, e, p)
+                out.append(PageRef(
+                    key=key, leaf=leaf, index=p,
+                    t0=p * P, t1=min((p + 1) * P, leaf.smax), shared=shared,
+                ))
+        return out
+
+    def _refresh_sharing(self, e: SlotEntry) -> None:
+        """(Re)derive which of a slot's page indices are shareable: pages
+        fully inside the prompt, on non-ring leaves. Ref-counted per leaf
+        when first claimed."""
+        if not self.prefix_share or e.prompt is None:
+            return
+        P = self.page_tokens
+        for p in range(e.prompt_len // P):
+            if p in e.shared:
+                continue
+            h = prefix_hash(e.prompt, (p + 1) * P)
+            e.shared[p] = h
+            for leaf in self.leaves:
+                if leaf.smax is not None and not leaf.ring:
+                    key = self._shared_key(leaf, h, p)
+                    self.refs[key] = self.refs.get(key, 0) + 1
+
+    def dirty_refs(self, e: SlotEntry) -> List[PageRef]:
+        """The pages of ``e`` the next snapshot must gather fresh from
+        device: pages written since the last submit, pages of a new owner
+        uid, and pages missing from the host cache (post-invalidate).
+        Sealed shared pages another slot already gathered are skipped."""
+        self._refresh_sharing(e)
+        fresh_owner = e.snap_uid != e.uid
+        out: List[PageRef] = []
+        for ref in self.slot_pages(e):
+            if ref.shared and ref.key in self.pages:
+                continue  # sealed + already gathered (possibly by a twin)
+            if ref.key not in self.pages or fresh_owner:
+                out.append(ref)
+                continue
+            if ref.leaf.smax is None:
+                if e.count != e.snap_count:
+                    out.append(ref)
+                continue
+            dirty = dirty_page_indices(
+                e.snap_count, e.count, ref.leaf.smax, self.page_tokens
+            )
+            if ref.index in dirty:
+                out.append(ref)
+        return out
+
+    # ---- submit bookkeeping ------------------------------------------------
+    def signature(self) -> Tuple:
+        return tuple(sorted(
+            (r, l, e.uid, e.count) for (r, l), e in self.slots.items()
+        ))
+
+    def clean(self) -> bool:
+        """True when the page set and every page's content are unchanged
+        since the last :meth:`mark_submitted` - the cadence-skip test."""
+        return self._snap_sig is not None and self.signature() == self._snap_sig
+
+    def mark_gathered(self) -> None:
+        """The host page cache now mirrors the live state (a snapshot()
+        gather for a restore template or heal - NOT a ladder submit, so
+        the cadence-skip signature is untouched)."""
+        for e in self.slots.values():
+            e.snap_count = e.count
+            e.snap_uid = e.uid
+
+    def mark_submitted(self) -> None:
+        self.mark_gathered()
+        for e in self.slots.values():
+            e.sub_count = e.count
+            e.sub_uid = e.uid
+        self._snap_sig = self.signature()
+
+    def settled_refs(self, e: SlotEntry) -> List[PageRef]:
+        """The pages of ``e`` whose bytes are STABLE since the last ladder
+        submit - the only pages the scrub plane's reference crcs can
+        legitimately be compared against (a page the decode loop has
+        since rewritten differs for honest reasons)."""
+        if e.sub_uid != e.uid:
+            return []
+        out: List[PageRef] = []
+        for ref in self.slot_pages(e):
+            if ref.shared:
+                out.append(ref)  # sealed by construction
+                continue
+            if ref.leaf.smax is None:
+                if e.count == e.sub_count:
+                    out.append(ref)
+                continue
+            dirty = dirty_page_indices(
+                e.sub_count, e.count, ref.leaf.smax, self.page_tokens
+            )
+            if ref.index not in dirty:
+                out.append(ref)
+        return out
+
+    # ---- invariants (the property tests' oracle) ---------------------------
+    def check_invariants(self) -> None:
+        """Slot->page bijection: every private page key belongs to exactly
+        one live slot; shared refcounts match the slots listing them; no
+        orphaned page bytes."""
+        owners: Dict[str, Tuple[int, int]] = {}
+        live_keys: Set[str] = set()
+        want_refs: Dict[str, int] = {}
+        for (r, l), e in self.slots.items():
+            for ref in self.slot_pages(e):
+                if ref.shared:
+                    live_keys.add(ref.key)
+                    continue
+                prev = owners.get(ref.key)
+                assert prev is None or prev == (r, l), (
+                    f"page {ref.key} double-owned by {prev} and {(r, l)}"
+                )
+                owners[ref.key] = (r, l)
+                live_keys.add(ref.key)
+            for p, h in e.shared.items():
+                for leaf in self.leaves:
+                    if leaf.smax is not None and not leaf.ring:
+                        want_refs[self._shared_key(leaf, h, p)] = (
+                            want_refs.get(self._shared_key(leaf, h, p), 0) + 1
+                        )
+        for key, n in self.refs.items():
+            assert want_refs.get(key) == n, (
+                f"refcount drift for {key}: table={n} slots={want_refs.get(key)}"
+            )
+        for key in self.pages:
+            assert key in live_keys or key in self.refs, (
+                f"orphaned page bytes: {key}"
+            )
+
+    # ---- meta (JSON-safe, rides the snapshot manifests) --------------------
+    def to_meta(self, rows: Dict[Tuple[int, int], int],
+                mirror_rows: Dict[Tuple[int, int], int],
+                n_rows: int) -> Dict:
+        return {
+            "page_tokens": self.page_tokens,
+            "n_rows": int(n_rows),
+            "slots": [
+                {
+                    "role": e.role, "lane": e.lane, "uid": e.uid,
+                    "count": e.count, "prompt_len": e.prompt_len,
+                    "row": int(rows[(e.role, e.lane)]),
+                    "mirror_row": int(mirror_rows.get((e.role, e.lane), -1)),
+                    "shared": {str(p): h for p, h in e.shared.items()},
+                }
+                for e in sorted(
+                    self.slots.values(), key=lambda e: (e.role, e.lane)
+                )
+            ],
+        }
+
+    def load_meta(self, meta: Dict) -> None:
+        """Adopt a snapshot's slot table (restore path). Page bytes are NOT
+        adopted here - the engine scatters them into the dense cache and
+        the next snapshot re-gathers (:meth:`invalidate` semantics)."""
+        self.slots = {}
+        self.pages.clear()
+        self.refs.clear()
+        self._snap_sig = None
+        top = 0
+        for s in meta["slots"]:
+            e = SlotEntry(
+                role=int(s["role"]), lane=int(s["lane"]), uid=int(s["uid"]),
+                count=int(s["count"]), prompt_len=int(s["prompt_len"]),
+                shared={int(p): h for p, h in s.get("shared", {}).items()},
+            )
+            self.slots[(e.role, e.lane)] = e
+            top = max(top, e.uid + 1)
+            for p, h in e.shared.items():
+                for leaf in self.leaves:
+                    if leaf.smax is not None and not leaf.ring:
+                        key = self._shared_key(leaf, h, p)
+                        self.refs[key] = self.refs.get(key, 0) + 1
+        self._uid_next = max(self._uid_next, top)

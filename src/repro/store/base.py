@@ -29,6 +29,7 @@ import jax
 import numpy as np
 
 from repro.dist.sharding import path_str
+from repro.xfer.chunking import PagedBlob
 from repro.xfer.plane import stage_tree
 
 PyTree = Any
@@ -46,7 +47,12 @@ def flatten_with_paths(tree: PyTree) -> Dict[str, np.ndarray]:
 
 def unflatten_like(template: PyTree, arrays: Dict[str, np.ndarray]) -> PyTree:
     """Rebuild ``template``'s structure from a path -> array mapping,
-    coercing each leaf to the template's dtype/shape."""
+    coercing each leaf to the template's dtype/shape. A paged template
+    rebuilds as a :class:`PagedBlob` of whatever pages the mapping holds -
+    its page set is data, not structure (a restore may legitimately carry
+    more or fewer pages than the template snapshot did)."""
+    if isinstance(template, PagedBlob):
+        return PagedBlob(arrays)
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for kp, leaf in flat:

@@ -62,6 +62,7 @@ from repro.xfer.chunking import (
     Chunk,
     ChunkedBlob,
     chunk_blob,
+    chunk_pages,
     layout_from_json,
     layout_to_json,
 )
@@ -92,6 +93,11 @@ class DurableStore(StateStore):
         self._plane = xfer
         self._encoder = DeltaEncoder(delta)
         self._anchors: List[Tuple[int, int]] = []  # per chunk: (step, idx)
+        # keyed anchors for the paged cut: page key -> (step, idx in that
+        # step's own cut). A paged layout legitimately drifts every submit
+        # (tail pages appear, freed slots drop) - chains anchor by key so
+        # zero-runs survive the drift that would reset an indexed chain
+        self._anchor_keys: Dict[str, Tuple[int, int]] = {}
         self._chain_len = 0   # dirs a restore of the latest submit reads
         self._last_step: Optional[int] = None
         # set when a drop/trim/GC touches a dir the NEXT submit would
@@ -215,19 +221,28 @@ class DurableStore(StateStore):
             or self._chain_len >= self.max_chain
             or (self._last_step is not None and step <= self._last_step)
         )
+        keyed = cb.keys is not None
         encoded = None
         if force_full:
             self._encoder.observe(cb)
         else:
             encoded = self._encoder.encode(cb)
-            if (
-                len(self._anchors) != encoded.n_chunks
-                or all(c.encoding == "raw" for c in encoded.chunks)
-            ):
+            bad = (
+                all(c.encoding == "raw" for c in encoded.chunks)
+                or (not keyed and len(self._anchors) != encoded.n_chunks)
+                or (keyed and any(
+                    c.encoding != "raw" and encoded.keys[i] not in self._anchor_keys
+                    for i, c in enumerate(encoded.chunks)
+                ))
+            )
+            if bad:
                 encoded = None  # layout changed / nothing compressed: full
 
         if encoded is None:
             self._anchors = [(step, i) for i in range(cb.n_chunks)]
+            self._anchor_keys = (
+                {k: (step, i) for i, k in enumerate(cb.keys)} if keyed else {}
+            )
             self._chain_len = 1
             self._last_step = step
             return self._full_job(step, blob, meta)
@@ -235,13 +250,19 @@ class DurableStore(StateStore):
         records: List[Dict] = []
         payloads: Dict[str, np.ndarray] = {}
         anchors: List[Tuple[int, int]] = []
+        anchor_keys: Dict[str, Tuple[int, int]] = {}
         bases: Set[int] = set()
         payload_bytes = 0
+
+        def prev_anchor(i: int) -> Tuple[int, int]:
+            return (self._anchor_keys[encoded.keys[i]] if keyed
+                    else self._anchors[i])
+
         for i, c in enumerate(encoded.chunks):
             if c.encoding == "zero":
                 # flattened ref: point at the dir where the bytes actually
                 # materialize, so zero runs do not lengthen resolution
-                base = self._anchors[i]
+                base = prev_anchor(i)
                 records.append({"e": "zero", "b": list(base)})
                 anchors.append(base)
                 bases.add(base[0])
@@ -251,7 +272,7 @@ class DurableStore(StateStore):
                 records.append({"e": "raw"})
                 anchors.append((step, i))
             else:  # codec'd fp32 delta against the previous submit's bytes
-                base = self._anchors[i]
+                base = prev_anchor(i)
                 parts, dtypes = payload_parts(c)
                 for j, p in enumerate(parts):
                     payloads[f"c{i}p{j}"] = p
@@ -259,7 +280,10 @@ class DurableStore(StateStore):
                 records.append({"e": c.encoding, "b": list(base), "d": dtypes})
                 anchors.append((step, i))
                 bases.add(base[0])
+            if keyed:
+                anchor_keys[encoded.keys[i]] = anchors[-1]
         self._anchors = anchors
+        self._anchor_keys = anchor_keys
         self._chain_len += 1
         self._last_step = step
         manifest = {
@@ -269,6 +293,7 @@ class DurableStore(StateStore):
             "chunk_bytes": encoded.chunk_bytes,
             "n_chunks": encoded.n_chunks,
             "layout": layout_to_json(encoded.layout),
+            "paged": keyed,
             "chunks": records,
             "bases": sorted(bases),
             "payload_bytes": payload_bytes,
@@ -427,6 +452,11 @@ class DurableStore(StateStore):
         layout = layout_from_json(manifest["layout"])
         chunk_bytes = int(manifest["chunk_bytes"])
         n_chunks = int(manifest["n_chunks"])
+        # a paged chain's base dirs each carry their OWN page set: full
+        # cuts are page cuts of that dir's blob (indices into its sorted
+        # keys, what the submit anchored), never validated against the tip
+        # layout - page tables legitimately drift along the chain
+        paged = bool(manifest.get("paged"))
         dirs: Dict[int, Tuple[Dict, Dict[str, np.ndarray]]] = {}
         full_cuts: Dict[int, List[np.ndarray]] = {}
 
@@ -447,9 +477,12 @@ class DurableStore(StateStore):
 
         def full_cut(s: int) -> List[np.ndarray]:
             if s not in full_cuts:
-                cb = chunk_blob(self._load_full_blob(s), chunk_bytes)
-                if cb.layout != layout:
-                    raise ValueError(f"base step {s} layout drifted")
+                if paged:
+                    cb = chunk_pages(self._load_full_blob(s))
+                else:
+                    cb = chunk_blob(self._load_full_blob(s), chunk_bytes)
+                    if cb.layout != layout:
+                        raise ValueError(f"base step {s} layout drifted")
                 full_cuts[s] = [c.payload for c in cb.chunks]
             return full_cuts[s]
 
@@ -487,7 +520,9 @@ class DurableStore(StateStore):
         raws = [resolve(step, i) for i in range(n_chunks)]
         total = sum(s.nbytes for s in layout)
         for i, raw in enumerate(raws):
-            if raw.nbytes != min(chunk_bytes, total - i * chunk_bytes):
+            want = (layout[i].nbytes if paged
+                    else min(chunk_bytes, total - i * chunk_bytes))
+            if raw.nbytes != want:
                 raise ValueError(f"chunk {i} size drifted")
         blob = ChunkedBlob(layout=layout, chunk_bytes=chunk_bytes).to_blob(raws)
         return blob, len(dirs)
@@ -515,7 +550,7 @@ class DurableStore(StateStore):
         with the dir; a resubmit's atomic rename replaces the dir, marker
         and all), so a crash-restart does not resurrect forgotten steps."""
         self._dropped.add(step)
-        if step == self._last_step or step in {s for s, _ in self._anchors}:
+        if step == self._last_step or step in self._anchor_steps():
             self._chain_broken = True  # forgotten steps never anchor chains
         final = self._final(step)
         if os.path.isdir(final):
@@ -524,6 +559,12 @@ class DurableStore(StateStore):
                     pass
             except OSError:
                 pass
+
+    def _anchor_steps(self) -> Set[int]:
+        """Steps the NEXT delta submit would reference (indexed + keyed)."""
+        steps = {s for s, _ in self._anchors}
+        steps.update(s for s, _ in self._anchor_keys.values())
+        return steps
 
     def _gc_locked(self) -> None:
         self._retain_locked(keep=self.keep)
@@ -551,7 +592,7 @@ class DurableStore(StateStore):
                 continue
             live.add(s)
             frontier.extend(self._bases.get(s, ()))
-        anchor_steps = {s for s, _ in self._anchors}
+        anchor_steps = self._anchor_steps()
         if self._last_step is not None:
             anchor_steps.add(self._last_step)
         for s in disk:

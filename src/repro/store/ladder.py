@@ -25,8 +25,10 @@ import zlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.store.base import PyTree, StateStore, unflatten_like
-from repro.xfer.chunking import ChunkedBlob, chunk_blob
+from repro.xfer.chunking import ChunkedBlob, chunk_blob, leaf_bytes
 from repro.xfer.deadline import Deadline
 from repro.xfer.plane import TransferPlane, capture_tree, stage_tree
 
@@ -244,6 +246,12 @@ class RecoveryLadder:
             if got is None:
                 continue
             mstep, entry = got
+            if entry.get("keys") is not None:
+                got = self._splice_pages(s, load_chunks, blob, mstep, entry,
+                                         current)
+                if got is None:
+                    continue
+                return got
             cb = chunk_blob(blob, entry["chunk_bytes"])
             if (cb.layout != tuple(entry["layout"])
                     or cb.n_chunks != entry["n_chunks"]
@@ -270,3 +278,38 @@ class RecoveryLadder:
                 total_bytes=cb.total_bytes,
             )
         return None
+
+    def _splice_pages(self, s: StateStore, load_chunks, blob, mstep: int,
+                      entry: Dict, current: PyTree
+                      ) -> Optional[PartialRestore]:
+        """The paged half of :meth:`restore_partial`: chunks are pages
+        matched BY KEY, so a poisoned page is named directly and the
+        rebuilt state is the snapshot's own page set - pages the caller's
+        table has that the snapshot lacks simply drop (the snapshot is the
+        authority), and a page the caller lost entirely is just stale."""
+        raws: List[Optional[np.ndarray]] = []
+        stale: List[int] = []
+        for ci, spec in enumerate(entry["layout"]):
+            arr = blob.get(spec.path)
+            b = None if arr is None else leaf_bytes(np.asarray(arr))
+            if (b is None or b.nbytes != spec.nbytes
+                    or zlib.crc32(b) != entry["crcs"][ci]):
+                stale.append(ci)
+                b = None
+            raws.append(b)
+        fetched = load_chunks(mstep, stale)
+        if fetched is None:
+            return None  # a needed page lost every holder: full walk
+        for ci, raw in fetched.items():
+            raws[ci] = raw
+        state = unflatten_like(current, ChunkedBlob(
+            layout=tuple(entry["layout"]), chunk_bytes=entry["chunk_bytes"],
+            keys=entry["keys"],
+        ).to_blob(raws))
+        return PartialRestore(
+            level=s.level, store=s.name, step=mstep, state=state,
+            meta=dict(entry["meta"]), n_chunks=len(entry["layout"]),
+            moved_chunks=len(stale),
+            moved_bytes=sum(r.nbytes for r in fetched.values()),
+            total_bytes=sum(spec.nbytes for spec in entry["layout"]),
+        )

@@ -36,7 +36,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.store.base import PyTree, Restored, StateStore, flatten_with_paths, unflatten_like
-from repro.xfer.chunking import Chunk, ChunkedBlob, stripe_holders
+from repro.xfer.chunking import Chunk, ChunkedBlob, PagedBlob, stripe_holders
 from repro.xfer.deadline import Deadline, DeadlineExceeded, backoff_delays
 from repro.xfer.plane import TransferPlane
 
@@ -186,9 +186,19 @@ class PartnerMemoryStore(StateStore):
             "n_chunks": cb.n_chunks,
             "layout": cb.layout,
             "chunk_bytes": cb.chunk_bytes,
+            "keys": cb.keys,
             "crcs": list(crcs) if crcs is not None else None,
             "meta": meta,
         }
+
+    @staticmethod
+    def _expect_size(entry: Dict, ci: int, total: int) -> int:
+        """Expected raw size of chunk ``ci``: a page's own size for the
+        keyed (paged) cut, else the byte-stream slice."""
+        if entry.get("keys") is not None:
+            return entry["layout"][ci].nbytes
+        cb_size = entry["chunk_bytes"]
+        return min(cb_size, total - ci * cb_size)
 
     def _place_locked(self, step: int, cb: ChunkedBlob, meta: Dict,
                       live: List[int], crcs: Optional[List[int]] = None) -> None:
@@ -325,12 +335,13 @@ class PartnerMemoryStore(StateStore):
             if part is None:
                 return None
             raw = part.raw()
-            if raw.nbytes != min(cb_size, total - ci * cb_size):
+            if raw.nbytes != self._expect_size(entry, ci, total):
                 return None  # chunk from a different (re-chunked) placement
             chunks.append(part)
             raws.append(raw)
         return ChunkedBlob(
-            layout=entry["layout"], chunk_bytes=cb_size, chunks=chunks
+            layout=entry["layout"], chunk_bytes=cb_size, chunks=chunks,
+            keys=entry.get("keys"),
         ).to_blob(raws)
 
     def _fetch_chunk(self, mems: List[Tuple[int, Dict[Tuple[int, int], Chunk]]],
@@ -403,7 +414,7 @@ class PartnerMemoryStore(StateStore):
             if part is None:
                 return None
             raw = part.raw()
-            if raw.nbytes != min(cb_size, total - ci * cb_size):
+            if raw.nbytes != self._expect_size(entry, ci, total):
                 return None
             out[ci] = raw
         return out
@@ -489,6 +500,10 @@ class PartnerMemoryStore(StateStore):
             blob = self._gather(step, entries[step])
             if blob is None:
                 continue
+            if entries[step].get("keys") is not None:
+                # preserve the page cut: a byte-stream re-cut would break
+                # the keyed identity the recorded crcs fingerprint
+                blob = PagedBlob(blob)
             crcs = entries[step].get("crcs")
             if self.coarse_lock:
                 with self._meta_lock:

@@ -15,8 +15,10 @@ from repro.xfer.chunking import (
     Chunk,
     ChunkedBlob,
     LeafSpec,
+    PagedBlob,
     chunk_blob,
     chunk_count,
+    chunk_pages,
     layout_from_json,
     layout_to_json,
     size_for_chunks,
@@ -49,10 +51,12 @@ __all__ = [
     "DeltaEncoder",
     "backoff_delays",
     "LeafSpec",
+    "PagedBlob",
     "TransferPlane",
     "capture_tree",
     "chunk_blob",
     "chunk_count",
+    "chunk_pages",
     "decode_delta",
     "digests_match",
     "encode_delta",

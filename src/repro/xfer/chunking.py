@@ -16,6 +16,15 @@ are the unit of
 
 Chunks that fall inside a single leaf are zero-copy views into the staged
 blob; only chunks spanning a leaf boundary materialize new bytes.
+
+Two cuts exist:
+
+- :func:`chunk_blob` - the byte-stream cut: leaf bytes concatenated and
+  sliced into fixed-size chunks (training states, dense serving caches);
+- :func:`chunk_pages` - the page cut for :class:`PagedBlob`\\ s, where the
+  blob's entries ARE the transfer units (the serving page table): one
+  chunk per page, chunk identity = the page key, so the layout signature
+  IS the page table and delta encoding matches by key instead of index.
 """
 from __future__ import annotations
 
@@ -75,6 +84,17 @@ class Chunk:
         return decode_delta(self)
 
 
+class PagedBlob(dict):
+    """A staged blob whose entries are the transfer units themselves.
+
+    The serving engine's page table stages to one of these: each entry is
+    an immutable host page (``{page_key: ndarray}``) that the engine never
+    mutates after handing it over, so staging/capture pass it through by
+    reference (no per-submit copy of sealed pages) and the chunk cut is
+    :func:`chunk_pages` - one chunk per page, keyed - instead of the
+    byte-stream cut."""
+
+
 @dataclass
 class ChunkedBlob:
     """The striped form of one staged blob."""
@@ -82,6 +102,10 @@ class ChunkedBlob:
     layout: Tuple[LeafSpec, ...]
     chunk_bytes: int
     chunks: List[Chunk] = field(default_factory=list)
+    #: page keys for a paged cut (one per chunk, == layout paths); None for
+    #: the byte-stream cut. Keys are the stable chunk identities the delta
+    #: encoder and the durable chain anchors match on.
+    keys: Optional[Tuple[str, ...]] = None
 
     @property
     def total_bytes(self) -> int:
@@ -97,8 +121,18 @@ class ChunkedBlob:
 
     def layout_signature(self) -> Tuple:
         """Delta encoding is only valid between identically-laid-out
-        submits (same leaves, same chunk size)."""
+        submits (same leaves, same chunk size). For a paged cut the layout
+        paths ARE the page keys - the signature is the page table."""
         return (self.chunk_bytes, self.layout)
+
+    def chunk_size(self, index: int) -> int:
+        """Expected raw byte size of chunk ``index``: the page's own size
+        for a paged cut (pages are whole leaves), else the byte-stream
+        slice (last chunk may be short)."""
+        if self.keys is not None:
+            return self.layout[index].nbytes
+        return min(self.chunk_bytes,
+                   self.total_bytes - index * self.chunk_bytes)
 
     def raw_chunks(self) -> List[np.ndarray]:
         return [c.raw() for c in self.chunks]
@@ -187,6 +221,31 @@ def chunk_blob(blob: Dict[str, np.ndarray], chunk_bytes: int) -> ChunkedBlob:
     if cur_n:
         cb.chunks.append(_seal(cur, len(cb.chunks)))
     return cb
+
+
+def chunk_pages(blob: Dict[str, np.ndarray]) -> ChunkedBlob:
+    """The page cut: one chunk per blob entry, keyed by its path.
+
+    No byte stream is formed - each page's bytes are the chunk payload
+    (zero-copy view), the layout IS the page table in sorted-key order,
+    and ``chunk_bytes`` is only the striping hint (the largest page,
+    4-aligned) used by :func:`chunk_count` callers. Identity by key means
+    a submit whose table gained or dropped pages still delta-encodes
+    against the surviving pages of the previous submit."""
+    layout: List[LeafSpec] = []
+    chunks: List[Chunk] = []
+    keys: List[str] = []
+    for i, path in enumerate(sorted(blob)):
+        arr = np.asarray(blob[path])
+        b = leaf_bytes(arr)
+        layout.append(LeafSpec(path, str(arr.dtype), tuple(arr.shape),
+                               b.nbytes))
+        chunks.append(Chunk(index=i, encoding="raw", payload=b))
+        keys.append(path)
+    max_b = max((s.nbytes for s in layout), default=4)
+    cbytes = max(4, max_b + ((-max_b) % 4))
+    return ChunkedBlob(layout=tuple(layout), chunk_bytes=cbytes,
+                       chunks=chunks, keys=tuple(keys))
 
 
 def _seal(pieces: List[np.ndarray], index: int) -> Chunk:

@@ -94,9 +94,10 @@ class DeltaEncoder:
         self.codec = codec
         self._sig = None
         self._ref: List[np.ndarray] = []
+        self._kref: Dict[str, np.ndarray] = {}
 
     def reset(self) -> None:
-        self._sig, self._ref = None, []
+        self._sig, self._ref, self._kref = None, [], {}
 
     def observe(self, cb: ChunkedBlob) -> None:
         """Update the reference WITHOUT encoding: a consumer that decided
@@ -105,11 +106,40 @@ class DeltaEncoder:
         compare + codec pass for a result it will discard is waste."""
         self._sig = cb.layout_signature()
         self._ref = [c.raw() for c in cb.chunks]
+        self._kref = dict(zip(cb.keys, self._ref)) if cb.keys else {}
+
+    def _encode_keyed(self, cb: ChunkedBlob) -> ChunkedBlob:
+        """The paged cut's delta: chunks match the previous submit BY KEY,
+        so a table that gained tail pages or dropped freed slots still
+        zero-encodes every surviving sealed page. Byte-equality (-> zero
+        chunk) needs no codec: pages are immutable once sealed, so with
+        codec "none" the steady-state submit ships only dirty tail pages."""
+        raws = [c.raw() for c in cb.chunks]
+        chunks: List[Chunk] = []
+        for i, cur in enumerate(raws):
+            ref = self._kref.get(cb.keys[i])
+            encoded = None
+            if ref is not None and ref.nbytes == cur.nbytes:
+                if np.array_equal(cur, ref):
+                    encoded = Chunk(index=i, encoding="zero", ref=ref)
+                    raws[i] = ref  # share forward: zero chains stay zero-copy
+                elif self.codec != "none" and cur.nbytes % 4 == 0:
+                    encoded = encode_delta(i, cur, ref, self.codec)
+            chunks.append(encoded if encoded is not None else cb.chunks[i])
+        out = ChunkedBlob(layout=cb.layout, chunk_bytes=cb.chunk_bytes,
+                          chunks=chunks, keys=cb.keys)
+        self._sig = cb.layout_signature()
+        self._ref = raws
+        self._kref = dict(zip(cb.keys, raws))
+        return out
 
     def encode(self, cb: ChunkedBlob) -> ChunkedBlob:
         """Delta-encode ``cb`` against the previous submit (a NEW blob:
         ``cb`` may be shared by other consumers via the plane's chunking
         memo); becomes the new reference either way."""
+        if cb.keys is not None:
+            return self._encode_keyed(cb)
+        self._kref = {}
         raws = [c.raw() for c in cb.chunks]
         sig = cb.layout_signature()
         if (

@@ -35,7 +35,14 @@ import jax
 import numpy as np
 
 from repro.dist.sharding import path_str
-from repro.xfer.chunking import ChunkedBlob, chunk_blob, chunk_count, size_for_chunks
+from repro.xfer.chunking import (
+    ChunkedBlob,
+    PagedBlob,
+    chunk_blob,
+    chunk_count,
+    chunk_pages,
+    size_for_chunks,
+)
 from repro.xfer.delta import DeltaEncoder
 
 PyTree = Any
@@ -53,7 +60,14 @@ def stage_tree(tree: PyTree, *, copy: bool = True) -> Dict[str, np.ndarray]:
     contract for programs that mutate state in place). ``copy=False``
     skips the ndarray copy for trees ALREADY privately owned (the async
     path stages a :func:`capture_tree` result - copying it again would
-    double the memcpy on the hot path)."""
+    double the memcpy on the hot path).
+
+    A :class:`PagedBlob` is already staged: its entries are sealed host
+    pages the producer never mutates, so the pass is a shallow rebind -
+    the whole point of the paged layout is that submits stop paying a
+    per-tick copy of the unchanged state."""
+    if isinstance(tree, PagedBlob):
+        return PagedBlob(tree)
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     return {
         path_str(kp): (
@@ -67,7 +81,11 @@ def stage_tree(tree: PyTree, *, copy: bool = True) -> Dict[str, np.ndarray]:
 def capture_tree(tree: PyTree) -> PyTree:
     """The cheap synchronous half of an async submit: copy the MUTABLE
     leaves (host ndarrays a program may overwrite in place) now; immutable
-    leaves (device arrays, scalars) cross to the stager by reference."""
+    leaves (device arrays, scalars) cross to the stager by reference.
+    Sealed pages in a :class:`PagedBlob` are immutable by contract and
+    cross by reference too."""
+    if isinstance(tree, PagedBlob):
+        return PagedBlob(tree)
     return jax.tree.map(
         lambda x: np.array(x) if isinstance(x, np.ndarray) else x, tree
     )
@@ -180,7 +198,19 @@ class TransferPlane:
         """Cut ``blob`` into stripes. ``min_chunks`` lets a consumer ask
         for at least its ring size, so every member holds a part even of a
         small state. Memoized on the blob identity: chunk-consuming stores
-        fed the same staged blob share one cut."""
+        fed the same staged blob share one cut. A :class:`PagedBlob` gets
+        the page cut - its pages ARE the chunks, whatever ``min_chunks``
+        (striping spreads them round-robin regardless of count)."""
+        if isinstance(blob, PagedBlob):
+            with self._memo_lock:
+                if self._memo is not None:
+                    mblob, _, mcb = self._memo
+                    if mblob is blob:
+                        return mcb
+            cb = chunk_pages(blob)
+            with self._memo_lock:
+                self._memo = (blob, cb.chunk_bytes, cb)
+            return cb
         total = sum(a.nbytes for a in blob.values())
         n = chunk_count(total, self.chunk_bytes, min_chunks)
         size = min(self.chunk_bytes, size_for_chunks(total, n))

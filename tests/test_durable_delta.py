@@ -270,10 +270,12 @@ def test_ladder_restores_from_delta_chain_with_detail(tmp_path):
 @pytest.mark.slow
 def test_serving_restore_from_durable_delta_chain_bit_identical():
     """The append-only KV cache is the regime on-disk delta chains target:
-    snapshot dirs past the first are delta (rows beyond the decode position
-    ship as zero chunks). An unmirrored slice loss must restore through the
-    chain - the only rung in this ladder is the delta-mode DurableStore -
-    and re-decode bit-identically to the failure-free run."""
+    snapshot dirs past the first are delta (pages fully below the decode
+    position ship as zero chunks - page_tokens=4 makes whole pages settle
+    between the 4-token cadence ticks). An unmirrored slice loss must
+    restore through the chain - the only rung in this ladder is the
+    delta-mode DurableStore - and re-decode bit-identically to the
+    failure-free run."""
     out = run_subprocess(
         """
         import json, os, tempfile
@@ -294,7 +296,8 @@ def test_serving_restore_from_durable_delta_chain_bit_identical():
             xfer=TransferPlane(chunk_bytes=4096),
         )
         b = ServeEngine(cfg, n_slices=4, model_shards=1, rdegree=0.0,
-                        max_len=64, snapshot_every=4, stores=stores)
+                        max_len=64, snapshot_every=4, stores=stores,
+                        page_tokens=4)
         tb = b.decode(12, failures={9: [2]})
         r = b.report
 

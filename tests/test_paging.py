@@ -1,0 +1,515 @@
+"""Paged decode state (repro.serving.paging): page math, table
+invariants, and end-to-end stream bit-identity against the dense oracle.
+
+The fast tests drive the :class:`PageTable` directly with a synthetic
+leaf geometry (append-only attention K/V, a windowed ring leaf, and a
+recurrent block leaf) and check the structural invariants the engine
+relies on: the slot->page bijection, shared-prefix refcount exactness,
+dirty/settled disjointness, and meta round-trips.
+
+The slow tests run the real engine in subprocesses: the paged layout must
+serve every client stream bitwise-identical to the dense (page_tokens=0)
+oracle across the kill/heal/failover matrix, heal warm-up must move only
+live pages, scrubbing must splice back only the poisoned page, and idle
+cadence ticks must skip the snapshot entirely.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import SRC, run_subprocess
+from repro.serving.gateway import validate_bounds
+from repro.serving.paging import (
+    CacheLeaf,
+    PageTable,
+    dirty_page_indices,
+    prefix_hash,
+)
+
+# synthetic geometry: two append-only attention leaves, one windowed
+# (ring) leaf, one recurrent block leaf without a token axis
+LEAVES = [
+    CacheLeaf(path="blk/attn/k", batch_axis=1, smax=64, ring=False),
+    CacheLeaf(path="blk/attn/v", batch_axis=1, smax=64, ring=False),
+    CacheLeaf(path="blk/win/k", batch_axis=1, smax=16, ring=True),
+    CacheLeaf(path="blk/ssm/state", batch_axis=1, smax=None, ring=False),
+]
+
+
+def mk_table(page: int = 8, prefix_share: bool = True) -> PageTable:
+    t = PageTable(page, prefix_share=prefix_share)
+    t.configure(LEAVES)
+    return t
+
+
+def gather(t: PageTable) -> None:
+    """Simulate the engine's snapshot gather: bind every dirty page."""
+    for e in list(t.slots.values()):
+        for r in t.dirty_refs(e):
+            t.pages[r.key] = np.zeros(1)
+    t.mark_gathered()
+
+
+# ---------------------------------------------------------------------------
+# page math
+# ---------------------------------------------------------------------------
+
+
+def test_dirty_pages_append_marks_only_tail():
+    # advancing 8 -> 9 in a 64-deep leaf touches only page 1 (P=8)
+    assert dirty_page_indices(8, 9, smax=64, page=8) == {1}
+    assert dirty_page_indices(0, 8, smax=64, page=8) == {0}
+    assert dirty_page_indices(7, 9, smax=64, page=8) == {0, 1}
+    assert dirty_page_indices(5, 5, smax=64, page=8) == set()
+    assert dirty_page_indices(9, 5, smax=64, page=8) == set()
+
+
+def test_dirty_pages_ring_wrap_marks_modular_window():
+    # ring of 16, pages of 8: writing rows 14,15,0,1 touches both pages
+    assert dirty_page_indices(14, 18, smax=16, page=8) == {0, 1}
+    # writes confined to the second half touch only page 1
+    assert dirty_page_indices(8, 12, smax=16, page=8) == {1}
+    # advancing a full ring (or more) dirties every page
+    assert dirty_page_indices(0, 20, smax=16, page=8) == {0, 1}
+    assert dirty_page_indices(37, 99, smax=16, page=8) == {0, 1}
+
+
+@settings(max_examples=150, deadline=None)
+@given(seed=st.integers(0, 10**9))
+def test_property_dirty_pages_equal_pages_of_written_rows(seed):
+    """Ground truth: simulate the ring writes row by row - the marked
+    page set must be EXACTLY the pages containing a written row (sound:
+    no written row escapes; tight: no clean page ships)."""
+    rng = np.random.default_rng(seed)
+    smax = int(rng.choice([8, 16, 32, 64]))
+    page = int(rng.choice([4, 8, 16]))
+    c0 = int(rng.integers(0, 100))
+    c1 = c0 + int(rng.integers(0, 150))
+    written = {t % smax for t in range(c0, c1)}
+    marked = dirty_page_indices(c0, c1, smax, page)
+    assert marked == {r // page for r in written}, (seed, c0, c1, smax, page)
+
+
+def test_prefix_hash_content_addresses_exactly_n_tokens():
+    assert prefix_hash([1, 2, 3, 4], 4) == prefix_hash([1, 2, 3, 4, 99], 4)
+    assert prefix_hash([1, 2, 3, 4], 4) != prefix_hash([1, 2, 3, 5], 4)
+    assert prefix_hash(np.asarray([7, 8]), 2) == prefix_hash([7, 8], 2)
+
+
+# ---------------------------------------------------------------------------
+# bounds validation (CLI wiring is exercised by the slow test below)
+# ---------------------------------------------------------------------------
+
+
+def test_page_table_rejects_bad_page_tokens():
+    for bad in (0, -8, 3, 100):
+        with pytest.raises(AssertionError):
+            PageTable(bad)
+    PageTable(1)
+    PageTable(128)
+
+
+def test_validate_bounds_page_tokens_edges():
+    validate_bounds(1, None, page_tokens=None)
+    validate_bounds(1, None, page_tokens=1)
+    validate_bounds(1, None, page_tokens=128)
+    # zero and negative are CLI-invalid (the dense baseline is the
+    # engine-API ServeEngine(page_tokens=0), not a CLI mode)
+    for bad in (0, -4, -1):
+        with pytest.raises(ValueError, match="--page-tokens"):
+            validate_bounds(1, None, page_tokens=bad)
+    for bad in (3, 100, 6):
+        with pytest.raises(ValueError, match="--page-tokens"):
+            validate_bounds(1, None, page_tokens=bad)
+
+
+# ---------------------------------------------------------------------------
+# table lifecycle: reset / sharing / remap / meta
+# ---------------------------------------------------------------------------
+
+
+def test_reset_drops_private_pages_and_bumps_uid():
+    t = mk_table(page=8)
+    e = t.ensure(0, 0)
+    e.count = 12
+    gather(t)
+    assert t.pages  # pages materialized
+    t.check_invariants()
+    uid0 = e.uid
+    t.reset([(0, 0)])
+    assert t.slots[(0, 0)].uid > uid0  # next occupant gets fresh keys
+    assert not t.pages  # the reset IS the page drop - no tree rebuild
+    assert t.slots[(0, 0)].count == 0
+    t.check_invariants()
+
+
+def test_shared_prefix_pages_refcounted_and_gced():
+    t = mk_table(page=4)
+    prompt = list(range(1, 10))  # 9 tokens -> shared pages {0, 1} at P=4
+    for lane in (0, 1):
+        e = t.ensure(0, lane)
+        t.note_prompt(0, lane, prompt)
+        e.count = 9
+    gather(t)
+    e0, e1 = t.slots[(0, 0)], t.slots[(0, 1)]
+    assert set(e0.shared) == {0, 1} and e0.shared == e1.shared
+    shared0 = {r.key for r in t.slot_pages(e0) if r.shared}
+    shared1 = {r.key for r in t.slot_pages(e1) if r.shared}
+    # both slots reference the SAME sealed page copies, one per non-ring
+    # time leaf per prompt page; the ring and block leaves never share
+    assert shared0 == shared1 and len(shared0) == 4
+    assert all(t.refs[k] == 2 for k in shared0)
+    # a twin admitting the same prompt gathers nothing for sealed pages
+    # the first slot already materialized
+    assert not any(r.shared for r in t.dirty_refs(e1))
+    t.check_invariants()
+    t.reset([(0, 1)])
+    assert all(t.refs[k] == 1 for k in shared0)
+    assert all(k in t.pages for k in shared0)  # still referenced
+    t.check_invariants()
+    t.reset([(0, 0)])
+    assert not t.refs and not t.pages  # last reference frees the bytes
+    t.check_invariants()
+
+
+def test_remap_preserves_uids_and_drops_dead_roles():
+    t = mk_table(page=4)
+    for role in (0, 1, 2):
+        e = t.ensure(role, 0)
+        e.count = 5
+    gather(t)
+    uids = {role: t.slots[(role, 0)].uid for role in (0, 1, 2)}
+    # role 1 died: new role 0 continues old 0, new role 1 continues old 2
+    t.remap([0, 2], lanes=1)
+    assert set(t.slots) == {(0, 0), (1, 0)}
+    assert t.slots[(0, 0)].uid == uids[0]
+    assert t.slots[(1, 0)].uid == uids[2]  # page keys survive renumbering
+    live = {r.key for e in t.slots.values() for r in t.slot_pages(e)}
+    assert all(k in live for k in t.pages), "dead role's pages must drop"
+    t.check_invariants()
+    t.invalidate()
+    assert not t.pages
+    for e in t.slots.values():
+        assert t.settled_refs(e) == []  # nothing is settled post-repack
+        assert t.dirty_refs(e)  # everything re-gathers from ground truth
+    t.check_invariants()
+
+
+def test_meta_roundtrip_restores_slots_and_sharing():
+    import json
+
+    t = mk_table(page=4)
+    t.note_prompt(1, 0, [1, 2, 3, 4, 5])
+    t.slots[(1, 0)].count = 7
+    t.ensure(0, 1).count = 3
+    gather(t)
+    t.mark_submitted()
+    meta = t.to_meta({(1, 0): 2, (0, 1): 1}, {(1, 0): 5}, n_rows=8)
+    meta = json.loads(json.dumps(meta))  # must survive the manifest
+    t2 = mk_table(page=4)
+    t2.load_meta(meta)
+    assert set(t2.slots) == set(t.slots)
+    for k, a in t.slots.items():
+        b = t2.slots[k]
+        assert (a.uid, a.count, a.prompt_len) == (b.uid, b.count, b.prompt_len)
+        assert a.shared == b.shared
+    assert t2.refs == t.refs
+    for e in t2.slots.values():
+        assert t2.settled_refs(e) == []  # restored marks are stale
+        if e.count:
+            assert t2.dirty_refs(e)  # the next snapshot re-gathers
+    t2.check_invariants()
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 10**9))
+def test_property_table_invariants_across_random_lifecycles(seed):
+    """Random admission / decode / gather / submit / repack / free
+    schedules: the slot->page bijection holds after every operation,
+    shared refcounts stay exact, no page bytes are orphaned, and a page
+    is never both settled and dirty."""
+    rng = np.random.default_rng(seed)
+    roles, lanes = 3, 2
+    t = mk_table(page=4)
+    prompts = [list(range(1, 6)), [7] * 9, [2, 3], list(range(20, 33))]
+    for _ in range(40):
+        op = int(rng.integers(0, 6))
+        slot = (int(rng.integers(0, roles)), int(rng.integers(0, lanes)))
+        if op == 0:  # admit: free the slot, pin a prompt, prefill
+            t.reset([slot])
+            p = prompts[int(rng.integers(0, len(prompts)))]
+            t.note_prompt(slot[0], slot[1], p)
+            t.slots[slot].count = len(p)
+        elif op == 1:  # decode a few tokens on every live slot
+            for e in t.slots.values():
+                if e.count:
+                    e.count += int(rng.integers(1, 4))
+        elif op == 2:  # snapshot gather (restore template / heal)
+            gather(t)
+        elif op == 3:  # cadence submit
+            gather(t)
+            t.mark_submitted()
+        elif op == 4:  # elastic repack: renumber roles, invalidate cache
+            keep = [int(x) for x in rng.permutation(roles)]
+            t.remap(keep, lanes)
+            t.invalidate()
+        else:  # free
+            t.reset([slot])
+        t.check_invariants()
+        for e in t.slots.values():
+            settled = {r.key for r in t.settled_refs(e)}
+            dirty = {r.key for r in t.dirty_refs(e) if not r.shared}
+            assert not (settled & dirty), (seed, settled & dirty)
+
+
+# ---------------------------------------------------------------------------
+# real-engine integration (subprocess, slow)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_paged_kill_heal_matrix_bit_identical_and_page_accounting():
+    """The acceptance matrix: paged (page_tokens=8) and dense
+    (page_tokens=0) gateways serve identical client streams with and
+    without a mid-stream kill + spare backfill; the paged heal warms the
+    backfilled rows by moving only live pages (strictly fewer bytes than
+    dense full rows); a same-prompt cohort shares its prompt page."""
+    out = run_subprocess(
+        """
+        import numpy as np
+        from repro.configs.registry import smoke_config
+        from repro.serving.engine import ServeEngine
+        from repro.serving.gateway import ServeGateway
+
+        cfg = smoke_config("qwen2.5-3b")
+        PROMPT = list(range(11, 19))  # 8 tokens: one full page at P=8
+
+        def mk(pt):
+            eng = ServeEngine(cfg, n_slices=3, model_shards=1, rdegree=0.0,
+                              spares=1, heal="eager", max_len=64,
+                              slot_granular=True, page_tokens=pt)
+            return ServeGateway(eng, max_queue=64)
+
+        def workload(gw):
+            rng = np.random.default_rng(0)
+            out = []
+            for i in range(12):
+                p = (np.asarray(PROMPT) if i % 3 == 0
+                     else rng.integers(1, 50, size=2 + i % 3))
+                out.append(gw.submit(p, max_new=4 + i % 5, at_step=i // 4))
+            return out
+
+        runs = {}
+        for pt in (0, 8):
+            for kill in (False, True):
+                gw = mk(pt); ss = workload(gw)
+                gw.serve(max_steps=10_000,
+                         failures={6: [1]} if kill else None)
+                assert all(s.done for s in ss), (pt, kill)
+                if pt:
+                    gw.engine.table.check_invariants()
+                runs[(pt, kill)] = (gw, [s.tokens for s in ss])
+
+        base = runs[(0, False)][1]
+        for key, (gw, toks) in runs.items():
+            assert toks == base, f"streams diverged from dense oracle: {key}"
+
+        # heal warm-up at page granularity: only live pages moved
+        gk = runs[(8, True)][0].engine
+        assert 0 < gk.heal_warm_bytes < gk.heal_warm_bytes_full, (
+            gk.heal_warm_bytes, gk.heal_warm_bytes_full)
+
+        # prefix sharing: a same-prompt cohort in flight references ONE
+        # sealed copy of the prompt page per leaf
+        gd = mk(8)
+        for _ in range(4):
+            gd.submit(np.asarray(PROMPT), max_new=6)
+        t, best = 0, 0.0
+        while gd.pending() and t < 200:
+            gd.run_step(t); t += 1
+            best = max(best, gd.summary().get("prefix_dedupe_ratio", 0.0))
+        assert best >= 2.0, best
+        gd.engine.table.check_invariants()
+        print("PAGED-MATRIX-OK", gk.heal_warm_bytes,
+              gk.heal_warm_bytes_full, best)
+        """,
+        devices=4,
+    )
+    assert "PAGED-MATRIX-OK" in out
+
+
+@pytest.mark.slow
+def test_property_paged_streams_match_dense_oracle_random_schedules():
+    """Property run over random admission x kill/heal/failover schedules
+    (mixed shared/unique prompts, random kill step and victim): every
+    paged stream - failure-free and killed - is bitwise equal to the
+    dense failure-free oracle, and the page table's invariants hold after
+    every serve."""
+    out = run_subprocess(
+        """
+        import numpy as np
+        from repro.configs.registry import smoke_config
+        from repro.serving.engine import ServeEngine
+        from repro.serving.gateway import ServeGateway
+
+        cfg = smoke_config("qwen2.5-3b")
+
+        def mk(pt):
+            eng = ServeEngine(cfg, n_slices=3, model_shards=1, rdegree=0.0,
+                              spares=1, heal="eager", max_len=64,
+                              slot_granular=True, page_tokens=pt)
+            return ServeGateway(eng, max_queue=64)
+
+        for seed in (1, 2, 3):
+            rng = np.random.default_rng(seed)
+            n_req = int(rng.integers(6, 11))
+            shared_prompt = rng.integers(1, 50, size=8)
+            reqs = []
+            for i in range(n_req):
+                p = (shared_prompt.copy() if rng.integers(0, 2)
+                     else rng.integers(1, 50, size=int(rng.integers(1, 6))))
+                reqs.append((p, int(rng.integers(2, 8)),
+                             int(rng.integers(0, 4))))
+            kill = {int(rng.integers(3, 10)): [int(rng.integers(0, 4))]}
+
+            def run(pt, failures=None):
+                gw = mk(pt)
+                ss = [gw.submit(p, max_new=m, at_step=a)
+                      for p, m, a in reqs]
+                gw.serve(max_steps=10_000, failures=failures)
+                assert all(s.done for s in ss), (seed, pt, failures)
+                if pt:
+                    gw.engine.table.check_invariants()
+                return ss
+
+            oracle = run(0)                       # dense, failure-free
+            s_ff = run(8)                         # paged, failure-free
+            s_kill = run(8, failures=kill)        # paged, random kill
+            for a, b, c in zip(oracle, s_ff, s_kill):
+                assert a.tokens == b.tokens == c.tokens, (seed, a.rid)
+                assert a.finish_reason == b.finish_reason == c.finish_reason
+        print("PAGED-PROPERTY-OK")
+        """,
+        devices=4,
+    )
+    assert "PAGED-PROPERTY-OK" in out
+
+
+@pytest.mark.slow
+def test_snapshot_skip_and_scrub_page_splice():
+    """Satellites 1 + 2 end to end: an idle cadence tick ships nothing
+    (snapshots_skipped accounting), a poisoned settled page is detected
+    by the per-page crc reference, confirmed by the 2-of-3 vote against
+    the mirror row, and spliced back ALONE through restore_partial -
+    bit-identical to the clean oracle; an identical corruption on BOTH
+    rows votes the reference the odd one out (transient, no repair)."""
+    out = run_subprocess(
+        """
+        import numpy as np, jax
+        from repro.configs.registry import smoke_config
+        from repro.serving.engine import ServeEngine
+        from repro.scrub import ScrubPlane
+        from repro.dist.sharding import path_str
+
+        cfg = smoke_config("qwen2.5-3b")
+
+        def mk(scrub=None):
+            return ServeEngine(cfg, n_slices=4, model_shards=1,
+                               rdegree=1.0, max_len=64, snapshot_every=4,
+                               page_tokens=4, scrub=scrub)
+
+        scrub = ScrubPlane()
+        eng = mk(scrub)
+        toks = eng.decode(8)
+        r = eng.report
+
+        # --- satellite 1: no-op cadence ticks skip the snapshot --------
+        eng.session._checkpoint(eng.pos)  # settle any residue
+        base = r.snapshots_skipped
+        assert eng.snapshot_dirty() is None  # clean -> nothing to ship
+        eng.session._checkpoint(eng.pos)
+        assert r.snapshots_skipped == base + 1, r.snapshots_skipped
+        blob, meta = eng.snapshot()  # the FULL template still materializes
+        assert len(blob) > 0
+        assert scrub.page_reference, "paged submits must record page crcs"
+
+        eng2 = mk()
+        toks2 = eng2.decode(8)
+        assert np.array_equal(toks, toks2)
+
+        # --- satellite 2: poison ONE settled page on the cmp row -------
+        leaf = next(l for l in eng.table.leaves if l.smax is not None)
+        e = next(iter(eng.table.slots.values()))
+        row = eng._slot_row(e.role, e.lane)
+        mrow = eng._mirror_row(e.role, e.lane)
+        assert mrow >= 0
+
+        def poison(rows):
+            def fn(kp, arr):
+                if path_str(kp) != leaf.path:
+                    return arr
+                idx = (slice(None),) * leaf.batch_axis
+                for rr in rows:
+                    arr = arr.at[idx + (rr, slice(0, 2))].add(1000.0)
+                return arr
+            return fn
+
+        eng.cache = jax.tree_util.tree_map_with_path(
+            poison([row]), eng.cache)
+        res = eng.scrub_kv()
+        assert res is not None and res["repaired"], res
+        assert len(res["corrupt"]) == 1, res  # ONLY the poisoned page
+        assert 0 < res["moved_bytes"] < res["total_bytes"], res
+        assert r.sdc_detected == 1 and r.sdc_repairs == 1
+
+        # splice restored the submitted bytes exactly: page blobs match
+        # the clean oracle bit for bit
+        b1, _ = eng.snapshot()
+        b2, _ = eng2.snapshot()
+        assert set(b1) == set(b2)
+        for k in b1:
+            assert np.array_equal(np.asarray(b1[k]), np.asarray(b2[k])), k
+
+        # --- identical corruption on BOTH rows: pair outvotes the
+        # reference -> transient, no repair ----------------------------
+        eng.session._checkpoint(eng.pos)  # re-settle post-restore marks
+        eng.cache = jax.tree_util.tree_map_with_path(
+            poison([row, mrow]), eng.cache)
+        res2 = eng.scrub_kv()
+        assert res2 is not None and not res2["repaired"], res2
+        assert res2["transient"] >= 1 and not res2["corrupt"], res2
+        print("SCRUB-PAGED-OK")
+        """,
+        devices=4,
+    )
+    assert "SCRUB-PAGED-OK" in out
+
+
+@pytest.mark.slow
+def test_serve_cli_page_tokens_rejected():
+    """--page-tokens rejects zero, negative, and non-power-of-two values
+    on both the gateway and lockstep paths."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    for extra, flags in [
+        ([], ["--page-tokens", "0"]),
+        ([], ["--page-tokens", "-4"]),
+        ([], ["--page-tokens", "100"]),
+        (["--gateway"], ["--page-tokens", "0"]),
+        (["--gateway"], ["--page-tokens", "3"]),
+        (["--gateway"], ["--page-tokens", "-1"]),
+    ]:
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve",
+             "--slices", "2", "--model-shards", "1"] + extra + flags,
+            capture_output=True, text=True, env=env, timeout=300,
+        )
+        assert proc.returncode != 0, (extra, flags)
+        assert "--page-tokens" in proc.stderr, (flags, proc.stderr[-500:])
